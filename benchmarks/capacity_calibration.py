@@ -1,0 +1,71 @@
+"""Consumer max-throughput calibration (paper Table VI + Fig. 10).
+
+The paper validates the SBSBP constant-capacity assumption by saturating a
+consumer under three disparate conditions (different totals, partition
+counts, destination-table counts) and observing a common throughput mode
+(~2.3 MB/s on their GKE consumer).  We reproduce the *procedure* against the
+simulated replica: pre-load the broker, let one replica drain at full
+throttle under each condition, and report the measured rate distribution.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.broker import Broker, SimClock, TopicPartition
+from repro.serving.replica import Replica, ReplicaConfig, Sink
+
+# (total_bytes, n_partitions, n_tables) -- paper Table VI
+CONDITIONS = [
+    ("test1", 648e6, 32, 1),
+    ("test2", 100e6, 116, 5),
+    ("test3", 678e6, 144, 5),
+]
+CAPACITY = 2.3e6   # configured replica capacity (bytes/s)
+
+
+def run_condition(total_bytes: float, n_partitions: int, n_tables: int,
+                  record_bytes: int = 4096) -> List[float]:
+    clock = SimClock()
+    broker = Broker(clock)
+    topics = [f"table{t}" for t in range(n_tables)]
+    per_topic = max(1, n_partitions // n_tables)
+    tps = []
+    for t in topics:
+        broker.create_topic(t, per_topic)
+        tps += [TopicPartition(t, i) for i in range(per_topic)]
+    # pre-load the backlog
+    per_tp = int(total_bytes / len(tps) / record_bytes)
+    for tp in tps:
+        for _ in range(per_tp):
+            broker.produce(tp, value=None, nbytes=record_bytes)
+    broker.create_topic("consumer.metadata", 2)
+    rep = Replica(0, broker, Sink(), ReplicaConfig(rate=CAPACITY,
+                                                   batch_bytes=1 << 21))
+    for tp in tps:
+        rep.handle.assign(tp)
+    rates = []
+    for _ in range(120):
+        consumed = rep.step(1.0)
+        clock.advance(1.0)
+        if consumed > 0:
+            rates.append(float(consumed))
+        if all(broker.lag("autoscaler", tp) == 0 for tp in tps):
+            break
+    return rates
+
+
+def run() -> Dict[str, Dict[str, float]]:
+    out = {}
+    for name, total, parts, tables in CONDITIONS:
+        rates = run_condition(total, parts, tables)
+        hist, edges = np.histogram(rates, bins=20)
+        mode = 0.5 * (edges[np.argmax(hist)] + edges[np.argmax(hist) + 1])
+        out[name] = {
+            "measured_mode_bytes_s": float(mode),
+            "mean_bytes_s": float(np.mean(rates)),
+            "configured_capacity": CAPACITY,
+            "mode_over_capacity": float(mode / CAPACITY),
+        }
+    return out

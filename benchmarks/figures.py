@@ -1,0 +1,79 @@
+"""Render the paper's Figs. 6-9 analogues as PNGs into benchmarks/figures/.
+
+  PYTHONPATH=src:. python benchmarks/figures.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+from benchmarks import paper_eval  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "figures")
+MOD = ("MWF", "MBF", "MWFP", "MBFP")
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    data = paper_eval.sweep()
+    cbs = paper_eval.cbs_table(data)
+    rs = paper_eval.rscore_table(data)
+    pareto = paper_eval.pareto_table(data)
+    deltas = sorted(cbs)
+
+    # Fig. 6/7 -- CBS vs delta
+    fig, ax = plt.subplots(figsize=(9, 5))
+    for a in paper_eval.ALGORITHMS:
+        style = "-o" if a in MOD else "--s"
+        ax.plot(deltas, [cbs[d][a] for d in deltas], style, label=a,
+                linewidth=2 if a in MOD else 1)
+    ax.set_xlabel("delta (max % speed variation per iteration)")
+    ax.set_ylabel("Cardinal Bin Score (Eq. 12)")
+    ax.set_title("CBS per algorithm (paper Figs. 6-7)")
+    ax.legend(ncol=4, fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(OUT, "fig6_cbs.png"), dpi=120)
+
+    # Fig. 8 -- E[R] vs delta
+    fig, ax = plt.subplots(figsize=(9, 5))
+    for a in paper_eval.ALGORITHMS:
+        style = "-o" if a in MOD else "--s"
+        ax.plot(deltas, [rs[d][a] for d in deltas], style, label=a,
+                linewidth=2 if a in MOD else 1)
+    ax.set_xlabel("delta")
+    ax.set_ylabel("Average Rscore (Eq. 13)")
+    ax.set_title("Rebalance cost per algorithm (paper Fig. 8)")
+    ax.legend(ncol=4, fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(OUT, "fig8_rscore.png"), dpi=120)
+
+    # Fig. 9 -- Pareto scatter per delta
+    ds = [d for d in deltas if d > 0]
+    fig, axes = plt.subplots(1, len(ds), figsize=(4 * len(ds), 4),
+                             sharey=False)
+    for ax, d in zip(axes, ds):
+        front, pts = pareto[d]
+        for a, (x, y) in pts.items():
+            on = a in front
+            ax.scatter(x, y, c="tab:red" if on else "tab:gray",
+                       s=60 if on else 25, zorder=3 if on else 2)
+            ax.annotate(a, (x, y), fontsize=7,
+                        xytext=(3, 3), textcoords="offset points")
+        ax.set_title(f"delta={d}")
+        ax.set_xlabel("CBS")
+    axes[0].set_ylabel("E[R]")
+    fig.suptitle("Pareto fronts: operational vs rebalance cost (paper Fig. 9)")
+    fig.tight_layout()
+    fig.savefig(os.path.join(OUT, "fig9_pareto.png"), dpi=120)
+    print(f"wrote {OUT}/fig6_cbs.png fig8_rscore.png fig9_pareto.png")
+
+
+if __name__ == "__main__":
+    main()

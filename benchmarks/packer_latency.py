@@ -1,0 +1,49 @@
+"""Packer latency: the paper's premise is that approximation algorithms run
+'within the necessary time requirements' (Sec. III).  Measures one
+reassignment decision -- python reference vs the jitted JAX packer -- across
+partition counts, plus the Pallas fit-select reduction."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binpack import CLASSICAL
+from repro.core.jaxpack import modified_any_fit_jax, pack_jax
+from repro.core.modified import MODIFIED
+
+
+def _time(fn, reps=5) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(sizes=(50, 200, 500)) -> Dict[str, float]:
+    out = {}
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        speeds = rng.uniform(0, 1, n)
+        prev = rng.integers(-1, max(1, n // 4), n).astype(np.int32)
+        sp = {j: float(w) for j, w in enumerate(speeds)}
+        prev_map = {j: int(c) for j, c in enumerate(prev) if c >= 0}
+
+        out[f"ref_BFD_n{n}_us"] = _time(
+            lambda: CLASSICAL["BFD"](sp, 1.0, prev=prev_map))
+        out[f"ref_MBFP_n{n}_us"] = _time(
+            lambda: MODIFIED["MBFP"](sp, 1.0, prev=prev_map))
+        sj = jnp.asarray(speeds, jnp.float32)
+        pj = jnp.asarray(prev)
+        out[f"jax_BFD_n{n}_us"] = _time(
+            lambda: jax.block_until_ready(
+                pack_jax(sj, pj, 1.0, strategy="best", decreasing=True)))
+        out[f"jax_MBFP_n{n}_us"] = _time(
+            lambda: jax.block_until_ready(
+                modified_any_fit_jax(sj, pj, 1.0, fit="best",
+                                     sort_key="max_partition")))
+    return out

@@ -1,0 +1,67 @@
+"""Shared evaluation sweep behind the paper's Figs. 6-9: all 12 algorithms
+over the six delta-streams (Eq. 11), via the jitted whole-stream scan."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jaxpack import evaluate_stream_jax
+from repro.core.metrics import pareto_front
+from repro.core.streams import PAPER_DELTAS, generate_stream
+
+ALGORITHMS = ("NF", "NFD", "FF", "FFD", "BF", "BFD", "WF", "WFD",
+              "MWF", "MBF", "MWFP", "MBFP")
+N_PARTITIONS = 50
+CAPACITY = 1.0
+
+
+@functools.lru_cache(maxsize=1)
+def sweep(n_partitions: int = N_PARTITIONS, n_measurements: int = 500,
+          seed: int = 0) -> Dict:
+    """Returns {delta: {algo: (bins i32[N], rscores f32[N])}} + timings."""
+    out: Dict = {"deltas": {}, "seconds": {}}
+    for i, delta in enumerate(PAPER_DELTAS):
+        stream = generate_stream(n_partitions, n_measurements, delta,
+                                 CAPACITY, seed=seed + i)
+        stream_j = jnp.asarray(stream, jnp.float32)
+        per_algo = {}
+        for algo in ALGORITHMS:
+            t0 = time.perf_counter()
+            bins, rs = evaluate_stream_jax(stream_j, CAPACITY, algorithm=algo)
+            bins = np.asarray(bins)
+            rs = np.asarray(rs)
+            out["seconds"][(delta, algo)] = time.perf_counter() - t0
+            per_algo[algo] = (bins, rs)
+        out["deltas"][delta] = per_algo
+    return out
+
+
+def cbs_table(data: Dict) -> Dict[float, Dict[str, float]]:
+    """Eq. 12 per delta."""
+    table = {}
+    for delta, per_algo in data["deltas"].items():
+        z = np.stack([per_algo[a][0] for a in ALGORITHMS])  # (A, N)
+        zmin = np.maximum(z.min(axis=0), 1)
+        cbs = ((z - zmin) / zmin).mean(axis=1)
+        table[delta] = dict(zip(ALGORITHMS, cbs.tolist()))
+    return table
+
+
+def rscore_table(data: Dict) -> Dict[float, Dict[str, float]]:
+    """Eq. 13 per delta."""
+    return {delta: {a: float(per_algo[a][1].mean()) for a in ALGORITHMS}
+            for delta, per_algo in data["deltas"].items()}
+
+
+def pareto_table(data: Dict) -> Dict[float, Tuple[list, dict]]:
+    cbs = cbs_table(data)
+    er = rscore_table(data)
+    out = {}
+    for delta in cbs:
+        pts = {a: (cbs[delta][a], er[delta][a]) for a in ALGORITHMS}
+        out[delta] = (pareto_front(pts), pts)
+    return out

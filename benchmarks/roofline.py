@@ -1,0 +1,110 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.jsonl and renders, per (arch x shape x mesh):
+the three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS,
+and HBM fit.  Pure post-processing -- no device work.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.jsonl")
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("rules", "baseline"))
+            seen[key] = r  # last write wins (reruns)
+    return list(seen.values())
+
+
+def table(rows: List[Dict], mesh: str = "16x16",
+          rules: str = "baseline") -> List[Dict]:
+    out = []
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("rules", "baseline") != rules:
+            continue
+        if "skipped" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "skipped": r["skipped"]})
+            continue
+        if "error" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "error": r["error"][:120]})
+            continue
+        rl = r["roofline"]
+        t = {
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": rl["t_compute_s"],
+            "t_memory_s": rl["t_memory_s"],
+            "t_collective_s": rl["t_collective_s"],
+            "bottleneck": rl["bottleneck"],
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "live_gib": r["memory"].get("live_bytes_per_device", 0) / 2 ** 30,
+            "fits_hbm": r["memory"].get("fits_hbm"),
+            "compile_s": r.get("compile_s"),
+        }
+        dom = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+        t["roofline_fraction"] = (t["t_compute_s"] / dom) if dom > 0 else None
+        out.append(t)
+    out.sort(key=lambda x: (x["arch"], x["shape"]))
+    return out
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>10s} {'t_mem':>10s} "
+           f"{'t_coll':>10s} {'bound':>10s} {'MF/HLO':>7s} {'liveGiB':>8s} "
+           f"{'fit':>4s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for t in rows:
+        if "skipped" in t:
+            lines.append(f"{t['arch']:24s} {t['shape']:12s} "
+                         f"{t['skipped']}")
+            continue
+        if "error" in t:
+            lines.append(f"{t['arch']:24s} {t['shape']:12s} ERROR {t['error']}")
+            continue
+        lines.append(
+            f"{t['arch']:24s} {t['shape']:12s} {t['t_compute_s']:10.3e} "
+            f"{t['t_memory_s']:10.3e} {t['t_collective_s']:10.3e} "
+            f"{t['bottleneck']:>10s} "
+            f"{(t['useful_flops_ratio'] or 0):7.3f} {t['live_gib']:8.2f} "
+            f"{'Y' if t['fits_hbm'] else 'N':>4s} "
+            f"{100 * (t['roofline_fraction'] or 0):6.1f}%")
+    return "\n".join(lines)
+
+
+def run(path: str = DEFAULT_PATH) -> Dict[str, float]:
+    rows = load(path)
+    out: Dict[str, float] = {}
+    for mesh in ("16x16", "2x16x16"):
+        tab = table(rows, mesh=mesh)
+        ok = [t for t in tab if "skipped" not in t and "error" not in t]
+        if not ok:
+            continue
+        out[f"{mesh}_cells_ok"] = len(ok)
+        out[f"{mesh}_cells_err"] = len([t for t in tab if "error" in t])
+        fracs = [t["roofline_fraction"] for t in ok if t["roofline_fraction"]]
+        if fracs:
+            out[f"{mesh}_mean_roofline_frac"] = sum(fracs) / len(fracs)
+    return out
+
+
+if __name__ == "__main__":
+    rows = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n=== mesh {mesh} ===")
+        print(render(table(rows, mesh=mesh)))

@@ -1,0 +1,53 @@
+"""Benchmark driver: one section per paper table/figure, printing
+``name,us_per_call,derived`` CSV rows (us_per_call = evaluation wall time
+where meaningful, else 0; derived = the quantity the paper reports).
+
+  fig6_cbs_*          Cardinal Bin Score per algorithm/delta   (Fig. 6/7)
+  fig8_rscore_*       Average Rscore per algorithm/delta       (Fig. 8)
+  fig9_pareto_*       Pareto-front membership per delta        (Fig. 9)
+  tab6_capacity_*     consumer max-throughput calibration      (Table VI/Fig. 10)
+  packer_latency_*    reassignment-decision latency            (Sec. III premise)
+  roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    from benchmarks import paper_eval
+    data = paper_eval.sweep()
+    cbs = paper_eval.cbs_table(data)
+    for delta, per in sorted(cbs.items()):
+        for algo, val in per.items():
+            us = data["seconds"][(delta, algo)] * 1e6
+            print(f"fig6_cbs_d{delta}_{algo},{us:.1f},{val:.6f}")
+    rs = paper_eval.rscore_table(data)
+    for delta, per in sorted(rs.items()):
+        for algo, val in per.items():
+            print(f"fig8_rscore_d{delta}_{algo},0,{val:.6f}")
+    pareto = paper_eval.pareto_table(data)
+    for delta, (front, pts) in sorted(pareto.items()):
+        for algo in paper_eval.ALGORITHMS:
+            print(f"fig9_pareto_d{delta}_{algo},0,{int(algo in front)}")
+
+    from benchmarks import capacity_calibration
+    for name, res in capacity_calibration.run().items():
+        print(f"tab6_capacity_{name}_mode_bytes_s,0,"
+              f"{res['measured_mode_bytes_s']:.0f}")
+        print(f"tab6_capacity_{name}_mode_over_capacity,0,"
+              f"{res['mode_over_capacity']:.4f}")
+
+    from benchmarks import packer_latency
+    for name, us in packer_latency.run().items():
+        print(f"packer_latency_{name},{us:.1f},0")
+
+    from benchmarks import roofline
+    for name, val in roofline.run().items():
+        print(f"roofline_{name},0,{val:.4f}")
+
+
+if __name__ == "__main__":
+    main()

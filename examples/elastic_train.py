@@ -1,0 +1,63 @@
+"""Elastic training with preemption recovery.
+
+Trains a small LM end to end (data pipeline -> jitted fwd/bwd/AdamW ->
+checkpoints), kills the run mid-flight, restarts from the checkpoint
+(including the data-pipeline cursor), and verifies the loss keeps
+descending.  On CPU the default config is a ~2M-param model so a few hundred
+steps complete in minutes; pass ``--full`` for the ~100M-param config used
+on real hardware (same code path).
+
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+from repro.models import ArchConfig
+from repro.launch.train import train
+
+TINY = ArchConfig(
+    name="elastic-demo-2m", family="dense",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=384, vocab_size=2048, remat=False,
+    dtype="float32", param_dtype="float32",
+)
+
+FULL_100M = ArchConfig(
+    name="elastic-demo-100m", family="dense",
+    n_layers=12, d_model=640, n_heads=10, n_kv_heads=5,
+    d_ff=2560, vocab_size=32000,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~100M-param config")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    cfg = FULL_100M if args.full else TINY
+    batch, seq = (8, 256) if args.full else (8, 64)
+
+    ckpt = tempfile.mkdtemp(prefix="elastic_train_")
+    try:
+        print(f"=== phase 1: train {cfg.name}, preempted at step "
+              f"{args.steps // 2} ===")
+        out1 = train(cfg, steps=args.steps, batch=batch, seq=seq,
+                     ckpt_dir=ckpt, save_every=args.steps // 4,
+                     die_at_step=args.steps // 2)
+        print(f"=== phase 2: restart from checkpoint, finish to "
+              f"{args.steps} ===")
+        out2 = train(cfg, steps=args.steps, batch=batch, seq=seq,
+                     ckpt_dir=ckpt, save_every=args.steps // 4)
+        l0 = out1["losses"][0]
+        l1 = out2["losses"][-1]
+        print(f"\nloss {l0:.3f} -> {l1:.3f} across the preemption boundary")
+        assert l1 < l0, "loss did not improve across restart"
+        print("elastic restart OK")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

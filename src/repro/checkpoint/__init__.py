@@ -1,0 +1,12 @@
+"""Sharded checkpointing: msgpack manifest + zstd-compressed per-leaf blobs,
+atomic step directories, and elastic restore (load onto a different mesh /
+shardings than the save used)."""
+from .store import (CheckpointManager, latest_step, restore_checkpoint,
+                    save_checkpoint)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

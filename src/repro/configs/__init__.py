@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture, each
+exporting ``FULL`` (the exact published config) and ``SMOKE`` (a reduced
+same-family config for CPU tests).  ``get(name)`` / ``list_archs()`` are the
+public API; the launcher selects with ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models import ArchConfig
+
+_ARCHS = [
+    "qwen2_vl_72b",
+    "llama4_scout_17b_a16e",
+    "qwen2_moe_a2_7b",
+    "granite_3_8b",
+    "deepseek_67b",
+    "olmo_1b",
+    "qwen3_8b",
+    "jamba_v0_1_52b",
+    "rwkv6_3b",
+    "whisper_large_v3",
+]
+
+ARCH_IDS = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "granite-3-8b": "granite_3_8b",
+    "deepseek-67b": "deepseek_67b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-8b": "qwen3_8b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def _module(name: str):
+    mod = ARCH_IDS.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str, smoke: bool = False) -> ArchConfig:
+    m = _module(name)
+    return m.SMOKE if smoke else m.FULL
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

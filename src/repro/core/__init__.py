@@ -1,0 +1,51 @@
+"""Core contribution of the paper: variable-item-size bin packing with
+rebalance cost (Rscore), the Modified Any Fit family, and the
+monitor/controller control plane.
+"""
+from .assignment import (
+    ConsumerId,
+    PackResult,
+    PartitionId,
+    capacity_lower_bound,
+    group_view,
+    rebalanced_partitions,
+)
+from .binpack import CLASSICAL, Bins, pack
+from .metrics import (
+    StreamRun,
+    average_rscores,
+    cardinal_bin_score,
+    evaluate_deltas,
+    pareto_front,
+    run_stream,
+)
+from .modified import ALL_ALGORITHMS, MODIFIED, modified_any_fit
+from .rscore import recovery_iterations, rscore, rscore_of_set
+from .streams import PAPER_DELTAS, generate_stream, paper_streams
+
+__all__ = [
+    "ConsumerId",
+    "PackResult",
+    "PartitionId",
+    "capacity_lower_bound",
+    "group_view",
+    "rebalanced_partitions",
+    "CLASSICAL",
+    "Bins",
+    "pack",
+    "StreamRun",
+    "average_rscores",
+    "cardinal_bin_score",
+    "evaluate_deltas",
+    "pareto_front",
+    "run_stream",
+    "ALL_ALGORITHMS",
+    "MODIFIED",
+    "modified_any_fit",
+    "recovery_iterations",
+    "rscore",
+    "rscore_of_set",
+    "PAPER_DELTAS",
+    "generate_stream",
+    "paper_streams",
+]

@@ -1,0 +1,325 @@
+"""JAX implementations of the paper's packing algorithms.
+
+Pure ``jax.lax`` control flow (scan over items, masked argmin/argmax over
+bins), so a whole 500-iteration stream evaluation jit-compiles into a single
+XLA program and the packer can run *inside* the controller's jitted decision
+step on device.  Semantics (including tie-breaking and the Sec. IV-C sticky
+naming rule) match ``binpack.py`` / ``modified.py`` bit-for-bit; the property
+tests in ``tests/test_jaxpack.py`` enforce exact agreement.
+
+Conventions
+-----------
+* ``speeds``: f32[n] item sizes.
+* ``prev``:   i32[n] previous bin name per item, ``-1`` = unassigned.
+* bin *names* are ints in ``[0, 2n+1)``; ``-1`` never names a bin.
+* returns ``PackedJax(bin_of: i32[n], loads: f32[M], names: i32[M], n_bins)``
+  where slot ``s < n_bins`` holds ``loads[s]`` and is named ``names[s]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedJax:
+    bin_of: jax.Array   # i32[n]  bin name per item
+    loads: jax.Array    # f32[M]  load per creation slot
+    names: jax.Array    # i32[M]  name per creation slot
+    n_bins: jax.Array   # i32[]   number of created bins
+
+
+def _select_slot(loads, k, w, capacity, strategy: str):
+    """Masked fit-strategy selection over created slots [0, k). Returns
+    (slot, found)."""
+    m = loads.shape[0]
+    created = jnp.arange(m) < k
+    fits = created & (loads + w <= capacity)
+    if strategy == "next":
+        last = jnp.maximum(k - 1, 0)
+        ok = (k > 0) & fits[last]
+        return last, ok
+    if strategy == "first":
+        return jnp.argmax(fits), fits.any()
+    if strategy == "best":    # tightest fit = max load among fitting, first on tie
+        score = jnp.where(fits, loads, -jnp.inf)
+        return jnp.argmax(score), fits.any()
+    if strategy == "worst":   # most slack = min load among fitting, first on tie
+        score = jnp.where(fits, loads, jnp.inf)
+        return jnp.argmin(score), fits.any()
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _fresh_name(used, prev_name):
+    """Sec. IV-C naming: the item's previous bin if still unused, else the
+    lowest unused name."""
+    lowest = jnp.argmin(used)                     # first False
+    sticky_ok = (prev_name >= 0) & ~used[jnp.clip(prev_name, 0)]
+    return jnp.where(sticky_ok, prev_name, lowest)
+
+
+def _place_or_create(state, j, w, prev_name, capacity, strategy: str, sticky: bool):
+    """Any-fit insert of item ``j``: selected open bin, else a new bin."""
+    loads, names, used, k, bin_of = state
+    slot, found = _select_slot(loads, k, w, capacity, strategy)
+    name_new = _fresh_name(used, prev_name if sticky else jnp.int32(NEG))
+    slot = jnp.where(found, slot, k)
+    name = jnp.where(found, names[slot], name_new)
+    loads = loads.at[slot].add(w)
+    names = names.at[slot].set(name)
+    used = used.at[name].set(True)
+    k = jnp.where(found, k, k + 1)
+    bin_of = bin_of.at[j].set(name)
+    return loads, names, used, k, bin_of
+
+
+# ---------------------------------------------------------------------------
+# classical algorithms (NF/FF/BF/WF and their Decreasing variants)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("strategy", "decreasing", "sticky"))
+def pack_jax(
+    speeds: jax.Array,
+    prev: jax.Array,
+    capacity,
+    *,
+    strategy: str = "first",
+    decreasing: bool = False,
+    sticky: bool = True,
+) -> PackedJax:
+    n = speeds.shape[0]
+    m = n + 1
+    u = 2 * n + 2                  # name universe
+    speeds = speeds.astype(jnp.float32)
+    prev = prev.astype(jnp.int32)
+    capacity = jnp.float32(capacity)
+
+    if decreasing:
+        # stable non-increasing sort: (-speed, original index)
+        order = jnp.lexsort((jnp.arange(n), -speeds))
+    else:
+        order = jnp.arange(n)
+
+    def body(state, j):
+        w = speeds[j]
+        state = _place_or_create(state, j, w, prev[j], capacity, strategy, sticky)
+        return state, None
+
+    init = (
+        jnp.zeros(m, jnp.float32),
+        jnp.full(m, NEG, jnp.int32),
+        jnp.zeros(u, bool),
+        jnp.int32(0),
+        jnp.full(n, NEG, jnp.int32),
+    )
+    (loads, names, used, k, bin_of), _ = lax.scan(body, init, order)
+    return PackedJax(bin_of=bin_of, loads=loads, names=names, n_bins=k)
+
+
+# ---------------------------------------------------------------------------
+# Modified Any Fit (Algorithm 1) -- MWF / MBF / MWFP / MBFP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("fit", "sort_key"))
+def modified_any_fit_jax(
+    speeds: jax.Array,
+    prev: jax.Array,
+    capacity,
+    *,
+    fit: str = "best",
+    sort_key: str = "cumulative",
+) -> PackedJax:
+    """Algorithm 1 as a single lax.scan over a 2n-entry flattened schedule.
+
+    Each item appears twice: once in its consumer's phase-1 slot (smallest ->
+    biggest, try open bins only) and once in phase-2 (biggest -> smallest,
+    own-bin insert).  Consumers are visited in non-increasing key order and
+    their two phases are contiguous, reproducing the per-consumer interleave
+    of the pseudocode.  Leftovers are packed by a final decreasing any-fit
+    scan with sticky bin naming.
+    """
+    if fit not in ("best", "worst"):
+        raise ValueError(fit)
+    n = speeds.shape[0]
+    m = 2 * n + 1                   # phase-2 creates <= n bins, final <= n
+    u = 2 * n + 2                   # name universe (names provably <= 2n)
+    s = u                           # consumer-segment universe: prev names <= 2n
+    speeds = speeds.astype(jnp.float32)
+    prev = prev.astype(jnp.int32)
+    capacity = jnp.float32(capacity)
+    pid = jnp.arange(n)
+    assigned = prev >= 0
+    cseg = jnp.where(assigned, prev, s - 1)   # s-1 = dummy for unassigned
+
+    # consumer sort keys (non-increasing; tie -> lower consumer id first)
+    zero = jnp.zeros(s, jnp.float32)
+    cum = zero.at[cseg].add(speeds)
+    mx = zero.at[cseg].max(speeds)
+    key = cum if sort_key == "cumulative" else (
+        mx if sort_key == "max_partition" else None)
+    if key is None:
+        raise ValueError(sort_key)
+    has = jnp.zeros(s, bool).at[cseg].set(True)
+    key = jnp.where(has, key, -jnp.inf)
+    crank_order = jnp.lexsort((jnp.arange(s), -key))          # rank -> consumer
+    crank = jnp.zeros(s, jnp.int32).at[crank_order].set(jnp.arange(s, dtype=jnp.int32))
+    item_rank = crank[cseg]                                    # i32[n]
+
+    # phase-1 within-consumer order: speed asc, pid desc  (reverse of the
+    # decreasing list, traversed back-to-front as in lines 6-13)
+    p1 = jnp.lexsort((-pid, speeds, item_rank))
+    # phase-2 within-consumer order: speed desc, pid asc (lines 18-24)
+    p2 = jnp.lexsort((pid, -speeds, item_rank))
+    # interleave: for each consumer, all its phase-1 entries then phase-2.
+    seq_items = jnp.concatenate([p1, p2])
+    seq_phase = jnp.concatenate([jnp.zeros(n, jnp.int32), jnp.ones(n, jnp.int32)])
+    seq_pos = jnp.concatenate([jnp.arange(n), jnp.arange(n)])
+    seq_rank = item_rank[seq_items]
+    entry_order = jnp.lexsort((seq_pos, seq_phase, seq_rank))
+    seq_items = seq_items[entry_order]
+    seq_phase = seq_phase[entry_order]
+
+    def body(state, ent):
+        (loads, names, used, k, bin_of, placed, to_u, u_order,
+         fail1, own_slot, own_fail) = state
+        j, phase, entry_idx = ent
+        w = speeds[j]
+        c = cseg[j]
+        skip = placed[j] | ~assigned[j]
+
+        def phase1(args):
+            (loads, names, used, k, bin_of, placed, to_u, u_order,
+             fail1, own_slot, own_fail, entry_idx) = args
+            slot, found = _select_slot(loads, k, w, capacity, fit)
+            found = found & ~fail1[c]
+            loads = jnp.where(found, loads.at[slot].add(w), loads)
+            bin_of = jnp.where(found, bin_of.at[j].set(names[slot]), bin_of)
+            placed = placed.at[j].set(placed[j] | found)
+            fail1 = fail1.at[c].set(fail1[c] | ~found)
+            return (loads, names, used, k, bin_of, placed, to_u, u_order,
+                    fail1, own_slot, own_fail, entry_idx)
+
+        def phase2(args):
+            (loads, names, used, k, bin_of, placed, to_u, u_order,
+             fail1, own_slot, own_fail, entry_idx) = args
+            # create the consumer's own bin (named c) on its first
+            # still-unplaced item (pset nonempty <=> some phase-1 failure)
+            need_create = own_slot[c] < 0
+            slot_new = k
+            names = jnp.where(need_create, names.at[slot_new].set(c), names)
+            used = jnp.where(need_create, used.at[c].set(True), used)
+            own_slot = jnp.where(need_create, own_slot.at[c].set(slot_new), own_slot)
+            k = jnp.where(need_create, k + 1, k)
+            own = own_slot[c]
+            # oversized exception: an item with w > C may hold its own
+            # empty bin (matches modified.py; see comment there)
+            fits = ((loads[own] + w <= capacity) |
+                    ((loads[own] == 0.0) & (w > capacity))) & ~own_fail[c]
+            loads = jnp.where(fits, loads.at[own].add(w), loads)
+            bin_of = jnp.where(fits, bin_of.at[j].set(c), bin_of)
+            placed = placed.at[j].set(placed[j] | fits)
+            own_fail = own_fail.at[c].set(own_fail[c] | ~fits)
+            deferred = ~fits
+            to_u = to_u.at[j].set(to_u[j] | deferred)
+            u_order = jnp.where(deferred, u_order.at[j].set(n + entry_idx), u_order)
+            return (loads, names, used, k, bin_of, placed, to_u, u_order,
+                    fail1, own_slot, own_fail, entry_idx)
+
+        args = (loads, names, used, k, bin_of, placed, to_u, u_order,
+                fail1, own_slot, own_fail, entry_idx)
+        args = lax.cond(skip, lambda a: a,
+                        lambda a: lax.cond(phase == 0, phase1, phase2, a), args)
+        (loads, names, used, k, bin_of, placed, to_u, u_order,
+         fail1, own_slot, own_fail, _) = args
+        return (loads, names, used, k, bin_of, placed, to_u, u_order,
+                fail1, own_slot, own_fail), None
+
+    init = (
+        jnp.zeros(m, jnp.float32),            # loads
+        jnp.full(m, NEG, jnp.int32),          # names
+        jnp.zeros(u, bool),                   # used names
+        jnp.int32(0),                         # k
+        jnp.full(n, NEG, jnp.int32),          # bin_of
+        jnp.zeros(n, bool),                   # placed
+        ~assigned,                            # to_u (initially: unassigned items)
+        jnp.where(assigned, 3 * n, pid).astype(jnp.int32),  # u_order (pid for initial U)
+        jnp.zeros(s, bool),                   # fail1 per consumer
+        jnp.full(s, NEG, jnp.int32),          # own_slot per consumer
+        jnp.zeros(s, bool),                   # own_fail per consumer
+    )
+    ents = jnp.stack([seq_items, seq_phase, jnp.arange(2 * n, dtype=jnp.int32)], axis=1)
+    state, _ = lax.scan(body, init, ents)
+    (loads, names, used, k, bin_of, placed, to_u, u_order, *_rest) = state
+
+    # final stage (lines 27-29): decreasing any-fit over U with sticky naming
+    final_order = jnp.lexsort((u_order, -speeds))
+
+    def fbody(state, j):
+        loads, names, used, k, bin_of = state
+        active = to_u[j]
+
+        def do(args):
+            return _place_or_create(args, j, speeds[j], prev[j], capacity, fit, True)
+
+        state = lax.cond(active, do, lambda a: a, (loads, names, used, k, bin_of))
+        return state, None
+
+    (loads, names, used, k, bin_of), _ = lax.scan(
+        fbody, (loads, names, used, k, bin_of), final_order)
+    return PackedJax(bin_of=bin_of, loads=loads, names=names, n_bins=k)
+
+
+# ---------------------------------------------------------------------------
+# whole-stream evaluation (bins + Rscore per iteration) in one jitted scan
+# ---------------------------------------------------------------------------
+
+def _pack_dispatch(name: str):
+    name = name.upper()
+    classical = {
+        "NF": ("next", False), "NFD": ("next", True),
+        "FF": ("first", False), "FFD": ("first", True),
+        "BF": ("best", False), "BFD": ("best", True),
+        "WF": ("worst", False), "WFD": ("worst", True),
+    }
+    modified = {
+        "MWF": ("worst", "cumulative"), "MBF": ("best", "cumulative"),
+        "MWFP": ("worst", "max_partition"), "MBFP": ("best", "max_partition"),
+    }
+    if name in classical:
+        strategy, dec = classical[name]
+        return lambda s, p, c: pack_jax(s, p, c, strategy=strategy, decreasing=dec)
+    if name in modified:
+        fit, key = modified[name]
+        return lambda s, p, c: modified_any_fit_jax(s, p, c, fit=fit, sort_key=key)
+    raise ValueError(f"unknown algorithm {name!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("algorithm",))
+def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Run one algorithm over an (N, P) stream.
+
+    Returns (bins_per_iter i32[N], rscore_per_iter f32[N]).  The previous
+    iteration's assignment feeds the next, as in the controller loop.
+    """
+    packer = _pack_dispatch(algorithm)
+    n = stream.shape[1]
+    capacity = jnp.float32(capacity)
+
+    def step(prev, speeds):
+        res = packer(speeds, prev, capacity)
+        moved = (prev >= 0) & (res.bin_of != prev)
+        r = jnp.sum(jnp.where(moved, speeds, 0.0)) / capacity
+        return res.bin_of, (res.n_bins, r)
+
+    _, (bins, rs) = lax.scan(step, jnp.full(n, NEG, jnp.int32),
+                             stream.astype(jnp.float32))
+    return bins, rs

@@ -1,0 +1,42 @@
+"""Rscore -- the paper's rebalance-cost metric (Eq. 10).
+
+    R_i = (1/C) * sum_{p in P_i} s(p)
+
+where P_i is the set of partitions rebalanced in iteration i and s(p) the
+partition's current write speed.  Units: consumer-iterations per second of
+backlog accumulation while the hand-off is in flight; multiplied by the
+wall-clock rebalance duration it bounds the number of full-throttle consumer
+iterations needed to drain the backlog (paper Sec. IV-A).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Set
+
+from .assignment import ConsumerId, PartitionId, rebalanced_partitions
+
+
+def rscore(
+    prev: Mapping[PartitionId, ConsumerId],
+    new: Mapping[PartitionId, ConsumerId],
+    speeds: Mapping[PartitionId, float],
+    capacity: float,
+) -> float:
+    moved = rebalanced_partitions(prev, new)
+    return rscore_of_set(moved, speeds, capacity)
+
+
+def rscore_of_set(
+    moved: Set[PartitionId],
+    speeds: Mapping[PartitionId, float],
+    capacity: float,
+) -> float:
+    if capacity <= 0:
+        raise ValueError("capacity must be positive")
+    return float(sum(speeds.get(p, 0.0) for p in moved)) / float(capacity)
+
+
+def recovery_iterations(r: float, rebalance_seconds: float) -> float:
+    """Max consumer iterations to recover the backlog accumulated while
+    rebalancing (Sec. IV-A: 'the combination of the time it took to rebalance
+    ... and the Rscore')."""
+    return r * rebalance_seconds

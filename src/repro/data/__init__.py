@@ -1,0 +1,12 @@
+"""Training data pipeline.
+
+Shards (synthetic deterministic token streams standing in for files) are
+assigned to loader workers by the same bin-packing autoscaler that drives
+serving: shard throughput (bytes/s measured by the monitor abstraction) are
+the item sizes, loader ingest capacity is the bin size.  The controller
+re-packs when shard rates drift -- the paper's technique applied to the
+training input path.
+"""
+from .pipeline import LoaderPool, ShardSpec, SyntheticShard, TokenPipeline
+
+__all__ = ["LoaderPool", "ShardSpec", "SyntheticShard", "TokenPipeline"]

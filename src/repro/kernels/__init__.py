@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel has an explicit BlockSpec VMEM tiling, a jit'd wrapper in
+``ops.py``, and a pure-jnp oracle in ``ref.py``; correctness is enforced by
+interpret-mode shape/dtype sweeps in tests/test_kernels.py.
+
+The paper itself is a control-plane contribution (no kernel); these kernels
+serve the data plane it orchestrates -- plus ``binpack_select``, which puts
+the packer's own inner reduction on device for batched algorithm sweeps.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,72 @@
+"""Fit-strategy bin selection as a Pallas TPU kernel.
+
+The packer's inner operation -- "given bin loads and an item, pick the
+first/best/worst bin it fits in" -- is a masked argmin/argmax reduction.
+Evaluating algorithm sweeps (12 algorithms x 6 deltas x 500 iterations x
+batches of streams) on device makes this the hot loop; the kernel evaluates
+a whole batch of (loads, item) instances per launch with the loads row
+resident in VMEM.
+
+Semantics match ``repro.core.jaxpack._select_slot``: ties break to the
+lowest slot, an item "fits" iff load + w <= capacity and slot < k.
+Returns slot = M (out of range) when nothing fits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 3.4e38  # python literal: jnp scalars would be captured as consts
+
+
+def _select_kernel(loads_ref, w_ref, k_ref, cap_ref, slot_ref, *,
+                   strategy: str, m: int):
+    loads = loads_ref[0]                              # (M,)
+    w = w_ref[0]
+    k = k_ref[0]
+    cap = cap_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    fits = (idx < k) & (loads + w <= cap)
+    if strategy == "first":
+        score = jnp.where(fits, idx.astype(jnp.float32), _BIG)
+        best = jnp.argmin(score)
+    elif strategy == "best":      # tightest fit = max load; first on tie
+        score = jnp.where(fits, loads, -_BIG)
+        best = jnp.argmax(score)
+    elif strategy == "worst":     # most slack = min load; first on tie
+        score = jnp.where(fits, loads, _BIG)
+        best = jnp.argmin(score)
+    else:
+        raise ValueError(strategy)
+    found = jnp.any(fits)
+    slot_ref[0] = jnp.where(found, best.astype(jnp.int32), jnp.int32(m))
+
+
+def select_slot_batch(loads, w, k, capacity, *, strategy: str = "best",
+                      interpret: bool = False):
+    """loads: (N, M) f32; w, capacity: (N,) f32; k: (N,) i32 (bins created).
+
+    Returns (N,) i32 chosen slot per instance (M = nothing fits).
+    """
+    n, m = loads.shape
+    kernel = functools.partial(_select_kernel, strategy=strategy, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(loads.astype(jnp.float32), w.astype(jnp.float32),
+      k.astype(jnp.int32), capacity.astype(jnp.float32))

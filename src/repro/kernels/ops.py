@@ -1,0 +1,122 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the wrappers run the kernels in interpret mode when
+``interpret`` is unset, so the same call sites work everywhere; on TPU the
+kernels compile to Mosaic.  ``flash_attention`` exposes a custom_vjp whose
+backward uses the jnp online-softmax path (recompute), so training with
+``cfg.use_pallas`` stays differentiable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .binpack_select import select_slot_batch
+from .decode_attention import decode_attention_fwd
+from .flash_attention import flash_attention_fwd
+from .rwkv6_scan import rwkv6_wkv_fwd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention (B, Sq, H, hd) interface matching models/attention.py
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    """q/k/v: (B, S, H, hd) (kv heads already expanded).  Returns same layout."""
+    return _flash_fwd_impl(q, k, v, causal)
+
+
+def _flash_fwd_impl(q, k, v, causal):
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_fwd(qt, kt, vt, causal=causal,
+                              interpret=_default_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd_rule(causal, q, k, v):
+    return _flash_fwd_impl(q, k, v, causal), (q, k, v)
+
+
+def _flash_bwd_rule(causal, res, g):
+    q, k, v = res
+
+    def ref_fn(q_, k_, v_):
+        from repro.models.attention import online_softmax_attention
+        from repro.models.base import ArchConfig
+        cfg = ArchConfig(name="_", family="dense", n_layers=1, d_model=1,
+                         n_heads=1, n_kv_heads=1, d_ff=1, vocab_size=1,
+                         attn_chunk=1024)
+        return online_softmax_attention(q_, k_, v_, cfg, causal=causal)
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """q: (B, KV, G, hd); caches: (B, S, KV, hd) model layout.  Transposes to
+    the kernel's (B, KV, S, hd) and back are fused by XLA."""
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    return decode_attention_fwd(q, kt, vt, cache_len,
+                                interpret=_default_interpret())
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, w, u, s0, chunk: Optional[int] = None):
+    """r,k,v,w: (B, T, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+
+    Chunks T through the kernel when it exceeds the VMEM budget, carrying
+    the state between launches.
+    """
+    b, t, h, hd = r.shape
+    budget = 4096
+    if chunk is None:
+        chunk = min(t, budget)
+    if t <= chunk:
+        return rwkv6_wkv_fwd(r, k, v, w, u, s0,
+                             interpret=_default_interpret())
+    assert t % chunk == 0
+    nc = t // chunk
+
+    def body(s, xs):
+        rc, kc, vc, wc = xs
+        out, s2 = rwkv6_wkv_fwd(rc, kc, vc, wc, u, s,
+                                interpret=_default_interpret())
+        return s2, out
+
+    resh = lambda x: x.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    s_last, outs = jax.lax.scan(body, s0, (resh(r), resh(k), resh(v), resh(w)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, hd)
+    return out, s_last
+
+
+# ---------------------------------------------------------------------------
+# packer fit selection
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("strategy",))
+def select_slot(loads, w, k, capacity, strategy: str = "best"):
+    return select_slot_batch(loads, w, k, capacity, strategy=strategy,
+                             interpret=_default_interpret())

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps in tests/test_kernels.py compare against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Skv, hd).  Full-softmax reference."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: (B, KV, G, hd); caches: (B, KV, S, hd); attends [0, cache_len]."""
+    b, kvh, g, hd = q.shape
+    s_len = k_cache.shape[2]
+    s = jnp.einsum("bngd,bnsd->bngs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(s_len)[None, None, None, :] <= cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bnsd->bngd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, w, u, s0):
+    """Sequential-scan reference of the WKV recurrence (all f32)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    rt = jnp.moveaxis(r, 1, 0)
+    kt = jnp.moveaxis(k, 1, 0)
+    vt = jnp.moveaxis(v, 1, 0)
+    wt = jnp.moveaxis(w, 1, 0)
+    s_last, out = jax.lax.scan(step, s0, (rt, kt, vt, wt))
+    return jnp.moveaxis(out, 0, 1), s_last
+
+
+def select_slot_ref(loads, w, k, capacity, *, strategy: str = "best"):
+    """Batched reference of the packer's fit-strategy selection."""
+    n, m = loads.shape
+    idx = jnp.arange(m)
+    fits = (idx[None, :] < k[:, None]) & (loads + w[:, None] <= capacity[:, None])
+    if strategy == "first":
+        score = jnp.where(fits, idx[None, :].astype(jnp.float32), jnp.inf)
+        best = jnp.argmin(score, axis=1)
+    elif strategy == "best":
+        score = jnp.where(fits, loads, -jnp.inf)
+        best = jnp.argmax(score, axis=1)
+    elif strategy == "worst":
+        score = jnp.where(fits, loads, jnp.inf)
+        best = jnp.argmin(score, axis=1)
+    else:
+        raise ValueError(strategy)
+    return jnp.where(fits.any(axis=1), best, m).astype(jnp.int32)

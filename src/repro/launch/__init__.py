@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding rule tables, input shapes,
+step builders, the multi-pod dry-run, and the train/serve drivers."""

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).  Do not move them.
+
+"""Multi-pod dry-run: for every (architecture x input-shape) cell, lower +
+compile the step function on the production mesh (16x16 single-pod and
+2x16x16 multi-pod) with ShapeDtypeStruct inputs (no allocation), record
+
+  * memory_analysis()  -- proves the program fits per-device HBM,
+  * cost_analysis()    -- HLO FLOPs / bytes for the roofline,
+  * collective wire bytes parsed from the partitioned HLO,
+
+appending one JSON line per cell to the output file (resumable: cells
+already present are skipped).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--rules baseline|...] [--out FILE]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import hlo_walker
+from repro.launch.mesh import (DCI_BW, HBM_BW, HBM_BYTES, ICI_BW,
+                               PEAK_FLOPS_BF16, make_production_mesh, n_chips)
+from repro.launch.rules import serve_rules, train_rules
+from repro.launch.shapes import (SHAPES, applicable, batch_logical_specs,
+                                 input_specs, model_flops)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import axis_rules, decode_state_specs, init_decode_state, \
+    init_params, param_specs
+from repro.models.sharding import logical_spec
+from repro.optim.adamw import AdamWConfig, adamw_init, opt_state_specs
+from jax.sharding import NamedSharding
+
+
+def _resolve_tree(spec_tree, sds_tree, mesh, rules):
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def one(names, sds):
+        return NamedSharding(mesh, logical_spec(names, sds.shape, mesh, rules))
+    return jax.tree.map(one, spec_tree, sds_tree, is_leaf=is_spec)
+
+
+# named experiment variants: (sharding-rules variant, ArchConfig overrides).
+# "baseline" is the paper-faithful starting point; the rest are the §Perf
+# hillclimb configurations (EXPERIMENTS.md records deltas against baseline).
+VARIANTS = {
+    "baseline": ("baseline", {}),
+    "no_sp": ("no_sp", {}),
+    "moe_local": ("moe_local", {}),
+    "ep": ("ep", {}),                                  # expert parallelism
+    "wkv_kernel": ("baseline", {"wkv_impl": "kernel_stub"}),
+    "tail256": ("baseline", {"decode_tail_window": 256}),
+    "ep_tail256": ("ep", {"decode_tail_window": 256}),
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_variant: str = "baseline", keep_artifacts: bool = False):
+    """Returns a result dict for one cell (raises on failure)."""
+    shape = SHAPES[shape_name]
+    serve = shape.kind == "decode"
+    rules_name, overrides = VARIANTS.get(rules_variant,
+                                         (rules_variant, {}))
+    cfg = configs.get(arch)
+    cfg = type(cfg)(**{**cfg.__dict__, **overrides,
+                       "param_dtype": "bfloat16" if serve else "float32"})
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = (serve_rules(multi_pod, rules_name) if serve
+             else train_rules(multi_pod, rules_name))
+
+    p_sds = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    p_specs = param_specs(cfg)
+    p_shard = _resolve_tree(p_specs, p_sds, mesh, rules)
+    batch_sds = input_specs(cfg, shape)
+    b_shard = _resolve_tree(batch_logical_specs(cfg, shape), batch_sds, mesh,
+                            rules)
+
+    with axis_rules(mesh, rules):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            o_sds = jax.eval_shape(adamw_init, p_sds)
+            o_shard = _resolve_tree(opt_state_specs(p_specs), o_sds, mesh, rules)
+            step = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, batch_sds)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_sds, batch_sds)
+        else:
+            step = make_serve_step(cfg)
+            s_sds = jax.eval_shape(
+                lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+            s_shard = _resolve_tree(decode_state_specs(cfg), s_sds, mesh, rules)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, s_shard, b_shard),
+                             out_shardings=(None, s_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_sds, s_sds, batch_sds)
+
+        flush_stats = None
+        if shape.kind == "decode" and cfg.decode_tail_window > 0:
+            from repro.models.attention import flush_kv_tail
+            fl = jax.jit(lambda st: flush_kv_tail(cfg, st),
+                         in_shardings=(s_shard,), out_shardings=s_shard,
+                         donate_argnums=(0,))
+            flush_compiled = fl.lower(s_sds).compile()
+            flush_stats = hlo_walker.walk(flush_compiled.as_text())
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware accounting (XLA's cost_analysis counts while bodies
+    # once; the walker multiplies through scan trip counts -- see
+    # tests/test_hlo_walker.py)
+    stats = hlo_walker.walk(hlo)
+
+    chips = n_chips(multi_pod)
+    flops_dev = float(stats.flops)
+    bytes_dev = float(stats.hbm_bytes)
+    mf = model_flops(cfg, shape)
+
+    # roofline terms (seconds)
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    # split intra-pod (ICI) vs cross-pod (pod-axis collectives: group size 2)
+    ici_bytes = 0.0
+    dci_bytes = 0.0
+    for (kind, k), v in stats.collective_by.items():
+        if multi_pod and k == 2:
+            dci_bytes += v
+        else:
+            ici_bytes += v
+    t_collective = ici_bytes / ICI_BW + dci_bytes / DCI_BW
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules": rules_variant, "kind": shape.kind,
+        "chips": chips, "compile_s": round(compile_s, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": stats.collective_bytes,
+        "collectives": stats.summary(),
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops_dev * chips)
+                               if flops_dev > 0 else None),
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_collective,
+            "t_collective_ici_s": ici_bytes / ICI_BW,
+            "t_collective_dci_s": dci_bytes / DCI_BW,
+            "bottleneck": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_collective)], key=lambda kv: kv[1])[0],
+        },
+        "memory": {},
+    }
+    if flush_stats is not None:
+        w = cfg.decode_tail_window
+        res["flush_amortized"] = {
+            "window": w,
+            "t_memory_s": flush_stats.hbm_bytes / HBM_BW / w,
+            "t_collective_s": flush_stats.collective_bytes / ICI_BW / w,
+        }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                res["memory"][attr] = int(v)
+        args_b = res["memory"].get("argument_size_in_bytes", 0)
+        temp_b = res["memory"].get("temp_size_in_bytes", 0)
+        alias_b = res["memory"].get("alias_size_in_bytes", 0)
+        live = args_b + temp_b - alias_b
+        res["memory"]["live_bytes_per_device"] = int(live)
+        res["memory"]["fits_hbm"] = bool(live <= HBM_BYTES)
+    if keep_artifacts:
+        res["_hlo"] = hlo
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--no-skip-existing", dest="skip_existing",
+                    action="store_false")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, \
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}"
+
+    archs = [args.arch] if args.arch else configs.list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r["rules"]))
+                except Exception:
+                    pass
+
+    failures = []
+    with open(args.out, "a") as out:
+        for arch in archs:
+            cfg = configs.get(arch)
+            for shape_name in shapes:
+                ok, why = applicable(cfg, shape_name)
+                for mp in meshes:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    key = (arch, shape_name, mesh_name, args.rules)
+                    if key in done:
+                        print(f"[skip-done] {key}", flush=True)
+                        continue
+                    if not ok:
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "rules": args.rules,
+                               "skipped": why}
+                        out.write(json.dumps(rec) + "\n")
+                        out.flush()
+                        print(f"[skip] {key}: {why}", flush=True)
+                        continue
+                    print(f"[cell] {key} ...", flush=True)
+                    try:
+                        res = lower_cell(arch, shape_name, mp, args.rules)
+                        out.write(json.dumps(res) + "\n")
+                        out.flush()
+                        rl = res["roofline"]
+                        print(f"  ok compile={res['compile_s']}s "
+                              f"bottleneck={rl['bottleneck']} "
+                              f"tc={rl['t_compute_s']:.3e} "
+                              f"tm={rl['t_memory_s']:.3e} "
+                              f"tcol={rl['t_collective_s']:.3e} "
+                              f"live={res['memory'].get('live_bytes_per_device', 0)/2**30:.2f}GiB",
+                              flush=True)
+                    except Exception as e:
+                        tb = traceback.format_exc(limit=20)
+                        failures.append((key, str(e)))
+                        out.write(json.dumps(
+                            {"arch": arch, "shape": shape_name,
+                             "mesh": mesh_name, "rules": args.rules,
+                             "error": str(e)[:2000]}) + "\n")
+                        out.flush()
+                        print(f"  FAIL: {e}\n{tb}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:", flush=True)
+        for k, e in failures:
+            print(f"  {k}: {e[:200]}", flush=True)
+        sys.exit(1)
+    print("\nall cells ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Extract collective-communication statistics from (post-SPMD) HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled module: every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute contributes its *wire bytes per participating device*,
+using standard ring-algorithm accounting:
+
+    all-gather        out_bytes * (k-1)/k        (receives everyone else's shard)
+    reduce-scatter    in_bytes  * (k-1)/k
+    all-reduce        2 * bytes * (k-1)/k        (RS + AG)
+    all-to-all        bytes * (k-1)/k
+    collective-permute bytes                     (one hop)
+
+where k is the replica-group size parsed from the op and shapes are the
+per-device shapes appearing in the partitioned module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape like 'bf16[16,128]' or a tuple '(f32[2], f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota form [G,k]
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _source_pairs(line: str) -> int:
+    m = re.search(r"source_target_pairs=\{(.*?)\}", line)
+    if m:
+        return max(1, m.group(1).count("{"))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # wire bytes per device, by op kind
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    # per (kind, group-size) wire bytes -- lets the roofline split ICI vs DCI
+    bytes_by_kind_k: Dict[Tuple[str, int], float]
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def summary(self) -> Dict:
+        return {"total_bytes": self.total_bytes,
+                "by_kind": dict(self.bytes_by_kind),
+                "counts": dict(self.count_by_kind),
+                "by_kind_groupsize": {f"{k}@{g}": v for (k, g), v in
+                                      self.bytes_by_kind_k.items()}}
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    bytes_by: Dict[str, float] = defaultdict(float)
+    count_by: Dict[str, int] = defaultdict(int)
+    by_kind_k: Dict[Tuple[str, int], float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        # match:  [ROOT] %name = <shape> <op>( ... )  (plus -start async forms)
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        if kind == "collective-permute":
+            wire = float(nbytes)
+        else:
+            k = _group_size(s, default_group)
+            frac = (k - 1) / k if k > 1 else 0.0
+            if kind == "all-reduce":
+                wire = 2.0 * nbytes * frac
+            elif kind == "reduce-scatter":
+                # result shape is the post-scatter shard: input = k * nbytes
+                wire = float(nbytes) * (k - 1) if k > 1 else 0.0
+            else:           # all-gather / all-to-all: result is the full shape
+                wire = float(nbytes) * frac
+        if wire <= 0:
+            continue
+        count_by[kind] += 1
+        bytes_by[kind] += wire
+        k = _group_size(s, default_group) if kind != "collective-permute" else 2
+        by_kind_k[(kind, k)] += wire
+    return CollectiveStats(dict(bytes_by), dict(count_by), dict(by_kind_k))

@@ -1,0 +1,390 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scanned program (scan over layers, KV-block scans, recurrent time scans)
+under-reports FLOPs/bytes/collectives by the trip count.  This walker parses
+the partitioned HLO, builds the computation call graph (while/fusion/call/
+conditional), multiplies every op's cost by the product of enclosing trip
+counts (``backend_config={"known_trip_count":{"n":...}}``, emitted for all
+lax.scan loops), and accumulates:
+
+* flops            -- 2 * |result| * contraction for every ``dot``
+* hbm bytes        -- operand + result bytes at fusion/op boundaries
+                      (fusion internals excluded; dynamic-update-slice counts
+                      the update, not the whole buffer)
+* collective bytes -- ring-model wire bytes per device, by (kind, group size)
+
+All values are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+# result type is either a tuple "(...)" (may contain /*index=N*/ comments,
+# never nested parens) or a single token
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:\S+))\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_SINGLE = re.compile(r"(?:body|condition|calls|to_apply|true_computation|"
+                            r"false_computation)=%?([\w.\-]+)")
+_CALLED_MULTI = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "iota", "partition-id", "replica-id",
+    "bitcast-convert",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _operand_names(line: str, start: int) -> List[str]:
+    """Operand %names inside the op's argument parens, where ``start`` points
+    at the opening '(' (so tuple-typed results are not mistaken for args)."""
+    i = start
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                region = line[i + 1:j]
+                return re.findall(r"%([\w.\-]+)", region)
+    return []
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)), {}, [])
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, kind = m.group(1), m.group(2), m.group(3)
+        cur.ops[name] = Op(name, shape, kind, line,
+                           _operand_names(line, m.end() - 1))
+        cur.order.append(name)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    # fallback: largest integer constant in the condition computation
+    mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+    if mc and mc.group(1) in comps:
+        best = 1
+        for o in comps[mc.group(1)].ops.values():
+            for c in re.findall(r"constant\((\d+)\)", o.line):
+                best = max(best, int(c))
+        return best
+    return 1
+
+
+def _called_comps(op: Op) -> List[str]:
+    out = [m.group(1) for m in _CALLED_SINGLE.finditer(op.line)]
+    for m in _CALLED_MULTI.finditer(op.line):
+        out.extend(n.strip().lstrip("%") for n in m.group(1).split(",") if n.strip())
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_elems = 0, 0
+    out_elems, _ = _shape_elems_bytes(op.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m or not op.operands:
+        return 0.0
+    lhs = comp.ops.get(op.operands[0])
+    if lhs is None:
+        return 0.0
+    lhs_dims: List[int] = []
+    sm = _SHAPE_RE.search(lhs.shape)
+    if sm:
+        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    contraction = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contraction *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contraction
+
+
+def _op_bytes(op: Op, comp: Computation,
+              comps: Optional[Dict[str, "Computation"]] = None) -> float:
+    if op.kind in _SKIP_BYTES_OPS:
+        return 0.0
+    _, out_b = _shape_elems_bytes(op.shape)
+    if op.kind in ("dynamic-update-slice",):
+        upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+        ub = _shape_elems_bytes(upd.shape)[1] if upd else 0
+        return float(2 * ub)
+    if op.kind in ("dynamic-slice", "gather", "slice"):
+        return float(2 * out_b)
+    if op.kind == "fusion" and comps is not None:
+        for cn in _called_comps(op):
+            fused = comps.get(cn)
+            if fused and fused.order:
+                return _fusion_bytes(op, fused, out_b)
+            break
+    total = float(out_b)
+    for o in op.operands:
+        src = comp.ops.get(o)
+        if src is None or src.kind in ("constant",):
+            # parameters count: they are HBM-resident inputs
+            if src is None:
+                continue
+        total += _shape_elems_bytes(src.shape)[1] if src else 0.0
+    return total
+
+
+_UNARY = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _fusion_bytes(op: Op, fused: Computation, out_b: int) -> float:
+    """HBM traffic of one fusion call, modeling the TPU lowering:
+
+    * root chain ending in dynamic-update-slice/scatter (possibly wrapped in
+      converts/bitcasts): in-place update -- charge 2x the update slice, not
+      the whole aliased buffer;
+    * a fusion parameter consumed ONLY by dynamic-slice ops inside the fused
+      computation: charge the slice result sizes, not the full buffer (the
+      loop reads one layer of a stacked carry per iteration);
+    * everything else: full operand size + output size.
+    """
+    # pure dtype-conversion fusion (parameter -> convert/copy/transpose
+    # chain): a CPU-backend artifact of upcasting bf16 dot operands to f32.
+    # TPU reads the operand natively; charge the input bytes once.
+    kinds = {o.kind for o in fused.ops.values()}
+    if kinds <= {"parameter", "convert", "copy", "bitcast", "reshape",
+                 "transpose", "broadcast"}:
+        in_b = sum(_shape_elems_bytes(o.shape)[1]
+                   for o in fused.ops.values() if o.kind == "parameter")
+        return float(in_b)
+
+    # --- output side: walk back through unary wrappers to find a DUS root
+    write_b = float(out_b)
+    cur = fused.ops.get(fused.order[-1])
+    seen = 0
+    while cur is not None and cur.kind in _UNARY and cur.operands and seen < 6:
+        cur = fused.ops.get(cur.operands[0])
+        seen += 1
+    if cur is not None:
+        upd_idx = {"dynamic-update-slice": 1, "scatter": 2}.get(cur.kind)
+        if upd_idx is not None and len(cur.operands) > upd_idx:
+            upd = fused.ops.get(cur.operands[upd_idx])
+            if upd is not None:
+                ub = _shape_elems_bytes(upd.shape)[1]
+                write_b = float(2 * ub)   # read-modify-write of the region
+
+    # --- input side: per-parameter consumption analysis
+    params: Dict[int, Op] = {}
+    for o in fused.ops.values():
+        if o.kind == "parameter":
+            m = re.search(r"parameter\((\d+)\)", o.line)
+            if m:
+                params[int(m.group(1))] = o
+    read_b = 0.0
+    for idx, name in enumerate(op.operands):
+        pop = params.get(idx)
+        if pop is None:
+            continue
+        consumers = [o for o in fused.ops.values()
+                     if pop.name in o.operands and o.kind != "parameter"]
+        if consumers and all(c.kind == "dynamic-slice" for c in consumers):
+            read_b += sum(_shape_elems_bytes(c.shape)[1] for c in consumers)
+        else:
+            # if this param is the aliased DUS destination, its read is
+            # already covered by write_b
+            if cur is not None and cur.kind in ("dynamic-update-slice", "scatter") \
+                    and cur.operands and fused.ops.get(cur.operands[0]) is not None:
+                chain = fused.ops[cur.operands[0]]
+                hops = 0
+                while chain is not None and chain.kind in _UNARY and \
+                        chain.operands and hops < 6:
+                    chain = fused.ops.get(chain.operands[0])
+                    hops += 1
+                if chain is pop:
+                    continue
+            read_b += _shape_elems_bytes(pop.shape)[1]
+    return write_b + read_b
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _collective_wire_bytes(op: Op) -> Tuple[str, int, float]:
+    kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+    _, nbytes = _shape_elems_bytes(op.shape)
+    if kind == "collective-permute":
+        return kind, 2, float(nbytes)
+    k = _group_size(op.line)
+    if k <= 1:
+        return kind, k, 0.0
+    frac = (k - 1) / k
+    if kind == "all-reduce":
+        # -start result may be a (in, out) tuple: halve to get payload
+        if op.kind.endswith("-start"):
+            nbytes = nbytes / 2
+        return kind, k, 2.0 * nbytes * frac
+    if kind == "reduce-scatter":
+        return kind, k, float(nbytes) * (k - 1)
+    return kind, k, float(nbytes) * frac   # all-gather / all-to-all
+
+
+@dataclasses.dataclass
+class WalkStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by: Dict[Tuple[str, int], float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    dot_flops_by_shape: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    bytes_by_opkind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    top_byte_ops: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    top_collective_ops: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+
+    def summary(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind_k": {f"{k}@{g}": v for (k, g), v in
+                                     sorted(self.collective_by.items())},
+            "collective_counts": dict(self.collective_counts),
+        }
+
+
+def walk(text: str) -> WalkStats:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    stats = WalkStats()
+
+    def visit(comp: Computation, mult: float, in_fusion: bool):
+        for name in comp.order:
+            op = comp.ops[name]
+            if op.kind == "dot":
+                f = _dot_flops(op, comp) * mult
+                stats.flops += f
+                stats.dot_flops_by_shape[op.shape] += f
+            if not in_fusion:
+                base = op.kind.replace("-start", "")
+                if base in _COLLECTIVES:
+                    if op.kind.endswith("-done"):
+                        continue
+                    kind, k, wire = _collective_wire_bytes(op)
+                    stats.collective_bytes += wire * mult
+                    stats.collective_by[(kind, k)] += wire * mult
+                    stats.collective_counts[kind] += int(mult)
+                    if wire * mult > 0:
+                        mm = re.search(r'op_name="([^"]*)"', op.line)
+                        desc = (f"{kind}@{k} {op.shape[:48]} x{mult:g} "
+                                f"[{(mm.group(1) if mm else '?')[:90]}]")
+                        if len(stats.top_collective_ops) < 200:
+                            stats.top_collective_ops.append((wire * mult, desc))
+                        else:
+                            mn = min(range(len(stats.top_collective_ops)),
+                                     key=lambda i: stats.top_collective_ops[i][0])
+                            if stats.top_collective_ops[mn][0] < wire * mult:
+                                stats.top_collective_ops[mn] = (wire * mult, desc)
+                    continue
+                b = _op_bytes(op, comp, comps) * mult
+                stats.hbm_bytes += b
+                if b > 0:
+                    stats.bytes_by_opkind[op.kind] += b
+                    if len(stats.top_byte_ops) < 400:
+                        stats.top_byte_ops.append((b, f"{op.kind} {op.shape[:60]} x{mult:g}"))
+                    else:
+                        mn = min(range(len(stats.top_byte_ops)),
+                                 key=lambda i: stats.top_byte_ops[i][0])
+                        if stats.top_byte_ops[mn][0] < b:
+                            stats.top_byte_ops[mn] = (b, f"{op.kind} {op.shape[:60]} x{mult:g}")
+            # descend
+            if op.kind == "while":
+                trips = _trip_count(op, comps)
+                for cn in _called_comps(op):
+                    if cn in comps:
+                        visit(comps[cn], mult * trips, in_fusion)
+            elif op.kind == "fusion":
+                for cn in _called_comps(op):
+                    if cn in comps:
+                        visit(comps[cn], mult, True)
+            elif op.kind in ("call", "conditional", "custom-call"):
+                for cn in _called_comps(op):
+                    if cn in comps:
+                        visit(comps[cn], mult, in_fusion)
+            # reduce/sort/scatter/map apply tiny scalar computations: skip
+
+    visit(entry, 1.0, False)
+    return stats

@@ -1,0 +1,29 @@
+"""Production mesh + TPU v5e hardware constants.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state -- the dry-run process
+must set XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+# --- TPU v5e constants (roofline denominators) -----------------------------
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (intra-pod)
+DCI_BW = 25e9                   # bytes/s per chip cross-pod (assumed DCI)
+HBM_BYTES = 16 * 1024 ** 3      # 16 GiB per chip
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def n_chips(multi_pod: bool) -> int:
+    return MULTI_POD_CHIPS if multi_pod else SINGLE_POD_CHIPS

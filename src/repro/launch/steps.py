@@ -1,0 +1,83 @@
+"""Step-function builders: train_step (fwd+bwd+AdamW), prefill_step
+(forward, last-token logits), serve_step (one decode step)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig, forward, serve_step as model_serve_step
+from repro.models.layers import embed_inputs, logits_fn
+from repro.models.transformer import backbone
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = forward(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params,
+                                                      opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Full-sequence forward, returning only the last position's logits (the
+    serving prefill: fills state, samples the first generated token)."""
+    if cfg.encoder_decoder:
+        from repro.models.whisper import _dec_embed, encode
+        from repro.models.layers import apply_norm
+
+        def prefill(params, batch):
+            loss_free_batch = dict(batch)
+            # reuse the teacher-forced path but only keep last-token logits
+            from repro.models.whisper import whisper_forward
+            enc = encode(params, cfg, batch["inputs"])
+            tokens = batch["decoder_tokens"]
+            b, s = tokens.shape
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x = _dec_embed(params, cfg, tokens, positions)
+            from repro.models.whisper import _cross_attention
+            from repro.models.attention import attention_block
+            from repro.models.layers import apply_mlp
+            from jax import lax
+
+            def body(carry, lp):
+                h = apply_norm(lp["ln1"], cfg, carry)
+                carry = carry + attention_block(lp["self_attn"], cfg, h, positions)
+                h = apply_norm(lp["ln2"], cfg, carry)
+                carry = carry + _cross_attention(lp["cross_attn"], cfg, h, enc)
+                h = apply_norm(lp["ln3"], cfg, carry)
+                carry = carry + apply_mlp(lp["mlp"], cfg, h)
+                return carry, None
+
+            if cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = lax.scan(body, x, params["layers"])
+            x = apply_norm(params["final_norm"], cfg, x)
+            return logits_fn(params, cfg, x[:, -1:, :])[:, 0, :]
+        return prefill
+
+    def prefill(params, batch):
+        inputs = batch["inputs"]
+        b, s = inputs.shape[0], inputs.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = embed_inputs(params["embedding"], cfg, inputs)
+        h, _ = backbone(params, cfg, x, positions)
+        return logits_fn(params, cfg, h[:, -1:, :])[:, 0, :]
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    def step(params, state, batch):
+        return model_serve_step(params, cfg, state, batch)
+    return step

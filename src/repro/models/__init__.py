@@ -1,0 +1,20 @@
+"""Model zoo: the 10 assigned architectures in pure JAX."""
+from .base import ArchConfig, MambaConfig
+from .sharding import axis_rules, logical_spec, shard, spec_tree_to_shardings
+from .transformer import (decode_state_specs, forward, init_decode_state,
+                          init_params, param_specs, serve_step)
+
+__all__ = [
+    "ArchConfig",
+    "MambaConfig",
+    "axis_rules",
+    "logical_spec",
+    "shard",
+    "spec_tree_to_shardings",
+    "decode_state_specs",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "param_specs",
+    "serve_step",
+]

@@ -1,0 +1,300 @@
+"""GQA attention: training/prefill (online-softmax over KV blocks, so 32k
+sequences never materialize an S x S score matrix) and decode over a KV
+cache (flash-decoding style -- the cache's sequence axis may be sharded
+across the model axis; XLA inserts the distributed max/sum reductions).
+
+The Pallas TPU kernels in ``repro/kernels`` implement the same math with
+explicit VMEM tiling; ``cfg.use_pallas`` switches to them on TPU.  The
+jnp path below is their oracle and the dry-run lowering path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import ArchConfig, scaled_normal, split_keys
+from .layers import apply_rope, rms_norm_headwise
+from .sharding import shard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, ["wq", "wk", "wv", "wo", "qn", "kn"])
+    p = {
+        "wq": scaled_normal(ks["wq"], (d, h, hd), d, cfg.pdtype),
+        "wk": scaled_normal(ks["wk"], (d, kv, hd), d, cfg.pdtype),
+        "wv": scaled_normal(ks["wv"], (d, kv, hd), d, cfg.pdtype),
+        "wo": scaled_normal(ks["wo"], (h, hd, d), h * hd, cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def attention_specs(cfg: ArchConfig) -> Dict:
+    s = {
+        "wq": ("p_embed", "p_heads", None),
+        "wk": ("p_embed", "p_kv", None),
+        "wv": ("p_embed", "p_kv", None),
+        "wo": ("p_heads", None, "p_embed"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return s
+
+
+def _qkv(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dt = cfg.adtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, p["q_norm"])
+        k = rms_norm_headwise(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv", None)
+    v = shard(v, "batch", None, "kv", None)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,kv,hd) -> (B,S,H,hd) by repeating each kv head H/kv times."""
+    b, s, kv, hd = k.shape
+    rep = n_heads // kv
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def online_softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             cfg: ArchConfig, causal: bool = True,
+                             q_offset: int = 0) -> jax.Array:
+    """Blockwise attention with running (max, sum) state.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) [kv heads already expanded].
+    Scans over KV blocks of ``cfg.attn_chunk`` so peak memory is
+    O(Sq * block) instead of O(Sq * Skv).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    blk = min(cfg.attn_chunk, skv)
+    n_blk = (skv + blk - 1) // blk
+    pad = n_blk * blk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blk, blk, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blk, blk, h, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)  # MXU: bf16 in, f32 acc
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, blk_in):
+        acc, m, l, i = carry
+        kc, vc = blk_in                              # (B, blk, H, hd)
+        s_ = jnp.einsum("bqhk,bjhk->bhqj", qf, kc,
+                        preferred_element_type=jnp.float32)
+        kv_pos = i * blk + jnp.arange(blk)
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]
+        else:
+            mask = jnp.ones((sq, blk), bool)
+        valid = (kv_pos < skv)[None, :]
+        s_ = jnp.where((mask & valid)[None, None], s_, NEG_INF)
+        m_new = jnp.maximum(m, s_.max(axis=-1))
+        p_ = jnp.exp(s_ - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqj,bjhk->bhqk", p_.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l_new, i + 1), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l, _), _ = lax.scan(body, (acc0, m0, l0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)      # (B, Sq, H, hd)
+
+
+def attention_block(p: Dict, cfg: ArchConfig, x: jax.Array,
+                    positions: jax.Array, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.use_pallas:
+        from repro.kernels.ops import flash_attention as _fa
+        out = _fa(q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads),
+                  causal=causal)
+    else:
+        out = online_softmax_attention(
+            q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads),
+            cfg, causal=causal)
+    out = shard(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.adtype))
+    return shard(y, "batch", "seq_sp", None)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None) -> Dict:
+    """KV cache, kv-head-major (L, B, kv, S, hd): the decode einsums
+    ("bngk,bnsk->bngs") are layout-native, so no per-layer transposed copies
+    of the cache slice appear in the compiled step."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, kv, max_len, hd)
+    return {"k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype)}
+
+
+def kv_cache_specs() -> Dict:
+    return {"k": (None, "batch", "p_kv", "cache_seq", None),
+            "v": (None, "batch", "p_kv", "cache_seq", None)}
+
+
+def init_kv_tail(cfg: ArchConfig, batch: int, window: int,
+                 n_layers: Optional[int] = None) -> Dict:
+    """Batch-sharded write buffer for block-buffered decode (layout
+    (L, B, kv, W, hd): kv-major so attention needs no transpose)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, kv, window, hd)
+    return {"k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype)}
+
+
+def kv_tail_specs() -> Dict:
+    return {"k": (None, "batch", "p_kv", None, None),
+            "v": (None, "batch", "p_kv", None, None)}
+
+
+def decode_attention_tailed(p: Dict, cfg: ArchConfig, x: jax.Array,
+                            k_main: jax.Array, v_main: jax.Array,
+                            k_tail: jax.Array, v_tail: jax.Array,
+                            cache_len: jax.Array, positions: jax.Array):
+    """Block-buffered decode: the new token's K/V goes into the small
+    batch-sharded tail (LOCAL dynamic-update-slice -- never a cross-shard
+    write into the sequence-sharded main cache); attention spans
+    main[0:main_len] ++ tail[0:tail_len+1] under one joint softmax.
+
+    main: (B, kv, S, hd); tail: (B, kv, W, hd).
+    main_len = floor(cache_len / W) * W; the flush (see flush_kv_tail)
+    migrates a full tail into main every W steps, amortizing the sharded
+    write W-fold.
+    """
+    b, _, d = x.shape
+    w_win = cfg.decode_tail_window
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    main_len = (cache_len // w_win) * w_win
+    tail_len = cache_len - main_len
+    kt = k_new.transpose(0, 2, 1, 3).astype(k_tail.dtype)      # (B, kv, 1, hd)
+    k_tail = lax.dynamic_update_slice_in_dim(k_tail, kt, tail_len, axis=2)
+    v_tail = lax.dynamic_update_slice_in_dim(
+        v_tail, v_new.transpose(0, 2, 1, 3).astype(v_tail.dtype), tail_len,
+        axis=2)
+
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+    scale = hd ** -0.5
+    qf = (q.reshape(b, kv, g, hd).astype(jnp.float32) * scale).astype(q.dtype)
+    s_main = jnp.einsum("bngk,bnsk->bngs", qf, k_main,
+                        preferred_element_type=jnp.float32)
+    smax = k_main.shape[2]
+    s_main = jnp.where(jnp.arange(smax)[None, None, None, :] < main_len,
+                       s_main, NEG_INF)
+    s_tail = jnp.einsum("bngk,bnwk->bngw", qf, k_tail,
+                        preferred_element_type=jnp.float32)
+    s_tail = jnp.where(jnp.arange(w_win)[None, None, None, :] <= tail_len,
+                       s_tail, NEG_INF)
+    # two-part online-softmax merge: never concatenate the (sequence-
+    # sharded) main scores with the (local) tail scores -- all sharded-S
+    # reductions stay inside the main part (flash-decoding style), the merge
+    # itself is (B, kv, g, hd)-sized
+    m1 = s_main.max(axis=-1)
+    p1 = jnp.exp(s_main - m1[..., None])
+    l1 = p1.sum(axis=-1)
+    o1 = jnp.einsum("bngs,bnsk->bngk", p1.astype(q.dtype), v_main,
+                    preferred_element_type=jnp.float32)
+    m2 = s_tail.max(axis=-1)
+    p2 = jnp.exp(s_tail - m2[..., None])
+    l2 = p2.sum(axis=-1)
+    o2 = jnp.einsum("bngw,bnwk->bngk", p2.astype(q.dtype), v_tail,
+                    preferred_element_type=jnp.float32)
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)[..., None]
+    e2 = jnp.exp(m2 - m)[..., None]
+    denom = l1[..., None] * e1 + l2[..., None] * e2
+    o = (o1 * e1 + o2 * e2) / jnp.maximum(denom, 1e-30)
+    o = o.reshape(b, 1, cfg.n_heads, hd).astype(cfg.adtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.adtype))
+    return shard(y, "batch", None, None), k_tail, v_tail
+
+
+def flush_kv_tail(cfg: ArchConfig, state: Dict) -> Dict:
+    """Migrate a FULL tail (W tokens) into the sequence-sharded main cache.
+    Call when ``cache_len % W == 0`` and ``cache_len > 0``; the serving loop
+    amortizes this one sharded write over W decode steps."""
+    w_win = cfg.decode_tail_window
+    clen = state["cache_len"]
+    dst = clen - w_win
+    kv = state["kv"]
+    tail = state["tail"]
+    # tail (L,B,kv,W,hd) and main (L,B,kv,S,hd) share the kv-major layout:
+    # the flush is a straight dynamic-update-slice on the sequence axis
+    k_main = lax.dynamic_update_slice_in_dim(kv["k"], tail["k"], dst, axis=3)
+    v_main = lax.dynamic_update_slice_in_dim(kv["v"], tail["v"], dst, axis=3)
+    return dict(state,
+                kv={"k": k_main, "v": v_main},
+                tail=jax.tree.map(jnp.zeros_like, tail))
+
+
+def decode_attention(p: Dict, cfg: ArchConfig, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, positions: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x: (B, 1, d); k/v_cache: (B, kv, S_max, hd);
+    cache_len: () current fill; positions: (B, 1).
+
+    Returns (y, new_k_cache, new_v_cache).  The new token's K/V is written at
+    ``cache_len``; attention spans the first ``cache_len + 1`` entries.
+    """
+    b, _, d = x.shape
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    k_cache = lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.transpose(0, 2, 1, 3).astype(k_cache.dtype),
+        cache_len, axis=2)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.transpose(0, 2, 1, 3).astype(v_cache.dtype),
+        cache_len, axis=2)
+    k_cache = shard(k_cache, "batch", "p_kv", "cache_seq", None)
+    v_cache = shard(v_cache, "batch", "p_kv", "cache_seq", None)
+
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+    scale = hd ** -0.5
+    # MXU-style: bf16 operands, f32 accumulation (keeps the sharded cache in
+    # its storage dtype -- no whole-cache f32 round trips)
+    qf = (q.reshape(b, kv, g, hd).astype(jnp.float32) * scale).astype(q.dtype)
+    s_ = jnp.einsum("bngk,bnsk->bngs", qf, k_cache,
+                    preferred_element_type=jnp.float32)      # (B, kv, g, S)
+    smax = k_cache.shape[2]
+    valid = jnp.arange(smax)[None, None, None, :] <= cache_len
+    s_ = jnp.where(valid, s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bngs,bnsk->bngk", w.astype(q.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, cfg.n_heads, hd).astype(cfg.adtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.adtype))
+    return shard(y, "batch", None, None), k_cache, v_cache

@@ -1,0 +1,138 @@
+"""Architecture configuration and parameter-initialization helpers.
+
+One ``ArchConfig`` describes any of the 10 assigned architectures (dense /
+MoE / hybrid Mamba+attention / RWKV / encoder-decoder).  Parameters are plain
+pytrees (nested dicts of jnp arrays); every init function has a sibling
+``*_specs`` returning the same tree shape with *logical axis names* per dim,
+which the launcher resolves to mesh ``PartitionSpec``s (divisibility-checked)
+-- see ``repro/launch/shardings.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None  # per-expert ffn width (defaults to d_ff)
+    moe_every: int = 1              # MoE every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+    # --- attention details ---
+    qk_norm: bool = False
+    rope_theta: float = 1_000_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t,h,w) sections
+    # --- norms / mlp ---
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm | nonparametric_ln
+    gated_mlp: bool = True          # SwiGLU if True else GELU MLP
+    # --- hybrid (jamba) ---
+    attn_layer_period: int = 0      # 0 = every layer is attention
+    attn_layer_offset: int = 0
+    mamba: Optional[MambaConfig] = None
+    # --- rwkv ---
+    rwkv: bool = False
+    rwkv_head_size: int = 64
+    # --- encoder-decoder (whisper) ---
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 1500     # precomputed frame embeddings
+    # --- io ---
+    input_mode: str = "tokens"      # tokens | embeddings (vlm/audio stub)
+    tie_embeddings: bool = False
+    # --- numerics ---
+    dtype: str = "bfloat16"         # activation/compute dtype
+    param_dtype: str = "float32"    # stored parameter dtype (bf16 for serving)
+    remat: bool = True              # activation checkpointing across layers
+    attn_chunk: int = 1024          # kv-block size of the online-softmax path
+    mamba_chunk: int = 128
+    use_pallas: bool = False        # TPU Pallas kernels (ref path if False)
+    # roofline modeling of the Pallas WKV kernel: "scan" = jnp recurrence
+    # (HBM state traffic every step); "kernel_stub" = stream-equivalent
+    # elementwise stand-in whose HLO traffic matches the kernel (state lives
+    # in VMEM; validated separately in interpret mode)
+    wkv_impl: str = "scan"
+    # decode: block-buffered KV writes -- new tokens go to a small
+    # batch-sharded tail (local DUS); the sequence-sharded main cache is
+    # only written by an amortized flush every `decode_tail_window` steps.
+    # 0 = paper-baseline direct DUS into the sharded cache.
+    decode_tail_window: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def is_attn_layer(self, idx: int) -> bool:
+        if self.attn_layer_period <= 0:
+            return not self.rwkv
+        return idx % self.attn_layer_period == self.attn_layer_offset
+
+    def is_moe_layer(self, idx: int) -> bool:
+        return self.moe and (idx % max(1, self.moe_every) == max(1, self.moe_every) - 1)
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, from the param tree)."""
+        from .transformer import init_params  # local import to avoid cycle
+        shapes = jax.eval_shape(lambda k: init_params(k, self), jax.random.key(0))
+        return int(sum(math.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed-to experts count)."""
+        total = self.n_params()
+        if not self.moe:
+            return total
+        e, k = self.n_experts, self.experts_per_token
+        # expert block params per MoE layer
+        per_expert = 3 * self.d_model * self.expert_ff
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        inactive = n_moe_layers * per_expert * (e - k)
+        return total - inactive
+
+
+def scaled_normal(key, shape, scale_dim: int, dtype) -> jax.Array:
+    """Truncated-normal init with 1/sqrt(fan_in) scale."""
+    std = 1.0 / math.sqrt(max(1, scale_dim))
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std
+            ).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))

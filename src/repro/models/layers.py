@@ -1,0 +1,199 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, MLPs, embeddings, loss."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig, scaled_normal, split_keys
+from .sharding import shard
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, cfg: ArchConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.pdtype),
+                "bias": jnp.zeros((d,), cfg.pdtype)}
+    if cfg.norm_type == "nonparametric_ln":   # olmo: no affine params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def norm_specs(cfg: ArchConfig) -> Dict:
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": (None,)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": (None,), "bias": (None,)}
+    return {}
+
+
+def apply_norm(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+    if cfg.norm_type == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """qk-norm (qwen3): RMS norm over head_dim."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE + qwen2-vl multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchConfig) -> jax.Array:
+    hd = cfg.head_dim
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 frequency slots are split into
+    ``mrope_sections`` (t, h, w); each section takes its angle from the
+    corresponding position stream.  Text tokens have t==h==w, which makes
+    M-RoPE degenerate to 1-D RoPE exactly as in the paper.
+    """
+    freqs = rope_freqs(cfg)                                    # (hd/2,)
+    if positions.ndim == 3 and cfg.mrope_sections:
+        sec = jnp.asarray(
+            sum(([i] * s for i, s in enumerate(cfg.mrope_sections)), []),
+            dtype=jnp.int32)                                   # (hd/2,)
+        pos = positions.astype(jnp.float32)                    # (3, B, S)
+        # angle per (B, S, hd/2): pick the stream of each frequency slot
+        pos_sel = jnp.take(pos, sec, axis=0)                   # (hd/2, B, S)
+        theta = jnp.einsum("fbs,f->bsf", pos_sel, freqs)       # (B, S, hd/2)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        theta = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(theta)[:, :, None, :]                        # (B, S, 1, hd/2)
+    sin = jnp.sin(theta)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jax.Array:
+    """Whisper-encoder style fixed sinusoids (T, d)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, ["wi", "wg", "wo"])
+    p = {"wi": scaled_normal(ks["wi"], (d, f), d, cfg.pdtype),
+         "wo": scaled_normal(ks["wo"], (f, d), f, cfg.pdtype)}
+    if cfg.gated_mlp:
+        p["wg"] = scaled_normal(ks["wg"], (d, f), d, cfg.pdtype)
+    return p
+
+
+def mlp_specs(cfg: ArchConfig) -> Dict:
+    s = {"wi": ("p_embed", "p_ffn"), "wo": ("p_ffn", "p_embed")}
+    if cfg.gated_mlp:
+        s["wg"] = ("p_embed", "p_ffn")
+    return s
+
+
+def apply_mlp(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    dt = cfg.adtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    # Megatron-style: MLP intermediate is ffn-sharded (seq gathered here;
+    # the residual stream outside stays sequence-sharded)
+    h = shard(h, "batch", None, "ffn") if h.ndim == 3 else h
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# embeddings + logits + loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ArchConfig) -> Dict:
+    p = {}
+    if cfg.input_mode == "tokens":
+        p["table"] = scaled_normal(key, (cfg.vocab_size, cfg.d_model),
+                                   cfg.d_model, cfg.pdtype)
+    else:  # frontend stub: a projection adapter over precomputed embeddings
+        p["adapter"] = scaled_normal(key, (cfg.d_model, cfg.d_model),
+                                     cfg.d_model, cfg.pdtype)
+    return p
+
+
+def embedding_specs(cfg: ArchConfig) -> Dict:
+    if cfg.input_mode == "tokens":
+        return {"table": ("p_vocab", "p_embed")}
+    return {"adapter": (None, "p_embed")}
+
+
+def embed_inputs(p: Dict, cfg: ArchConfig, inputs: jax.Array) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        x = jnp.take(p["table"].astype(cfg.adtype), inputs, axis=0)
+    else:
+        x = jnp.einsum("...d,de->...e", inputs.astype(cfg.adtype),
+                       p["adapter"].astype(cfg.adtype))
+    return shard(x, "batch", "seq_sp", None)
+
+
+def init_lm_head(key, cfg: ArchConfig) -> Dict:
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        return {}
+    return {"w": scaled_normal(key, (cfg.d_model, cfg.vocab_size),
+                               cfg.d_model, cfg.pdtype)}
+
+
+def lm_head_specs(cfg: ArchConfig) -> Dict:
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        return {}
+    return {"w": ("p_embed", "p_vocab")}
+
+
+def logits_fn(params: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        w = params["embedding"]["table"].astype(cfg.adtype).T
+    else:
+        w = params["lm_head"]["w"].astype(cfg.adtype)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if logits.ndim == 3:
+        logits = shard(logits, "batch", "seq_sp", "vocab")
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean CE in f32 with stable logsumexp (vocab may be sharded)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,177 @@
+"""Mamba-1 block (used by jamba's 7-of-8 non-attention layers).
+
+Selective SSM with input-dependent (dt, B, C); the recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+is evaluated chunkwise: sequential ``lax.scan`` over chunks of
+``cfg.mamba_chunk`` steps, parallel associative scan within a chunk, so
+peak memory is O(B * chunk * d_in * d_state) instead of O(B * S * ...).
+
+Decode keeps a constant-size state (h, conv window) -- this is why the
+hybrid/ssm archs run the 500k-token long-context shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import ArchConfig, MambaConfig, scaled_normal, split_keys
+from .sharding import shard
+
+
+def _mcfg(cfg: ArchConfig) -> MambaConfig:
+    return cfg.mamba or MambaConfig()
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    m = _mcfg(cfg)
+    d_in = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_in, m.d_state, m.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    d_in, n, d_conv, dt_rank = _dims(cfg)
+    ks = split_keys(key, ["in", "conv", "x", "dt", "out", "A"])
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "w_in": scaled_normal(ks["in"], (d, 2 * d_in), d, cfg.pdtype),
+        "conv": scaled_normal(ks["conv"], (d_conv, d_in), d_conv, cfg.pdtype),
+        "conv_b": jnp.zeros((d_in,), cfg.pdtype),
+        "w_x": scaled_normal(ks["x"], (d_in, dt_rank + 2 * n), d_in, cfg.pdtype),
+        "w_dt": scaled_normal(ks["dt"], (dt_rank, d_in), dt_rank, cfg.pdtype),
+        "dt_bias": jnp.full((d_in,), -4.6, cfg.pdtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(cfg.pdtype),
+        "D": jnp.ones((d_in,), cfg.pdtype),
+        "w_out": scaled_normal(ks["out"], (d_in, d), d_in, cfg.pdtype),
+    }
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "w_in": ("p_embed", "p_ffn"),
+        "conv": (None, "p_ffn"),
+        "conv_b": ("p_ffn",),
+        "w_x": ("p_ffn", None),
+        "w_dt": (None, "p_ffn"),
+        "dt_bias": ("p_ffn",),
+        "A_log": ("p_ffn", None),
+        "D": ("p_ffn",),
+        "w_out": ("p_ffn", "p_embed"),
+    }
+
+
+def _ssm_chunk_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Within-chunk associative scan of h_t = dA_t*h_{t-1} + dBx_t.
+
+    dA/dBx: (B, c, d_in, n); h0: (B, d_in, n).  Returns (h_all, h_last).
+    """
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    a_all, b_all = lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = a_all * h0[:, None] + b_all
+    return h_all, h_all[:, -1]
+
+
+def _selective_ssm(p: Dict, cfg: ArchConfig, x: jax.Array, h0: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d_in) post-conv activations; h0: (B, d_in, n)."""
+    b, s, d_in = x.shape
+    _, n, _, dt_rank = _dims(cfg)
+    c = min(cfg.mamba_chunk, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+
+    proj = jnp.einsum("bsd,dr->bsr", xf, p["w_x"].astype(jnp.float32))
+    dt_r, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r,
+                                    p["w_dt"].astype(jnp.float32))
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (d_in, n)
+    dA = jnp.exp(dt[..., None] * A[None, None])                   # (B,S,d_in,n)
+    dBx = dt[..., None] * B_[:, :, None, :] * xf[..., None]       # (B,S,d_in,n)
+
+    dA_c = dA.reshape(b, n_chunks, c, d_in, n).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(b, n_chunks, c, d_in, n).transpose(1, 0, 2, 3, 4)
+    C_c = C_.reshape(b, n_chunks, c, n).transpose(1, 0, 2, 3)
+
+    def body(h, blk):
+        dA_b, dBx_b, C_b = blk
+        h_all, h_last = _ssm_chunk_scan(dA_b, dBx_b, h)
+        y_b = jnp.einsum("bcdn,bcn->bcd", h_all, C_b)
+        return h_last, y_b
+
+    h_last, y = lax.scan(body, h0.astype(jnp.float32), (dA_c, dBx_c, C_c))
+    y = y.transpose(1, 0, 2, 3).reshape(b, n_chunks * c, d_in)[:, :s]
+    y = y + xf[:, :s] * p["D"].astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def _causal_conv(p: Dict, x: jax.Array, ctx: Optional[jax.Array] = None
+                 ) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, d_in); ctx: (B, d_conv-1, d_in)
+    carried context for decode (zeros for a fresh sequence)."""
+    w = p["conv"].astype(jnp.float32)                 # (d_conv, d_in)
+    d_conv = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if ctx is None:
+        ctx = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), jnp.float32)
+    xp = jnp.concatenate([ctx.astype(jnp.float32), xf], axis=1)
+    out = sum(xp[:, i:i + xf.shape[1]] * w[i][None, None]
+              for i in range(d_conv))
+    return (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_block(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba mixer.  x: (B, S, d)."""
+    d_in, n, d_conv, _ = _dims(cfg)
+    dt = cfg.adtype
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", None, "ffn")
+    xs = jax.nn.silu(_causal_conv(p, xs).astype(jnp.float32)).astype(dt)
+    h0 = jnp.zeros((x.shape[0], d_in, n), jnp.float32)
+    y, _ = _selective_ssm(p, cfg, xs, h0)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt))
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Dict:
+    d_in, n, d_conv, _ = _dims(cfg)
+    return {"h": jnp.zeros((batch, d_in, n), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, d_in), cfg.adtype)}
+
+
+def mamba_state_specs() -> Dict:
+    return {"h": ("batch", "p_ffn", None), "conv": ("batch", None, "p_ffn")}
+
+
+def mamba_decode_step(p: Dict, cfg: ArchConfig, x: jax.Array, state: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode.  x: (B, 1, d)."""
+    d_in, n, d_conv, _ = _dims(cfg)
+    dt_ = cfg.adtype
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_ctx = state["conv"]
+    xs_c = _causal_conv(p, xs, ctx=conv_ctx)
+    xs_act = jax.nn.silu(xs_c.astype(jnp.float32)).astype(dt_)
+    new_conv = jnp.concatenate([conv_ctx[:, 1:], xs.astype(conv_ctx.dtype)],
+                               axis=1) if d_conv > 1 else conv_ctx
+    y, h_new = _selective_ssm(p, cfg, xs_act, state["h"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    return out, {"h": h_new, "conv": new_conv}

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts block: softmax top-k routing, shared experts, and a
+sort-based capacity dispatch (static shapes, MXU-friendly batched expert
+einsum, token dropping above capacity) -- the TPU-native formulation of
+"send each token to its expert" (no ragged shapes, no host control flow).
+
+Covers: qwen2-moe (60 routed top-4 + 4 shared), llama4-scout (16 routed
+top-1 + 1 shared), jamba (16 routed top-2, MoE every 2nd layer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig, scaled_normal, split_keys
+from .layers import apply_mlp, init_mlp, mlp_specs
+from .sharding import rule_axis_size, shard
+
+
+def init_moe(key, cfg: ArchConfig) -> Dict:
+    d, f, e = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    ks = split_keys(key, ["router", "wi", "wg", "wo", "shared"])
+    p = {
+        "router": scaled_normal(ks["router"], (d, e), d, jnp.float32),
+        "wi": scaled_normal(ks["wi"], (e, d, f), d, cfg.pdtype),
+        "wg": scaled_normal(ks["wg"], (e, d, f), d, cfg.pdtype),
+        "wo": scaled_normal(ks["wo"], (e, f, d), f, cfg.pdtype),
+    }
+    if cfg.n_shared_experts > 0:
+        shared_cfg_ff = cfg.n_shared_experts * cfg.expert_ff
+        p["shared"] = init_mlp(ks["shared"], cfg, d_ff=shared_cfg_ff)
+    return p
+
+
+def moe_specs(cfg: ArchConfig) -> Dict:
+    s = {
+        "router": ("p_embed", None),
+        "wi": ("p_experts", "p_embed", "p_ffn"),
+        "wg": ("p_experts", "p_embed", "p_ffn"),
+        "wo": ("p_experts", "p_ffn", "p_embed"),
+    }
+    if cfg.n_shared_experts > 0:
+        s["shared"] = mlp_specs(cfg)
+    return s
+
+
+def _capacity(cfg: ArchConfig, group_tokens: int) -> int:
+    """Per-dispatch-group expert capacity (group = one batch row)."""
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(cfg.capacity_factor * group_tokens * k / e)
+    if group_tokens * k <= 128:          # decode-sized groups: no 128 padding
+        return max(1, cap)
+    return max(128, -(-cap // 128) * 128)  # 128-aligned (MXU + shardable)
+
+
+def apply_moe(p: Dict, cfg: ArchConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (y, aux_loss).
+
+    GROUPED sort-based dispatch: every batch row routes its own S*k
+    (token, expert) entries -- top-k, per-row stable sort by expert id,
+    per-row capacity ``cf * S * k / E``, batched gather into a
+    (B, E, C, d) buffer, batched expert SwiGLU, gate-weighted combine.
+
+    Keeping the dispatch *within* a batch row means all sorting/scatter
+    stays local to the data shard that owns the row (no global argsort, no
+    cross-shard scatter collectives), which is what makes MoE scale on the
+    (pod, data, model) mesh; the hierarchical equivalent of per-device
+    all-to-all dispatch in expert-parallel systems.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    if s == 1 and b > 1:
+        # decode: regroup single-token rows into one dispatch group per data
+        # shard so expert capacity amortizes over the local batch instead of
+        # padding every token to a full expert row
+        g_rows = next((g for g in (16, 8, 4, 2) if b % g == 0), 1)
+        if g_rows > 1:
+            y, aux = apply_moe(p, cfg, x.reshape(b // g_rows, g_rows, d))
+            return y.reshape(b, s, d), aux
+    n = s * k                                   # dispatch entries per row
+    cap = _capacity(cfg, s)
+    dt = cfg.adtype
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style; one-hot, no scatter)
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = jax.nn.one_hot(eidx, e, dtype=jnp.float32).mean(axis=(0, 1, 2))
+    aux = e * jnp.sum(me * ce)
+
+    # --- per-row sort-based dispatch (GATHER-ONLY for tensor data: the big
+    # (.., d)-shaped tensors only move through take_along_axis; scatters
+    # touch int32 index arrays, which keeps the XLA SPMD lowering local and
+    # cheap on every backend) ---
+    flat_e = eidx.reshape(b, n)
+    order = jnp.argsort(flat_e, axis=1, stable=True)          # (B, n)
+    inv_order = jnp.argsort(order, axis=1)                    # unsort perm
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # position within the expert group = index - first occurrence index
+    first_of = jax.vmap(lambda r: jnp.searchsorted(r, r, side="left"))(sorted_e)
+    pos_in_grp = jnp.arange(n)[None, :] - first_of
+    keep = pos_in_grp < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_grp, e * cap)  # (B, n)
+    token_of = order // k                                     # (B, n)
+
+    rows = jnp.arange(b)[:, None]
+    # slot -> source token (int32 scatter; n = S*k entries, tiny)
+    src_token = jnp.full((b, e * cap + 1), s, jnp.int32).at[rows, slot].set(
+        token_of.astype(jnp.int32), mode="drop")
+    x_pad = jnp.concatenate([x.astype(dt), jnp.zeros((b, 1, d), dt)], axis=1)
+    buf = jnp.take_along_axis(x_pad, src_token[:, : e * cap, None], axis=1)
+    buf = buf.reshape(b, e, cap, d)
+
+    # --- expert compute: EP when the rules shard p_experts (pad E up to the
+    # axis size; the sharding constraint below reshapes (data-local, E-repl)
+    # -> (data-local, E-sharded), which GSPMD lowers to the dispatch
+    # all-to-all), TP-ffn otherwise ---
+    ep = rule_axis_size("p_experts")
+    e_pad = -(-e // ep) * ep if ep > 1 else e
+    wi, wg, wo = (p[k_].astype(dt) for k_ in ("wi", "wg", "wo"))
+    if e_pad != e:
+        padw = ((0, e_pad - e), (0, 0), (0, 0))
+        wi, wg, wo = (jnp.pad(w_, padw) for w_ in (wi, wg, wo))
+        buf = jnp.pad(buf, ((0, 0), (0, e_pad - e), (0, 0), (0, 0)))
+    buf = shard(buf, "batch", "p_experts", "exp_cap", None)   # <- a2a in
+    h = jnp.einsum("becd,edf->becf", buf, wi)
+    g = jnp.einsum("becd,edf->becf", buf, wg)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    h = shard(h, "batch", "p_experts", "exp_cap", "ffn")
+    y_e = jnp.einsum("becf,efd->becd", h, wo)
+    y_e = shard(y_e, "batch", None, None, None)               # <- a2a out (local combine)
+    if e_pad != e:
+        y_e = y_e[:, :e]
+
+    # --- combine: gather per entry, gate-weight, unsort, sum over k ---
+    y_flat = jnp.concatenate([y_e.reshape(b, e * cap, d),
+                              jnp.zeros((b, 1, d), dt)], axis=1)
+    per_entry = jnp.take_along_axis(y_flat, slot[..., None], axis=1)  # (B,n,d)
+    gate_sorted = jnp.take_along_axis(gate.reshape(b, n), order, axis=1)
+    per_entry = per_entry * gate_sorted[..., None].astype(dt)
+    per_entry = jnp.take_along_axis(per_entry, inv_order[..., None], axis=1)
+    y = per_entry.reshape(b, s, k, d).sum(axis=2)
+    y = shard(y, "batch", "seq_sp", None)     # back to the SP residual layout
+
+    if cfg.n_shared_experts > 0:
+        y = y + apply_mlp(p["shared"], cfg, x)   # dense shared expert stays SP
+    return y, aux

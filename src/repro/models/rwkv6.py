@@ -1,0 +1,189 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Per head (size 64), the WKV state S in R^{hd x hd} evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (w_t data-dependent)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Attention-free: state is constant-size, so decode cost is O(1) per token and
+the 500k long-context shape is natural.  The full-sequence path scans over
+time in chunks (states carried across chunks; within a chunk the recurrence
+is unrolled as a scan over steps on (B, H, hd, hd) states).
+
+Token-shift low-rank interpolation (ddlerp) follows the Finch paper with a
+single shared LoRA per projection set, kept small (rank 32).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import ArchConfig, scaled_normal, split_keys
+from .sharding import shard
+
+LORA_RANK = 32
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_size
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_time_mix(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    h, hd = _dims(cfg)
+    ks = split_keys(key, ["r", "k", "v", "g", "o", "w1", "w2", "mix"])
+    return {
+        "w_r": scaled_normal(ks["r"], (d, d), d, cfg.pdtype),
+        "w_k": scaled_normal(ks["k"], (d, d), d, cfg.pdtype),
+        "w_v": scaled_normal(ks["v"], (d, d), d, cfg.pdtype),
+        "w_g": scaled_normal(ks["g"], (d, d), d, cfg.pdtype),
+        "w_o": scaled_normal(ks["o"], (d, d), d, cfg.pdtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x W1) W2))
+        "decay_w0": jnp.full((d,), -6.0, cfg.pdtype),
+        "decay_w1": scaled_normal(ks["w1"], (d, LORA_RANK), d, cfg.pdtype),
+        "decay_w2": scaled_normal(ks["w2"], (LORA_RANK, d), LORA_RANK, cfg.pdtype),
+        "bonus_u": jnp.zeros((h, hd), cfg.pdtype),
+        "mix": jax.random.uniform(ks["mix"], (5, d), cfg.pdtype, 0.0, 1.0),
+        "ln_x": jnp.ones((d,), cfg.pdtype),
+    }
+
+
+def rwkv_time_mix_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "w_r": ("p_embed", "p_ffn"), "w_k": ("p_embed", "p_ffn"),
+        "w_v": ("p_embed", "p_ffn"), "w_g": ("p_embed", "p_ffn"),
+        "w_o": ("p_ffn", "p_embed"),
+        "decay_w0": (None,), "decay_w1": ("p_embed", None),
+        "decay_w2": (None, None), "bonus_u": ("p_heads", None),
+        "mix": (None, None), "ln_x": (None,),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ArchConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, ["k", "v", "r", "mix"])
+    return {
+        "w_k": scaled_normal(ks["k"], (d, f), d, cfg.pdtype),
+        "w_v": scaled_normal(ks["v"], (f, d), f, cfg.pdtype),
+        "w_r": scaled_normal(ks["r"], (d, d), d, cfg.pdtype),
+        "mix": jax.random.uniform(ks["mix"], (2, d), cfg.pdtype, 0.0, 1.0),
+    }
+
+
+def rwkv_channel_mix_specs(cfg: ArchConfig) -> Dict:
+    return {"w_k": ("p_embed", "p_ffn"), "w_v": ("p_ffn", "p_embed"),
+            "w_r": ("p_embed", "p_embed"), "mix": (None, None)}
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """shifted[t] = x[t-1]; position 0 takes ``last`` (decode carry)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); s0: (B,H,hd,hd).
+
+    Returns (out (B,T,H,hd), s_last).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)     # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    rt = jnp.moveaxis(r, 1, 0)
+    kt = jnp.moveaxis(k, 1, 0)
+    vt = jnp.moveaxis(v, 1, 0)
+    wt = jnp.moveaxis(w, 1, 0)
+    s_last, out = lax.scan(step, s0, (rt, kt, vt, wt))
+    return jnp.moveaxis(out, 0, 1), s_last
+
+
+def rwkv_time_mix(p: Dict, cfg: ArchConfig, x: jax.Array,
+                  state: Dict | None = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, T, d).  state: {"shift": (B,d), "wkv": (B,H,hd,hd)} or None."""
+    b, t, d = x.shape
+    h, hd = _dims(cfg)
+    f32 = jnp.float32
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype),
+                 "wkv": jnp.zeros((b, h, hd, hd), f32)}
+    xs = _token_shift(x, state["shift"])
+    mix = p["mix"].astype(x.dtype)                      # (5, d)
+    xr, xk, xv, xg, xw = [x + (xs - x) * mix[i] for i in range(5)]
+
+    dt = cfg.adtype
+    r = jnp.einsum("btd,de->bte", xr, p["w_r"].astype(dt))
+    k = jnp.einsum("btd,de->bte", xk, p["w_k"].astype(dt))
+    v = jnp.einsum("btd,de->bte", xv, p["w_v"].astype(dt))
+    g = jnp.einsum("btd,de->bte", xg, p["w_g"].astype(dt))
+    # data-dependent decay (f32; exp(-exp(.)) in (0,1))
+    lo = jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(f32),
+                             p["decay_w1"].astype(f32)))
+    wlog = p["decay_w0"].astype(f32) + jnp.einsum(
+        "btr,rd->btd", lo, p["decay_w2"].astype(f32))
+    w = jnp.exp(-jnp.exp(wlog))
+
+    shp = (b, t, h, hd)
+    rf, kf, vf = (z.astype(f32).reshape(shp) for z in (r, k, v))
+    wf = w.reshape(shp)
+    uf = p["bonus_u"].astype(f32)
+    if cfg.wkv_impl == "kernel_stub":
+        # traffic-equivalent stand-in for the Pallas WKV kernel: one pass
+        # over the four streams, output stream written once, state carried
+        # in VMEM (so it never appears as per-step HBM traffic).  The real
+        # kernel (kernels/rwkv6_scan.py) computes the exact recurrence and
+        # is validated against _wkv_scan in tests/test_kernels.py.
+        out = rf * (kf * vf + uf[None, None] * wf)
+        s_last = state["wkv"] + jnp.einsum("bhk,bhv->bhkv", kf[:, -1], vf[:, -1])
+    else:
+        out, s_last = _wkv_scan(rf, kf, vf, wf, uf, state["wkv"])
+    out = out.reshape(b, t, d)
+    # groupnorm-ish per-head ln_x then gate
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * lax.rsqrt(var + 1e-5) * p["ln_x"].astype(f32)
+    out = out.astype(dt) * jax.nn.silu(g.astype(f32)).astype(dt)
+    y = jnp.einsum("bte,ed->btd", out, p["w_o"].astype(dt))
+    new_state = {"shift": x[:, -1, :], "wkv": s_last}
+    return shard(y, "batch", "seq_sp", None), new_state
+
+
+def rwkv_channel_mix(p: Dict, cfg: ArchConfig, x: jax.Array,
+                     state: Dict | None = None) -> Tuple[jax.Array, Dict]:
+    b, t, d = x.shape
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype)}
+    xs = _token_shift(x, state["shift"])
+    mix = p["mix"].astype(x.dtype)
+    xk = x + (xs - x) * mix[0]
+    xr = x + (xs - x) * mix[1]
+    dt = cfg.adtype
+    k = jnp.einsum("btd,df->btf", xk, p["w_k"].astype(dt))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(dt)
+    k = shard(k, "batch", None, "ffn")
+    v = jnp.einsum("btf,fd->btd", k, p["w_v"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                  p["w_r"].astype(dt)).astype(jnp.float32))
+    y = v * r.astype(dt)
+    return y, {"shift": x[:, -1, :]}
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> Dict:
+    h, hd = _dims(cfg)
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), cfg.adtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), cfg.adtype),
+    }
+
+
+def rwkv_state_specs() -> Dict:
+    return {"tm_shift": ("batch", None), "wkv": ("batch", "p_heads", None, None),
+            "cm_shift": ("batch", None)}

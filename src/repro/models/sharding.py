@@ -1,0 +1,111 @@
+"""Logical-axis sharding: models annotate activations with logical names;
+the launcher installs a rules table mapping logical names -> mesh axes.
+
+Outside a rules context every annotation is a no-op, so smoke tests and
+benchmarks on the single CPU device never touch device state.  Divisibility
+is checked per annotation: a logical dim that does not divide over its mesh
+axes silently falls back to replication (e.g. 8 kv heads over a 16-way model
+axis, or 60 experts over 16).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, AxisSpec]]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, AxisSpec]):
+    """Install (mesh, logical->mesh-axes) rules for model tracing."""
+    prev = _current()
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def resolve_axis(name: Optional[str], dim: int,
+                 mesh: Mesh, rules: Dict[str, AxisSpec]) -> AxisSpec:
+    """Mesh axes for one logical dim, with divisibility fallback."""
+    if name is None:
+        return None
+    axes = rules.get(name)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if dim % total != 0:
+        return None  # replicate rather than pad
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_spec(names: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: Dict[str, AxisSpec]) -> P:
+    assert len(names) == len(shape), (names, shape)
+    out = []
+    used: set = set()
+    for n, d in zip(names, shape):
+        axes = resolve_axis(n, d, mesh, rules)
+        tup = (axes,) if isinstance(axes, str) else (axes or ())
+        if any(a in used for a in tup):
+            axes = None        # keep-first: a mesh axis shards at most one dim
+        else:
+            used.update(tup)
+        out.append(axes)
+    return P(*out)
+
+
+def rule_axis_size(name: str) -> int:
+    """Total mesh-axis size a logical name maps to (1 outside a context or
+    when unmapped).  Lets modules adapt their structure to the rules (e.g.
+    expert-parallel padding)."""
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    axes = rules.get(name)
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return total
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axis names (no-op outside a
+    rules context)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree_to_shardings(spec_tree, shape_tree, mesh: Mesh,
+                           rules: Dict[str, AxisSpec]):
+    """Resolve a tree of logical-name tuples against a matching tree of
+    ShapeDtypeStructs into NamedShardings (for jit in_shardings)."""
+    def one(names, sds):
+        return NamedSharding(mesh, logical_spec(names, sds.shape, mesh, rules))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

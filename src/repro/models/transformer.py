@@ -1,0 +1,411 @@
+"""Unified model assembly for all 10 architectures.
+
+* dense / moe / vlm: homogeneous [attn + (mlp|moe)] blocks -> ``lax.scan``
+  over stacked layer params (+ optional remat), so HLO size and compile time
+  are independent of depth (95-layer deepseek compiles as fast as 16-layer
+  olmo).
+* hybrid (jamba): layers are stacked in *periods* of ``attn_layer_period``
+  (8) -- scan over periods, an unrolled python loop over the 8 in-period
+  sublayers (1 attention + 7 mamba; MoE on every 2nd layer).
+* ssm (rwkv6): homogeneous [time-mix + channel-mix] scan.
+* audio (whisper): encoder-decoder, see ``whisper.py``; dispatched here.
+
+Public entry points: ``init_params`` / ``param_specs`` / ``forward`` (loss) /
+``init_decode_state`` / ``decode_state_specs`` / ``serve_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (attention_block, attention_specs, decode_attention,
+                        init_attention, init_kv_cache, kv_cache_specs)
+from .base import ArchConfig, split_keys
+from .layers import (apply_mlp, apply_norm, cross_entropy, embed_inputs,
+                     embedding_specs, init_embedding, init_lm_head, init_mlp,
+                     init_norm, lm_head_specs, logits_fn, mlp_specs,
+                     norm_specs)
+from .mamba import (init_mamba, init_mamba_state, mamba_block,
+                    mamba_decode_step, mamba_specs, mamba_state_specs)
+from .moe import apply_moe, init_moe, moe_specs
+from .rwkv6 import (init_rwkv_channel_mix, init_rwkv_state, init_rwkv_time_mix,
+                    rwkv_channel_mix, rwkv_channel_mix_specs, rwkv_state_specs,
+                    rwkv_time_mix, rwkv_time_mix_specs)
+from .sharding import shard
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/specs
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _with_layer_dim(specs: Dict) -> Dict:
+    """Prefix every leaf tuple with the stacked-layer dim (replicated)."""
+    def f(leaf):
+        return (None,) + leaf
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _dense_layer_init(cfg: ArchConfig, moe_layer: bool):
+    def init(key):
+        ks = split_keys(key, ["ln1", "attn", "ln2", "ffn"])
+        p = {"ln1": init_norm(ks["ln1"], cfg),
+             "attn": init_attention(ks["attn"], cfg),
+             "ln2": init_norm(ks["ln2"], cfg)}
+        p["ffn"] = init_moe(ks["ffn"], cfg) if moe_layer else init_mlp(ks["ffn"], cfg)
+        return p
+    return init
+
+
+def _dense_layer_specs(cfg: ArchConfig, moe_layer: bool) -> Dict:
+    return {"ln1": norm_specs(cfg), "attn": attention_specs(cfg),
+            "ln2": norm_specs(cfg),
+            "ffn": moe_specs(cfg) if moe_layer else mlp_specs(cfg)}
+
+
+def _rwkv_layer_init(cfg: ArchConfig):
+    def init(key):
+        ks = split_keys(key, ["ln1", "tm", "ln2", "cm"])
+        return {"ln1": init_norm(ks["ln1"], cfg),
+                "tm": init_rwkv_time_mix(ks["tm"], cfg),
+                "ln2": init_norm(ks["ln2"], cfg),
+                "cm": init_rwkv_channel_mix(ks["cm"], cfg)}
+    return init
+
+
+def _rwkv_layer_specs(cfg: ArchConfig) -> Dict:
+    return {"ln1": norm_specs(cfg), "tm": rwkv_time_mix_specs(cfg),
+            "ln2": norm_specs(cfg), "cm": rwkv_channel_mix_specs(cfg)}
+
+
+def _jamba_period_init(cfg: ArchConfig):
+    """One period = ``attn_layer_period`` sublayers."""
+    period = cfg.attn_layer_period
+
+    def init(key):
+        keys = jax.random.split(key, period)
+        subs = []
+        for j in range(period):
+            ks = split_keys(keys[j], ["ln1", "mix", "ln2", "ffn"])
+            p = {"ln1": init_norm(ks["ln1"], cfg), "ln2": init_norm(ks["ln2"], cfg)}
+            p["mix"] = (init_attention(ks["mix"], cfg) if cfg.is_attn_layer(j)
+                        else init_mamba(ks["mix"], cfg))
+            p["ffn"] = (init_moe(ks["ffn"], cfg) if cfg.is_moe_layer(j)
+                        else init_mlp(ks["ffn"], cfg))
+            subs.append(p)
+        return {f"sub{j}": subs[j] for j in range(period)}
+    return init
+
+
+def _jamba_period_specs(cfg: ArchConfig) -> Dict:
+    period = cfg.attn_layer_period
+    out = {}
+    for j in range(period):
+        s = {"ln1": norm_specs(cfg), "ln2": norm_specs(cfg)}
+        s["mix"] = attention_specs(cfg) if cfg.is_attn_layer(j) else mamba_specs(cfg)
+        s["ffn"] = moe_specs(cfg) if cfg.is_moe_layer(j) else mlp_specs(cfg)
+        out[f"sub{j}"] = s
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    if cfg.encoder_decoder:
+        from .whisper import init_whisper
+        return init_whisper(key, cfg)
+    ks = split_keys(key, ["embed", "layers", "final", "head"])
+    p: Dict[str, Any] = {"embedding": init_embedding(ks["embed"], cfg)}
+    if cfg.rwkv:
+        p["layers"] = _stack_init(ks["layers"], cfg.n_layers, _rwkv_layer_init(cfg))
+    elif cfg.attn_layer_period > 0:
+        n_periods = cfg.n_layers // cfg.attn_layer_period
+        p["layers"] = _stack_init(ks["layers"], n_periods, _jamba_period_init(cfg))
+    else:
+        moe_layer = cfg.moe and cfg.moe_every == 1
+        if cfg.moe and cfg.moe_every != 1:
+            raise NotImplementedError("interleaved MoE only via attn_layer_period")
+        p["layers"] = _stack_init(ks["layers"], cfg.n_layers,
+                                  _dense_layer_init(cfg, moe_layer))
+    p["final_norm"] = init_norm(ks["final"], cfg)
+    p["lm_head"] = init_lm_head(ks["head"], cfg)
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> Dict:
+    if cfg.encoder_decoder:
+        from .whisper import whisper_specs
+        return whisper_specs(cfg)
+    if cfg.rwkv:
+        layer = _rwkv_layer_specs(cfg)
+    elif cfg.attn_layer_period > 0:
+        layer = _jamba_period_specs(cfg)
+    else:
+        layer = _dense_layer_specs(cfg, cfg.moe and cfg.moe_every == 1)
+    return {"embedding": embedding_specs(cfg),
+            "layers": _with_layer_dim(layer),
+            "final_norm": norm_specs(cfg),
+            "lm_head": lm_head_specs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block(lp: Dict, cfg: ArchConfig, moe_layer: bool,
+                 x: jax.Array, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = apply_norm(lp["ln1"], cfg, x)
+    x = x + attention_block(lp["attn"], cfg, h, positions)
+    h = apply_norm(lp["ln2"], cfg, x)
+    if moe_layer:
+        y, aux = apply_moe(lp["ffn"], cfg, h)
+    else:
+        y, aux = apply_mlp(lp["ffn"], cfg, h), jnp.float32(0.0)
+    x = shard(x + y, "batch", "seq_sp", None)
+    return x, aux
+
+
+def _jamba_period_block(pp: Dict, cfg: ArchConfig, x: jax.Array,
+                        positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    aux_total = jnp.float32(0.0)
+    for j in range(cfg.attn_layer_period):
+        lp = pp[f"sub{j}"]
+        h = apply_norm(lp["ln1"], cfg, x)
+        if cfg.is_attn_layer(j):
+            x = x + attention_block(lp["mix"], cfg, h, positions)
+        else:
+            x = x + mamba_block(lp["mix"], cfg, h)
+        h = apply_norm(lp["ln2"], cfg, x)
+        if cfg.is_moe_layer(j):
+            y, aux = apply_moe(lp["ffn"], cfg, h)
+            aux_total = aux_total + aux
+        else:
+            y = apply_mlp(lp["ffn"], cfg, h)
+        x = shard(x + y, "batch", "seq_sp", None)
+    return x, aux_total
+
+
+def _rwkv_block(lp: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = apply_norm(lp["ln1"], cfg, x)
+    y, _ = rwkv_time_mix(lp["tm"], cfg, h)
+    x = x + y
+    h = apply_norm(lp["ln2"], cfg, x)
+    y, _ = rwkv_channel_mix(lp["cm"], cfg, h)
+    return shard(x + y, "batch", "seq_sp", None)
+
+
+def backbone(params: Dict, cfg: ArchConfig, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Token embeddings -> final norm output.  Returns (hidden, aux_loss)."""
+    if cfg.rwkv:
+        def body(carry, lp):
+            return _rwkv_block(lp, cfg, carry), jnp.float32(0.0)
+    elif cfg.attn_layer_period > 0:
+        def body(carry, lp):
+            return _jamba_period_block(lp, cfg, carry, positions)
+    else:
+        moe_layer = cfg.moe and cfg.moe_every == 1
+
+        def body(carry, lp):
+            return _dense_block(lp, cfg, moe_layer, carry, positions)
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = lax.scan(body, x, params["layers"])
+    x = apply_norm(params["final_norm"], cfg, x)
+    return x, jnp.sum(aux)
+
+
+def forward(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Training loss.  batch: inputs (tokens (B,S) or embeddings (B,S,d)),
+    labels (B,S), optional positions ((B,S) or (3,B,S) for M-RoPE)."""
+    if cfg.encoder_decoder:
+        from .whisper import whisper_forward
+        return whisper_forward(params, cfg, batch)
+    inputs = batch["inputs"]
+    bsz, seq = (inputs.shape[0], inputs.shape[1])
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq)[None, :], (bsz, seq))
+    x = embed_inputs(params["embedding"], cfg, inputs)
+    h, aux = backbone(params, cfg, x, positions)
+    logits = logits_fn(params, cfg, h)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = loss + AUX_LOSS_COEF * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    """Decode-state pytree sized for a cache of ``max_len`` tokens."""
+    if cfg.encoder_decoder:
+        from .whisper import init_whisper_decode_state
+        return init_whisper_decode_state(cfg, batch, max_len)
+    state: Dict[str, Any] = {"cache_len": jnp.zeros((), jnp.int32)}
+    if cfg.rwkv:
+        state["rwkv"] = jax.vmap(lambda _: init_rwkv_state(cfg, batch))(
+            jnp.arange(cfg.n_layers))
+    elif cfg.attn_layer_period > 0:
+        n_periods = cfg.n_layers // cfg.attn_layer_period
+        n_mamba = cfg.attn_layer_period - 1
+        state["kv"] = init_kv_cache(cfg, batch, max_len, n_layers=n_periods)
+        state["mamba"] = jax.vmap(lambda _: jax.vmap(
+            lambda __: init_mamba_state(cfg, batch))(jnp.arange(n_mamba)))(
+            jnp.arange(n_periods))
+    else:
+        state["kv"] = init_kv_cache(cfg, batch, max_len)
+        if cfg.decode_tail_window > 0:
+            from .attention import init_kv_tail
+            state["tail"] = init_kv_tail(cfg, batch, cfg.decode_tail_window)
+    return state
+
+
+def decode_state_specs(cfg: ArchConfig) -> Dict:
+    if cfg.encoder_decoder:
+        from .whisper import whisper_decode_state_specs
+        return whisper_decode_state_specs(cfg)
+    specs: Dict[str, Any] = {"cache_len": ()}
+    if cfg.rwkv:
+        specs["rwkv"] = _with_layer_dim(rwkv_state_specs())
+    elif cfg.attn_layer_period > 0:
+        # kv_cache_specs already carries the stacked-layer dim
+        specs["kv"] = kv_cache_specs()
+        specs["mamba"] = _with_layer_dim(_with_layer_dim(mamba_state_specs()))
+    else:
+        specs["kv"] = kv_cache_specs()
+        if cfg.decode_tail_window > 0:
+            from .attention import kv_tail_specs
+            specs["tail"] = kv_tail_specs()
+    return specs
+
+
+def serve_step(params: Dict, cfg: ArchConfig, state: Dict, batch: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """One decode step: new token (B,) or embedding (B,1,d) -> logits (B,V).
+
+    The KV cache holds ``state["cache_len"]`` tokens; the step appends one.
+    """
+    if cfg.encoder_decoder:
+        from .whisper import whisper_serve_step
+        return whisper_serve_step(params, cfg, state, batch)
+    inputs = batch["inputs"]
+    if cfg.input_mode == "tokens" and inputs.ndim == 1:
+        inputs = inputs[:, None]
+    x = embed_inputs(params["embedding"], cfg, inputs)       # (B, 1, d)
+    bsz = x.shape[0]
+    clen = state["cache_len"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(clen[None, None], (bsz, 1)).astype(jnp.int32)
+
+    new_state: Dict[str, Any] = {"cache_len": clen + 1}
+
+    if cfg.rwkv:
+        def body(carry, xs):
+            lp, st = xs
+            h = apply_norm(lp["ln1"], cfg, carry)
+            y, tm_state = rwkv_time_mix(lp["tm"], cfg, h,
+                                        {"shift": st["tm_shift"], "wkv": st["wkv"]})
+            carry = carry + y
+            h = apply_norm(lp["ln2"], cfg, carry)
+            y, cm_state = rwkv_channel_mix(lp["cm"], cfg, h,
+                                           {"shift": st["cm_shift"]})
+            carry = carry + y
+            return carry, {"tm_shift": tm_state["shift"], "wkv": tm_state["wkv"],
+                           "cm_shift": cm_state["shift"]}
+        x, rwkv_state = lax.scan(body, x, (params["layers"], state["rwkv"]))
+        new_state["rwkv"] = rwkv_state
+    elif cfg.attn_layer_period > 0:
+        def body(carry, xs):
+            pp, kc, vc, mstates = xs
+            midx = 0
+            new_m = []
+            for j in range(cfg.attn_layer_period):
+                lp = pp[f"sub{j}"]
+                h = apply_norm(lp["ln1"], cfg, carry)
+                if cfg.is_attn_layer(j):
+                    y, kc, vc = decode_attention(lp["mix"], cfg, h, kc, vc,
+                                                 clen, positions)
+                else:
+                    st = jax.tree.map(lambda a: a[midx], mstates)
+                    y, st2 = mamba_decode_step(lp["mix"], cfg, h, st)
+                    new_m.append(st2)
+                    midx += 1
+                carry = carry + y
+                h = apply_norm(lp["ln2"], cfg, carry)
+                if cfg.is_moe_layer(j):
+                    y, _ = apply_moe(lp["ffn"], cfg, h)
+                else:
+                    y = apply_mlp(lp["ffn"], cfg, h)
+                carry = carry + y
+            stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+            return carry, (kc, vc, stacked_m)
+        x, (kc, vc, mstates) = lax.scan(
+            body, x, (params["layers"], state["kv"]["k"], state["kv"]["v"],
+                      state["mamba"]))
+        new_state["kv"] = {"k": kc, "v": vc}
+        new_state["mamba"] = mstates
+    else:
+        moe_layer = cfg.moe and cfg.moe_every == 1
+        tailed = cfg.decode_tail_window > 0
+
+        if tailed:
+            from .attention import decode_attention_tailed
+
+            def body(carry, xs):
+                lp, kc, vc, tk, tv = xs
+                h = apply_norm(lp["ln1"], cfg, carry)
+                y, tk, tv = decode_attention_tailed(
+                    lp["attn"], cfg, h, kc, vc, tk, tv, clen, positions)
+                carry = carry + y
+                h = apply_norm(lp["ln2"], cfg, carry)
+                if moe_layer:
+                    y, _ = apply_moe(lp["ffn"], cfg, h)
+                else:
+                    y = apply_mlp(lp["ffn"], cfg, h)
+                carry = carry + y
+                return carry, (tk, tv)
+            x, (tk, tv) = lax.scan(
+                body, x, (params["layers"], state["kv"]["k"],
+                          state["kv"]["v"], state["tail"]["k"],
+                          state["tail"]["v"]))
+            new_state["kv"] = state["kv"]          # main written only by flush
+            new_state["tail"] = {"k": tk, "v": tv}
+        else:
+            def body(carry, xs):
+                lp, kc, vc = xs
+                h = apply_norm(lp["ln1"], cfg, carry)
+                y, kc, vc = decode_attention(lp["attn"], cfg, h, kc, vc, clen,
+                                             positions)
+                carry = carry + y
+                h = apply_norm(lp["ln2"], cfg, carry)
+                if moe_layer:
+                    y, _ = apply_moe(lp["ffn"], cfg, h)
+                else:
+                    y = apply_mlp(lp["ffn"], cfg, h)
+                carry = carry + y
+                return carry, (kc, vc)
+            x, (kc, vc) = lax.scan(body, x,
+                                   (params["layers"], state["kv"]["k"],
+                                    state["kv"]["v"]))
+            new_state["kv"] = {"k": kc, "v": vc}
+
+    h = apply_norm(params["final_norm"], cfg, x)
+    logits = logits_fn(params, cfg, h)[:, 0, :]
+    return logits, new_state

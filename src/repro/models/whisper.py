@@ -1,0 +1,259 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+Per the assignment, the conv/mel frontend is a STUB -- ``inputs`` are
+precomputed frame embeddings (B, T_enc, d) passed through a linear adapter.
+Encoder: bidirectional attention + sinusoidal positions.  Decoder: causal
+self-attention + cross-attention to the encoder output, learned positions
+(whisper's real table is 448 entries; longer assigned shapes clip into it --
+they exercise sharding/caching, not speech modeling).  LayerNorm + GELU
+(non-gated), pre-norm, as in the original.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (attention_block, attention_specs, decode_attention,
+                        init_attention, init_kv_cache, kv_cache_specs)
+from .base import ArchConfig, scaled_normal, split_keys
+from .layers import (apply_mlp, apply_norm, cross_entropy, init_mlp, init_norm,
+                     logits_fn, mlp_specs, norm_specs, sinusoidal_positions)
+from .sharding import shard
+
+WHISPER_MAX_TARGET_POSITIONS = 448
+
+
+def _stack_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _enc_layer_init(cfg: ArchConfig):
+    def init(key):
+        ks = split_keys(key, ["ln1", "attn", "ln2", "mlp"])
+        return {"ln1": init_norm(ks["ln1"], cfg),
+                "attn": init_attention(ks["attn"], cfg),
+                "ln2": init_norm(ks["ln2"], cfg),
+                "mlp": init_mlp(ks["mlp"], cfg)}
+    return init
+
+
+def _dec_layer_init(cfg: ArchConfig):
+    def init(key):
+        ks = split_keys(key, ["ln1", "self", "ln2", "cross", "ln3", "mlp"])
+        return {"ln1": init_norm(ks["ln1"], cfg),
+                "self_attn": init_attention(ks["self"], cfg),
+                "ln2": init_norm(ks["ln2"], cfg),
+                "cross_attn": init_attention(ks["cross"], cfg),
+                "ln3": init_norm(ks["ln3"], cfg),
+                "mlp": init_mlp(ks["mlp"], cfg)}
+    return init
+
+
+def init_whisper(key, cfg: ArchConfig) -> Dict:
+    ks = split_keys(key, ["adapter", "enc", "encn", "emb", "pos", "dec",
+                          "decn", "head"])
+    d = cfg.d_model
+    return {
+        "embedding": {"adapter": scaled_normal(ks["adapter"], (d, d), d,
+                                               cfg.pdtype)},
+        "enc_layers": _stack_init(ks["enc"], cfg.n_encoder_layers,
+                                  _enc_layer_init(cfg)),
+        "enc_norm": init_norm(ks["encn"], cfg),
+        "dec_embed": scaled_normal(ks["emb"], (cfg.vocab_size, d), d, cfg.pdtype),
+        "dec_pos": scaled_normal(ks["pos"], (WHISPER_MAX_TARGET_POSITIONS, d),
+                                 d, cfg.pdtype),
+        "layers": _stack_init(ks["dec"], cfg.n_layers, _dec_layer_init(cfg)),
+        "final_norm": init_norm(ks["decn"], cfg),
+        "lm_head": {"w": scaled_normal(ks["head"], (d, cfg.vocab_size), d,
+                                       cfg.pdtype)},
+    }
+
+
+def whisper_specs(cfg: ArchConfig) -> Dict:
+    def with_layer(s):
+        return jax.tree.map(lambda t: (None,) + t, s,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    enc_layer = {"ln1": norm_specs(cfg), "attn": attention_specs(cfg),
+                 "ln2": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    dec_layer = {"ln1": norm_specs(cfg), "self_attn": attention_specs(cfg),
+                 "ln2": norm_specs(cfg), "cross_attn": attention_specs(cfg),
+                 "ln3": norm_specs(cfg), "mlp": mlp_specs(cfg)}
+    return {
+        "embedding": {"adapter": (None, "p_embed")},
+        "enc_layers": with_layer(enc_layer),
+        "enc_norm": norm_specs(cfg),
+        "dec_embed": ("p_vocab", "p_embed"),
+        "dec_pos": (None, "p_embed"),
+        "layers": with_layer(dec_layer),
+        "final_norm": norm_specs(cfg),
+        "lm_head": {"w": ("p_embed", "p_vocab")},
+    }
+
+
+def encode(params: Dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, d) precomputed embeddings (frontend stub)."""
+    dt = cfg.adtype
+    x = jnp.einsum("btd,de->bte", frames.astype(dt),
+                   params["embedding"]["adapter"].astype(dt))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    x = shard(x, "batch", "seq_sp", None)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(carry, lp):
+        h = apply_norm(lp["ln1"], cfg, carry)
+        carry = carry + attention_block(lp["attn"], cfg, h, positions,
+                                        causal=False)
+        h = apply_norm(lp["ln2"], cfg, carry)
+        carry = shard(carry + apply_mlp(lp["mlp"], cfg, h),
+                      "batch", "seq_sp", None)
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], cfg, x)
+
+
+def _dec_embed(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    dt = cfg.adtype
+    x = jnp.take(params["dec_embed"].astype(dt), tokens, axis=0)
+    pos = jnp.clip(positions, 0, WHISPER_MAX_TARGET_POSITIONS - 1)
+    x = x + jnp.take(params["dec_pos"].astype(dt), pos, axis=0)
+    return shard(x, "batch", "seq_sp", None)
+
+
+def whisper_forward(params: Dict, cfg: ArchConfig, batch: Dict
+                    ) -> Tuple[jax.Array, Dict]:
+    """Teacher-forced training step.
+
+    batch: inputs (B, T_enc, d) frame embeddings; decoder_tokens (B, S);
+    labels (B, S).
+    """
+    enc = encode(params, cfg, batch["inputs"])
+    tokens = batch["decoder_tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _dec_embed(params, cfg, tokens, positions)
+
+    def body(carry, lp):
+        h = apply_norm(lp["ln1"], cfg, carry)
+        carry = carry + attention_block(lp["self_attn"], cfg, h, positions)
+        h = apply_norm(lp["ln2"], cfg, carry)
+        carry = carry + _cross_attention(lp["cross_attn"], cfg, h, enc)
+        h = apply_norm(lp["ln3"], cfg, carry)
+        carry = shard(carry + apply_mlp(lp["mlp"], cfg, h),
+                      "batch", "seq_sp", None)
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["layers"])
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = logits_fn(params, cfg, x)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "aux": jnp.float32(0.0)}
+
+
+def _cross_attention(p: Dict, cfg: ArchConfig, x: jax.Array, enc: jax.Array
+                     ) -> jax.Array:
+    """Full (non-causal) cross-attention; no RoPE (whisper uses none here)."""
+    dt = cfg.adtype
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"].astype(dt))
+    g = cfg.n_heads // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s_ = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32) * hd ** -0.5,
+                    k.astype(jnp.float32))
+    w = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhst,bthk->bshk", w, v.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_whisper_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    L, T = cfg.n_layers, cfg.encoder_seq_len
+    return {
+        "cache_len": jnp.zeros((), jnp.int32),
+        "kv": init_kv_cache(cfg, batch, max_len),
+        "cross_k": jnp.zeros((L, batch, T, kv, hd), cfg.adtype),
+        "cross_v": jnp.zeros((L, batch, T, kv, hd), cfg.adtype),
+    }
+
+
+def whisper_decode_state_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "cache_len": (),
+        "kv": kv_cache_specs(),     # already includes the stacked-layer dim
+        "cross_k": (None, "batch", "cache_seq", "p_kv", None),
+        "cross_v": (None, "batch", "cache_seq", "p_kv", None),
+    }
+
+
+def precompute_cross_kv(params: Dict, cfg: ArchConfig, enc: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Encoder output -> per-layer cross K/V, computed once per request."""
+    dt = cfg.adtype
+
+    def one(lp):
+        k = jnp.einsum("btd,dhk->bthk", enc, lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", enc, lp["cross_attn"]["wv"].astype(dt))
+        return k, v
+
+    return jax.vmap(one)(params["layers"])
+
+
+def whisper_serve_step(params: Dict, cfg: ArchConfig, state: Dict, batch: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    tokens = batch["inputs"]
+    if tokens.ndim == 1:
+        tokens = tokens[:, None]
+    b = tokens.shape[0]
+    clen = state["cache_len"]
+    positions = jnp.broadcast_to(clen[None, None], (b, 1)).astype(jnp.int32)
+    x = _dec_embed(params, cfg, tokens, positions)
+    dt = cfg.adtype
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    g = cfg.n_heads // kv
+
+    def body(carry, xs):
+        lp, kc, vc, ck, cv = xs
+        h = apply_norm(lp["ln1"], cfg, carry)
+        y, kc, vc = decode_attention(lp["self_attn"], cfg, h, kc, vc, clen,
+                                     positions)
+        carry = carry + y
+        # cross attention against precomputed K/V
+        h = apply_norm(lp["ln2"], cfg, carry)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(dt))
+        ck_e = jnp.repeat(ck, g, axis=2) if g > 1 else ck
+        cv_e = jnp.repeat(cv, g, axis=2) if g > 1 else cv
+        s_ = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32) * hd ** -0.5,
+                        ck_e.astype(jnp.float32))
+        w = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhst,bthk->bshk", w, cv_e.astype(jnp.float32)).astype(dt)
+        carry = carry + jnp.einsum("bshk,hkd->bsd", o,
+                                   lp["cross_attn"]["wo"].astype(dt))
+        h = apply_norm(lp["ln3"], cfg, carry)
+        carry = carry + apply_mlp(lp["mlp"], cfg, h)
+        return carry, (kc, vc)
+
+    x, (kc, vc) = lax.scan(body, x, (params["layers"], state["kv"]["k"],
+                                     state["kv"]["v"], state["cross_k"],
+                                     state["cross_v"]))
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = logits_fn(params, cfg, x)[:, 0, :]
+    new_state = dict(state, cache_len=clen + 1, kv={"k": kc, "v": vc})
+    return logits, new_state

@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW with global-norm clipping and warmup-cosine
+schedule, plus error-feedback int8 gradient compression for the cross-pod
+data-parallel hop."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+from .compress import ef_int8_compress_state, ef_int8_psum
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "warmup_cosine",
+    "ef_int8_compress_state",
+    "ef_int8_psum",
+]

@@ -1,0 +1,14 @@
+"""Serving/consumption data plane: replicas (consumers), their lifecycle
+manager, and the end-to-end autoscaling simulation (paper Secs. V-B/V-C)."""
+from .manager import SimulatedReplicaManager
+from .replica import Replica, ReplicaConfig, Sink
+from .simulation import AutoscaleSimulation, SimMetrics
+
+__all__ = [
+    "SimulatedReplicaManager",
+    "Replica",
+    "ReplicaConfig",
+    "Sink",
+    "AutoscaleSimulation",
+    "SimMetrics",
+]

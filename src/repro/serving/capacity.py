@@ -1,0 +1,57 @@
+"""Replica capacity from the compiled roofline (the paper's Fig.-10
+calibration, TPU edition).
+
+The paper measures a consumer's max throughput empirically (~2.3 MB/s) and
+feeds it to the packer as the bin size C.  On the TPU serving fleet the
+equivalent C is the decode throughput of one replica (mesh slice), which we
+derive from the dry-run's compiled ``serve_step``: tokens/s = global_batch /
+dominant roofline term (+ amortized flush for block-buffered decode).
+
+``ControllerConfig(capacity=derived_replica_capacity(...)["tokens_per_s"])``
+closes the loop: the packer sizes the fleet with a capacity that comes from
+the same compiled artifact the dry-run validated.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+DEFAULT_RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "dryrun_results.jsonl")
+
+
+def derived_replica_capacity(arch: str, shape: str = "decode_32k",
+                             mesh: str = "16x16", rules: str = "baseline",
+                             results_path: Optional[str] = None,
+                             bytes_per_token: float = 4.0) -> Dict:
+    path = results_path or DEFAULT_RESULTS
+    best = None
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if (r.get("arch") == arch and r.get("shape") == shape and
+                    r.get("mesh") == mesh and
+                    r.get("rules", "baseline") == rules and "roofline" in r):
+                best = r
+    if best is None:
+        raise KeyError(f"no dry-run record for {arch}/{shape}/{mesh}/{rules}")
+    rl = best["roofline"]
+    step_s = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+    fl = best.get("flush_amortized")
+    if fl:
+        step_s += fl["t_memory_s"] + fl["t_collective_s"]
+    # global_batch tokens are decoded per step across the whole mesh slice
+    from repro.launch.shapes import SHAPES
+    batch = SHAPES[shape].global_batch
+    tok_s = batch / step_s
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "rules": rules,
+        "step_seconds": step_s,
+        "tokens_per_s": tok_s,
+        "bytes_per_s": tok_s * bytes_per_token,
+        "bottleneck": rl["bottleneck"],
+    }

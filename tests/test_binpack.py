@@ -1,0 +1,257 @@
+"""Unit + property tests for the reference bin-packing core (paper Secs. II-B,
+IV-A, IV-B, IV-C)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CLASSICAL,
+    MODIFIED,
+    ALL_ALGORITHMS,
+    capacity_lower_bound,
+    group_view,
+    modified_any_fit,
+    pack,
+    rebalanced_partitions,
+    rscore,
+)
+
+C = 1.0
+
+
+# ---------------------------------------------------------------------------
+# strategies: quantized speeds (k/1024) so float32/float64 sums are exact and
+# the JAX comparison in test_jaxpack.py is bitwise meaningful.
+# ---------------------------------------------------------------------------
+speeds_st = st.lists(
+    st.integers(min_value=0, max_value=2048).map(lambda k: k / 1024.0),
+    min_size=1,
+    max_size=40,
+)
+
+
+def with_prev(draw_speeds, seed):
+    rng = np.random.default_rng(seed)
+    n = len(draw_speeds)
+    prev = {}
+    for j in range(n):
+        c = int(rng.integers(-1, max(1, n // 2)))
+        if c >= 0:
+            prev[j] = c
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# hand-checked examples
+# ---------------------------------------------------------------------------
+def test_ffd_classic_example():
+    speeds = {i: w for i, w in enumerate([0.6, 0.5, 0.4, 0.3, 0.2, 0.1])}
+    res = pack(speeds, C, strategy="first", decreasing=True)
+    assert res.n_bins == 3
+    assert res.composition() == {frozenset({0, 2}), frozenset({1, 3, 4}), frozenset({5})}
+
+
+def test_next_fit_never_looks_back():
+    # NF: 0.6 opens bin0; 0.5 doesn't fit -> bin1; 0.3 fits bin1; 0.4 doesn't
+    # fit bin1 (0.5+0.3+0.4 > 1) -> bin2, even though bin0 had room.
+    speeds = [(0, 0.6), (1, 0.5), (2, 0.3), (3, 0.4)]
+    res = pack(speeds, C, strategy="next")
+    assert res.n_bins == 3
+    assert res.pid_to_bin[3] != res.pid_to_bin[0]
+
+
+def test_best_vs_worst_fit():
+    # bins after [0.5], [0.6]: best-fit puts 0.4 with 0.6 (tightest fit),
+    # worst-fit with 0.5 (most slack).
+    items = [(0, 0.5), (1, 0.6), (2, 0.4)]
+    bf = pack(items, C, strategy="best")
+    wf = pack(items, C, strategy="worst")
+    assert bf.pid_to_bin[2] == bf.pid_to_bin[1]
+    assert wf.pid_to_bin[2] == wf.pid_to_bin[0]
+
+
+def test_oversized_item_gets_dedicated_bin():
+    res = pack({0: 1.5, 1: 0.4, 2: 0.4}, C, strategy="first", decreasing=True)
+    bins = res.bins()
+    big = res.pid_to_bin[0]
+    assert bins[big] == [0]
+    assert res.loads[big] == pytest.approx(1.5)
+    for name, load in res.loads.items():
+        if name != big:
+            assert load <= C + 1e-9
+
+
+def test_sticky_naming_preserves_prev_consumer():
+    prev = {0: 7, 1: 3}
+    res = pack({0: 0.9, 1: 0.8}, C, strategy="first", prev=prev, sticky=True)
+    # each item opens its own bin; sticky naming keeps both at home -> no moves
+    assert res.pid_to_bin == prev
+    assert rscore(prev, res.pid_to_bin, {0: 0.9, 1: 0.8}, C) == 0.0
+
+
+def test_sticky_falls_back_to_lowest_unused_index():
+    # both items previously on consumer 5; they land in one bin named 5, and a
+    # third oversized item (prev consumer also 5) opens the lowest unused = 0.
+    prev = {0: 5, 1: 5, 2: 5}
+    res = pack({0: 0.4, 1: 0.4, 2: 0.9}, C, strategy="first", prev=prev)
+    assert res.pid_to_bin[0] == 5
+    assert res.pid_to_bin[2] == 0
+
+
+def test_rscore_counts_only_moved_previously_assigned():
+    prev = {0: 0, 1: 0, 2: 1}
+    new = {0: 0, 1: 2, 2: 1, 3: 5}   # 1 moved; 3 is newly assigned
+    s = {0: 0.1, 1: 0.25, 2: 0.3, 3: 0.9}
+    assert rebalanced_partitions(prev, new) == {1}
+    assert rscore(prev, new, s, capacity=0.5) == pytest.approx(0.5)
+
+
+def test_modified_any_fit_hand_trace():
+    """Manual trace of Algorithm 1 (MBF, cumulative sort).
+
+    group: c0={p0:0.5, p1:0.3}(cum 0.8), c1={p2:0.6, p3:0.3}(cum 0.9), C=1.
+    Sorted consumers: [c1(0.9), c0(0.8)].
+    c1: no open bins -> phase-1 fails on p3(0.3); create bin c1; insert
+        decreasing: p2(0.6) ok, p3(0.3) ok -> c1 = {p2,p3} load 0.9.
+    c0: phase-1 small->big: p1(0.3) best-fit into c1? load 0.9+0.3>1 -> fail;
+        create bin c0; insert decreasing p0(0.5), p1(0.3) -> c0 load 0.8.
+    No unassigned left.  Nothing moved.
+    """
+    speeds = {0: 0.5, 1: 0.3, 2: 0.6, 3: 0.3}
+    group = {0: [0, 1], 1: [2, 3]}
+    res = modified_any_fit(speeds, C, group, fit="best", sort_key="cumulative")
+    assert res.n_bins == 2
+    assert res.pid_to_bin == {0: 0, 1: 0, 2: 1, 3: 1}
+    prev = {0: 0, 1: 0, 2: 1, 3: 1}
+    assert rscore(prev, res.pid_to_bin, speeds, C) == 0.0
+
+
+def test_modified_any_fit_migrates_small_partitions_into_open_bins():
+    """Phase-1 moves a later consumer's small partitions into earlier bins.
+
+    c0={p0:0.9}, c1={p1:0.05, p2:0.6}: sorted [c0(0.9), c1(0.65)].
+    c0 -> own bin (0.9).  c1 phase-1: p1(0.05) fits into c0's bin (best fit,
+    0.95) -> migrated; p2(0.6) does not fit -> own bin c1.
+    """
+    speeds = {0: 0.9, 1: 0.05, 2: 0.6}
+    group = {0: [0], 1: [1, 2]}
+    res = modified_any_fit(speeds, C, group, fit="best", sort_key="cumulative")
+    assert res.pid_to_bin == {0: 0, 1: 0, 2: 1}
+    assert rscore({0: 0, 1: 1, 2: 1}, res.pid_to_bin, speeds, C) == pytest.approx(0.05)
+
+
+def test_modified_break_semantics_defers_fitting_smaller_items():
+    """Lines 18-25: after the own-bin insert breaks, remaining smaller items
+    go to U even if they would have fit -- they are placed in the final stage.
+
+    c0 = {p0:0.7, p1:0.6, p2:0.2}; no other consumers.
+    phase-1: no bins -> fail on p2.  own bin c0: p0(0.7) ok; p1(0.6) fails ->
+    break; p2(0.2) deferred to U although it fits (0.7+0.2<=1).
+    Final stage: U sorted desc = [p1, p2]; best fit: p1 -> new bin (sticky
+    name: prev consumer 0 taken -> lowest unused 1), p2 -> tightest = bin c0
+    (0.9) vs bin1 (0.6): bin c0.
+    """
+    speeds = {0: 0.7, 1: 0.6, 2: 0.2}
+    group = {0: [0, 1, 2]}
+    res = modified_any_fit(speeds, C, group, fit="best", sort_key="cumulative")
+    assert res.pid_to_bin == {0: 0, 1: 1, 2: 0}
+    assert res.loads == {0: pytest.approx(0.9), 1: pytest.approx(0.6)}
+
+
+def test_max_partition_sort_differs_from_cumulative():
+    # c0: one big partition 0.8 (max 0.8, cum 0.8)
+    # c1: three small 0.3 (max 0.3, cum 0.9)
+    # cumulative order: [c1, c0]; max-partition order: [c0, c1].
+    speeds = {0: 0.8, 1: 0.3, 2: 0.3, 3: 0.3}
+    group = {0: [0], 1: [1, 2, 3]}
+    cum = modified_any_fit(speeds, C, group, fit="best", sort_key="cumulative")
+    mxp = modified_any_fit(speeds, C, group, fit="best", sort_key="max_partition")
+    # same bin count but different first-created bin
+    assert cum.creation_order[0] == 1
+    assert mxp.creation_order[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# property tests (paper Eqs. 6-7 + any-fit structure)
+# ---------------------------------------------------------------------------
+@settings(max_examples=150, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(sorted(ALL_ALGORITHMS)))
+def test_all_algorithms_valid_packing(speeds, seed, name):
+    sp = {j: w for j, w in enumerate(speeds)}
+    prev = with_prev(speeds, seed)
+    res = ALL_ALGORITHMS[name](sp, C, prev=prev)
+    # Eq. 7: every item in exactly one bin
+    assert set(res.pid_to_bin) == set(sp)
+    # Eq. 6 (+ oversize rule): capacity respected unless a single oversized item
+    bins = res.bins()
+    for cid, members in bins.items():
+        load = sum(sp[p] for p in members)
+        assert load == pytest.approx(res.loads[cid], abs=1e-9)
+        if load > C + 1e-9:
+            assert len(members) == 1 and sp[members[0]] > C
+    # bin names unique, count consistent
+    assert len(set(res.creation_order)) == res.n_bins == len(bins)
+    # lower bound
+    if all(w <= C for w in speeds):
+        assert res.n_bins >= capacity_lower_bound(speeds, C)
+
+
+@settings(max_examples=150, deadline=None)
+@given(speeds=speeds_st, strategy=st.sampled_from(["first", "best", "worst"]),
+       decreasing=st.booleans())
+def test_any_fit_at_most_one_half_empty_bin(speeds, strategy, decreasing):
+    sp = {j: w for j, w in enumerate(speeds)}
+    res = pack(sp, C, strategy=strategy, decreasing=decreasing)
+    small = [l for l in res.loads.values() if l <= C / 2]
+    assert len(small) <= 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       strategy=st.sampled_from(["next", "first", "best", "worst"]),
+       decreasing=st.booleans())
+def test_sticky_only_renames(speeds, seed, strategy, decreasing):
+    """Sec. IV-C: the adaptation never changes bin count or composition."""
+    sp = {j: w for j, w in enumerate(speeds)}
+    prev = with_prev(speeds, seed)
+    a = pack(sp, C, strategy=strategy, decreasing=decreasing, prev=prev, sticky=True)
+    b = pack(sp, C, strategy=strategy, decreasing=decreasing, prev=prev, sticky=False)
+    assert a.n_bins == b.n_bins
+    assert a.composition() == b.composition()
+
+
+@settings(max_examples=100, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       fit=st.sampled_from(["best", "worst"]),
+       key=st.sampled_from(["cumulative", "max_partition"]))
+def test_modified_any_fit_valid(speeds, seed, fit, key):
+    sp = {j: w for j, w in enumerate(speeds)}
+    prev = with_prev(speeds, seed)
+    res = modified_any_fit(sp, C, group_view(prev), fit=fit, sort_key=key)
+    assert set(res.pid_to_bin) == set(sp)
+    for cid, members in res.bins().items():
+        load = sum(sp[p] for p in members)
+        if load > C + 1e-9:
+            assert len(members) == 1 and sp[members[0]] > C
+    if all(w <= C for w in speeds):
+        assert res.n_bins >= capacity_lower_bound(speeds, C)
+
+
+@settings(max_examples=60, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1))
+def test_modified_keeps_surviving_consumer_names(speeds, seed):
+    """Every bin created as a consumer's own bin keeps the consumer id, so
+    bin names of the new config that coincide with old consumers only hold
+    either kept or migrated partitions -- and a partition that stays on a
+    bin named like its previous consumer is never counted as rebalanced."""
+    sp = {j: w for j, w in enumerate(speeds)}
+    prev = with_prev(speeds, seed)
+    res = modified_any_fit(sp, C, group_view(prev), fit="best", sort_key="cumulative")
+    moved = rebalanced_partitions(prev, res.pid_to_bin)
+    for p in set(prev) & set(res.pid_to_bin):
+        if res.pid_to_bin[p] == prev[p]:
+            assert p not in moved

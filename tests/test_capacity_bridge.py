@@ -1,0 +1,42 @@
+"""Roofline -> autoscaler bridge: the replica capacity C the controller
+packs against comes from the dry-run's compiled serve_step."""
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.jsonl")
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="dry-run results not generated yet")
+def test_derived_capacity_feeds_controller():
+    from repro.serving.capacity import derived_replica_capacity
+    from repro.core.controller import ControllerConfig
+
+    base = derived_replica_capacity("deepseek-67b", "decode_32k",
+                                    results_path=RESULTS)
+    assert base["tokens_per_s"] > 0
+    opt = derived_replica_capacity("deepseek-67b", "decode_32k",
+                                   rules="tail256", results_path=RESULTS)
+    # the optimized variant must serve strictly more tokens/s
+    assert opt["tokens_per_s"] > base["tokens_per_s"] * 1.2
+
+    cfg = ControllerConfig(capacity=opt["tokens_per_s"], algorithm="MBFP")
+    assert cfg.capacity == opt["tokens_per_s"]
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="dry-run results not generated yet")
+def test_all_baseline_cells_have_capacity():
+    from repro.launch.shapes import SHAPES, applicable
+    from repro import configs
+    from repro.serving.capacity import derived_replica_capacity
+
+    for arch in configs.list_archs():
+        cfg = configs.get(arch)
+        ok, _ = applicable(cfg, "decode_32k")
+        if not ok:
+            continue
+        cap = derived_replica_capacity(arch, "decode_32k",
+                                       results_path=RESULTS)
+        assert cap["tokens_per_s"] > 0, arch

@@ -1,0 +1,107 @@
+"""Exact-equivalence property tests: the JAX (lax.scan) packer must agree
+bit-for-bit with the reference implementation -- same bin names per item,
+same loads, same bin count -- across all 12 algorithms, random instances and
+random previous assignments.
+
+Speeds are quantized to k/1024 so all load sums are exact in float32: any
+disagreement is a logic bug, never rounding.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ALL_ALGORITHMS, group_view, run_stream
+from repro.core.jaxpack import (
+    evaluate_stream_jax,
+    modified_any_fit_jax,
+    pack_jax,
+)
+from repro.core.streams import generate_stream
+
+C = 1.0
+
+speeds_st = st.lists(
+    st.integers(min_value=0, max_value=2048).map(lambda k: k / 1024.0),
+    min_size=1,
+    max_size=24,
+)
+
+CLASSICAL_SPEC = {
+    "NF": ("next", False), "NFD": ("next", True),
+    "FF": ("first", False), "FFD": ("first", True),
+    "BF": ("best", False), "BFD": ("best", True),
+    "WF": ("worst", False), "WFD": ("worst", True),
+}
+MODIFIED_SPEC = {
+    "MWF": ("worst", "cumulative"), "MBF": ("best", "cumulative"),
+    "MWFP": ("worst", "max_partition"), "MBFP": ("best", "max_partition"),
+}
+
+
+def _prev_arrays(n, seed):
+    rng = np.random.default_rng(seed)
+    prev = rng.integers(-1, max(1, n // 2), size=n).astype(np.int32)
+    prev_map = {j: int(c) for j, c in enumerate(prev) if c >= 0}
+    return prev, prev_map
+
+
+def _check_match(name, res_ref, bin_of, loads, names, n_bins):
+    bin_of = np.asarray(bin_of)
+    loads = np.asarray(loads)
+    names = np.asarray(names)
+    k = int(n_bins)
+    assert k == res_ref.n_bins, f"{name}: bin count {k} != {res_ref.n_bins}"
+    for j, cid in res_ref.pid_to_bin.items():
+        assert int(bin_of[j]) == cid, (
+            f"{name}: item {j} -> {int(bin_of[j])} (jax) vs {cid} (ref)")
+    jl = {int(names[s]): float(loads[s]) for s in range(k)}
+    for cid, load in res_ref.loads.items():
+        assert jl[cid] == pytest.approx(load, abs=1e-6), f"{name}: load of bin {cid}"
+
+
+@settings(max_examples=120, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(sorted(CLASSICAL_SPEC)), sticky=st.booleans())
+def test_classical_jax_matches_reference(speeds, seed, name, sticky):
+    strategy, dec = CLASSICAL_SPEC[name]
+    n = len(speeds)
+    prev, prev_map = _prev_arrays(n, seed)
+    sp = {j: w for j, w in enumerate(speeds)}
+    from repro.core.binpack import pack
+    ref = pack(sp, C, strategy=strategy, decreasing=dec, prev=prev_map, sticky=sticky)
+    out = pack_jax(jnp.asarray(speeds, jnp.float32), jnp.asarray(prev), C,
+                   strategy=strategy, decreasing=dec, sticky=sticky)
+    _check_match(name, ref, out.bin_of, out.loads, out.names, out.n_bins)
+
+
+@settings(max_examples=120, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(sorted(MODIFIED_SPEC)))
+def test_modified_jax_matches_reference(speeds, seed, name):
+    fit, key = MODIFIED_SPEC[name]
+    n = len(speeds)
+    prev, prev_map = _prev_arrays(n, seed)
+    sp = {j: w for j, w in enumerate(speeds)}
+    from repro.core.modified import modified_any_fit
+    ref = modified_any_fit(sp, C, group_view(prev_map), fit=fit, sort_key=key)
+    out = modified_any_fit_jax(jnp.asarray(speeds, jnp.float32), jnp.asarray(prev),
+                               C, fit=fit, sort_key=key)
+    _check_match(name, ref, out.bin_of, out.loads, out.names, out.n_bins)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_ALGORITHMS))
+def test_stream_evaluation_matches_reference(name):
+    """Whole-stream scan (bins + Rscore per iteration) agrees with the python
+    controller loop on a quantized Eq. 11 stream."""
+    stream = generate_stream(n_partitions=10, n_measurements=40, delta=15,
+                             capacity=C, seed=7)
+    stream = np.round(stream * 1024) / 1024.0
+    runs = run_stream({name: ALL_ALGORITHMS[name]}, stream, C)
+    bins_jax, rs_jax = evaluate_stream_jax(jnp.asarray(stream, jnp.float32), C,
+                                           algorithm=name)
+    np.testing.assert_array_equal(np.asarray(bins_jax), np.array(runs[name].bins))
+    np.testing.assert_allclose(np.asarray(rs_jax), np.array(runs[name].rscores),
+                               atol=1e-6)

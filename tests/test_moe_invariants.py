@@ -1,0 +1,70 @@
+"""Property tests for the MoE dispatch invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models.moe import _capacity, apply_moe, init_moe
+
+
+def _cfg(e, k, cf):
+    base = configs.get("qwen2-moe-a2.7b", smoke=True)
+    return dataclasses.replace(base, n_experts=e, experts_per_token=k,
+                               capacity_factor=cf, n_shared_experts=0,
+                               dtype="float32", param_dtype="float32")
+
+
+@settings(max_examples=12, deadline=None)
+@given(e=st.sampled_from([4, 6, 8]), k=st.sampled_from([1, 2]),
+       b=st.sampled_from([1, 2]), s=st.sampled_from([4, 16]),
+       seed=st.integers(0, 2 ** 16))
+def test_moe_output_finite_and_gate_weighted(e, k, b, s, seed):
+    cfg = _cfg(e, k, cf=8.0)  # no drops
+    p = init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(seed), (b, s, cfg.d_model),
+                          jnp.float32)
+    y, aux = apply_moe(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 0.0
+    # with cf high enough for zero drops, output must be a convex (gate)
+    # combination of expert outputs: scaling x scales y consistently for
+    # the linear part -- cheap sanity: y is not identically zero
+    assert float(jnp.max(jnp.abs(y))) > 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_moe_dropped_tokens_contribute_zero(seed):
+    """cf so small that capacity=1 per expert: any token beyond the first
+    routed to an expert is dropped and must receive exactly zero from the
+    routed path (it would get only shared-expert output in a full config)."""
+    cfg = _cfg(e=2, k=1, cf=0.01)
+    p = init_moe(jax.random.key(1), cfg)
+    s = 8
+    x = jax.random.normal(jax.random.key(seed), (1, s, cfg.d_model),
+                          jnp.float32)
+    cap = _capacity(cfg, s)
+    assert cap == 1
+    y, _ = apply_moe(p, cfg, x)
+    # at most e*cap = 2 tokens can be served; the rest are exactly zero rows
+    nonzero_rows = int(jnp.sum(jnp.any(jnp.abs(y[0]) > 0, axis=-1)))
+    assert nonzero_rows <= 2
+
+
+def test_moe_permutation_equivariance_within_row():
+    """Shuffling tokens within a row and unshuffling the output must give
+    the same result when nothing is dropped (dispatch is content-based)."""
+    cfg = _cfg(e=4, k=2, cf=8.0)
+    p = init_moe(jax.random.key(2), cfg)
+    s = 12
+    x = jax.random.normal(jax.random.key(3), (1, s, cfg.d_model), jnp.float32)
+    y, _ = apply_moe(p, cfg, x)
+    perm = np.random.default_rng(0).permutation(s)
+    y_p, _ = apply_moe(p, cfg, x[:, perm])
+    np.testing.assert_allclose(np.asarray(y_p[0]), np.asarray(y[0][perm]),
+                               atol=1e-4, rtol=1e-4)
