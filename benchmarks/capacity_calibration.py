@@ -6,6 +6,8 @@ counts, destination-table counts) and observing a common throughput mode
 (~2.3 MB/s on their GKE consumer).  We reproduce the *procedure* against the
 simulated replica: pre-load the broker, let one replica drain at full
 throttle under each condition, and report the measured rate distribution.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py      (tab6_capacity_* rows)
 """
 from __future__ import annotations
 

@@ -1,6 +1,9 @@
-"""Render the paper's Figs. 6-9 analogues as PNGs into benchmarks/figures/.
+"""Render the paper's Figs. 6-9 analogues as PNGs into benchmarks/figures/:
+CBS bars per delta (Figs. 6-7), average-Rscore bars (Fig. 8) and the
+(CBS, E[R]) Pareto scatter (Fig. 9), from ``paper_eval``'s batched sweep.
+Requires matplotlib.
 
-  PYTHONPATH=src:. python benchmarks/figures.py
+Run:  PYTHONPATH=src:. python benchmarks/figures.py
 """
 from __future__ import annotations
 

@@ -1,7 +1,19 @@
-"""Packer latency: the paper's premise is that approximation algorithms run
-'within the necessary time requirements' (Sec. III).  Measures one
-reassignment decision -- python reference vs the jitted JAX packer -- across
-partition counts, plus the Pallas fit-select reduction."""
+"""Packer latency (paper Sec. III premise: approximation algorithms run
+'within the necessary time requirements').
+
+Measures three tiers of the packing hot path:
+
+* one reassignment decision -- python reference vs the jitted JAX packer --
+  across partition counts (``ref_*`` / ``jax_*`` rows);
+* a whole batched scenario sweep through ``sweep_streams`` -- B streams x
+  T iterations x all-in-one XLA program -- reported as us per packed
+  iteration (``sweep_*`` rows);
+* the Pallas batched fit-select reduction (jitted
+  ``ops.select_slot_batched``), one launch over a ``(B, N, M)`` grid,
+  interpreter mode on CPU (``pallas_select_*`` rows).
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py      (packer_latency_* rows)
+"""
 from __future__ import annotations
 
 import time
@@ -12,8 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binpack import CLASSICAL
-from repro.core.jaxpack import modified_any_fit_jax, pack_jax
+from repro.core.jaxpack import modified_any_fit_jax, pack_jax, sweep_streams
 from repro.core.modified import MODIFIED
+from repro.core.scenarios import generate_scenario
+from repro.kernels.ops import select_slot_batched
 
 
 def _time(fn, reps=5) -> float:
@@ -46,4 +60,25 @@ def run(sizes=(50, 200, 500)) -> Dict[str, float]:
             lambda: jax.block_until_ready(
                 modified_any_fit_jax(sj, pj, 1.0, fit="best",
                                      sort_key="max_partition")))
+
+    # batched sweep: B streams x T iterations in one program, us/iteration
+    batch, iters, n = 8, 50, 20
+    traces = generate_scenario("bursty", jax.random.key(0), batch, iters, n)
+    for algo in ("BFD", "MBFP"):
+        us = _time(lambda: jax.block_until_ready(
+            sweep_streams((algo,), traces, 1.0)), reps=3)
+        out[f"sweep_{algo}_b{batch}xt{iters}_us_per_iter"] = (
+            us / (batch * iters))
+
+    # Pallas batched fit-select: one launch over the (B, N, M) grid
+    b, ninst, m = 8, 512, 64
+    loads = jnp.asarray(rng.uniform(0, 1, (b, ninst, m)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 0.6, (b, ninst)), jnp.float32)
+    k = jnp.asarray(rng.integers(0, m + 1, (b, ninst)), jnp.int32)
+    cap = jnp.ones((b, ninst), jnp.float32)
+    for strat in ("first", "best", "worst"):
+        out[f"pallas_select_{strat}_b{b}xn{ninst}_us"] = _time(
+            lambda: jax.block_until_ready(
+                select_slot_batched(loads, w, k, cap, strategy=strat)),
+            reps=3)
     return out

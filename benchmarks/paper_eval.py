@@ -1,5 +1,15 @@
-"""Shared evaluation sweep behind the paper's Figs. 6-9: all 12 algorithms
-over the six delta-streams (Eq. 11), via the jitted whole-stream scan."""
+"""Reproduces the evaluation behind the paper's Figs. 6-9: Cardinal Bin
+Score (Eq. 12), average Rscore (Eq. 13) and the Pareto fronts for all 12
+algorithms over the six delta-streams (Eq. 11).
+
+The six streams are stacked into one ``f32[6, N, P]`` batch and evaluated
+through the vmapped sweep driver (``repro.core.jaxpack.sweep_streams``), so
+each algorithm's whole six-delta evaluation is a single XLA program; the
+recorded per-(delta, algorithm) seconds are the batched wall time amortized
+over the six streams.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py      (fig6_/fig8_/fig9_ rows)
+"""
 from __future__ import annotations
 
 import functools
@@ -9,12 +19,11 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jaxpack import evaluate_stream_jax
+from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
 from repro.core.metrics import pareto_front
 from repro.core.streams import PAPER_DELTAS, generate_stream
 
-ALGORITHMS = ("NF", "NFD", "FF", "FFD", "BF", "BFD", "WF", "WFD",
-              "MWF", "MBF", "MWFP", "MBFP")
+ALGORITHMS = ALL_ALGORITHM_NAMES
 N_PARTITIONS = 50
 CAPACITY = 1.0
 
@@ -23,20 +32,21 @@ CAPACITY = 1.0
 def sweep(n_partitions: int = N_PARTITIONS, n_measurements: int = 500,
           seed: int = 0) -> Dict:
     """Returns {delta: {algo: (bins i32[N], rscores f32[N])}} + timings."""
-    out: Dict = {"deltas": {}, "seconds": {}}
-    for i, delta in enumerate(PAPER_DELTAS):
-        stream = generate_stream(n_partitions, n_measurements, delta,
-                                 CAPACITY, seed=seed + i)
-        stream_j = jnp.asarray(stream, jnp.float32)
-        per_algo = {}
-        for algo in ALGORITHMS:
-            t0 = time.perf_counter()
-            bins, rs = evaluate_stream_jax(stream_j, CAPACITY, algorithm=algo)
-            bins = np.asarray(bins)
-            rs = np.asarray(rs)
-            out["seconds"][(delta, algo)] = time.perf_counter() - t0
-            per_algo[algo] = (bins, rs)
-        out["deltas"][delta] = per_algo
+    out: Dict = {"deltas": {d: {} for d in PAPER_DELTAS}, "seconds": {}}
+    batch = jnp.asarray(np.stack([
+        generate_stream(n_partitions, n_measurements, delta, CAPACITY,
+                        seed=seed + i)
+        for i, delta in enumerate(PAPER_DELTAS)
+    ]), jnp.float32)
+    for algo in ALGORITHMS:
+        t0 = time.perf_counter()
+        res = sweep_streams((algo,), batch, CAPACITY)
+        bins = np.asarray(res.bins[0])      # (6, N)
+        rs = np.asarray(res.rscores[0])     # (6, N)
+        per_stream = (time.perf_counter() - t0) / len(PAPER_DELTAS)
+        for i, delta in enumerate(PAPER_DELTAS):
+            out["seconds"][(delta, algo)] = per_stream
+            out["deltas"][delta][algo] = (bins[i], rs[i])
     return out
 
 

@@ -1,5 +1,9 @@
 """Splice the final roofline tables + perf summary into EXPERIMENTS.md
-(replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_SUMMARY --> markers)."""
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_SUMMARY --> markers).
+Supports EXPERIMENTS.md's §Roofline; reproduces no paper figure directly.
+
+Run:  PYTHONPATH=src:. python benchmarks/render_experiments.py
+"""
 from __future__ import annotations
 
 import os

@@ -3,6 +3,8 @@
 Reads dryrun_results.jsonl and renders, per (arch x shape x mesh):
 the three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS,
 and HBM fit.  Pure post-processing -- no device work.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py      (roofline_* rows)
 """
 from __future__ import annotations
 

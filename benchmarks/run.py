@@ -8,6 +8,12 @@ where meaningful, else 0; derived = the quantity the paper reports).
   tab6_capacity_*     consumer max-throughput calibration      (Table VI/Fig. 10)
   packer_latency_*    reassignment-decision latency            (Sec. III premise)
   roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
+
+The fig6/fig8/fig9 sections run through the batched scenario-sweep engine
+(``repro.core.jaxpack.sweep_streams``): each algorithm evaluates all six
+delta-streams in one vmapped XLA program.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py
 """
 from __future__ import annotations
 

@@ -1,0 +1,64 @@
+"""Batched scenario sweep: every packing algorithm x a fleet of workloads.
+
+Generates a batch of synthetic partition write-speed trajectories from
+several scenario families (diurnal cycles, launch ramps, flash crowds,
+topic churn, heavy-tailed skew -- see docs/paper_map.md for the catalogue),
+stacks them into one ``f32[B, T, N]`` tensor, and evaluates all 12 packing
+algorithms over the whole fleet in one vmapped XLA program per algorithm.
+
+Prints, per (family, algorithm): mean consumers used, mean Rscore (Eq. 10)
+and total partition migrations -- the same cost/disruption trade-off as the
+paper's Figs. 6-9, but across workload shapes the paper never tested.
+
+  PYTHONPATH=src python examples/scenario_sweep.py
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import numpy as np
+
+from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
+from repro.core.scenarios import scenario_suite, stack_suite
+
+FAMILIES = ("diurnal", "ramp", "bursty", "churn", "heavy_tail")
+BATCH = 3          # streams per family
+ITERS = 48         # measurements per stream
+N_PARTITIONS = 16
+CAPACITY = 1.0
+
+
+def main() -> None:
+    suite = scenario_suite(jax.random.key(0), BATCH, ITERS, N_PARTITIONS,
+                           capacity=CAPACITY, families=FAMILIES)
+    labels, batch = stack_suite(suite)
+    print(f"sweeping {len(ALL_ALGORITHM_NAMES)} algorithms over "
+          f"{batch.shape[0]} streams ({len(FAMILIES)} families x {BATCH}) "
+          f"of {ITERS} iterations x {N_PARTITIONS} partitions ...")
+    res = sweep_streams(ALL_ALGORITHM_NAMES, batch, CAPACITY)
+
+    rows = collections.defaultdict(dict)
+    bins = np.asarray(res.bins)          # (A, B, T)
+    rscores = np.asarray(res.rscores)
+    migs = np.asarray(res.migrations)
+    fam_idx = {f: [i for i, l in enumerate(labels) if l == f]
+               for f in FAMILIES}
+    for a, algo in enumerate(res.algorithms):
+        for fam, idx in fam_idx.items():
+            rows[fam][algo] = (bins[a, idx].mean(), rscores[a, idx].mean(),
+                               int(migs[a, idx].sum()))
+
+    hdr = f"{'family':<11} {'algo':<5} {'mean bins':>9} {'mean R':>8} {'migrations':>10}"
+    for fam in FAMILIES:
+        print(f"\n{hdr}")
+        best = min(rows[fam], key=lambda a: rows[fam][a][0])
+        for algo in res.algorithms:
+            b, r, m = rows[fam][algo]
+            star = " *" if algo == best else ""
+            print(f"{fam:<11} {algo:<5} {b:>9.2f} {r:>8.4f} {m:>10d}{star}")
+    print("\n(* = fewest mean consumers in that family)")
+
+
+if __name__ == "__main__":
+    main()

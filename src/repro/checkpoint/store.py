@@ -1,6 +1,8 @@
 """Checkpoint store.
 
-Layout:  <dir>/step_<N>/MANIFEST.msgpack  +  one zstd blob per leaf.
+Layout:  <dir>/step_<N>/MANIFEST.msgpack  +  one compressed blob per leaf
+(zstd when ``zstandard`` is installed, stdlib zlib otherwise; the manifest
+records the codec per leaf so either reader restores either layout).
 
 * atomic: written to ``step_<N>.tmp`` then renamed, so a crash mid-save never
   corrupts the latest checkpoint (restart-safety for the training loop);
@@ -21,9 +23,34 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: fall back to stdlib zlib when zstandard is absent
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - depends on environment
+    zstd = None
 
 _SEP = "/"
+
+
+def _compress(data: bytes, cctx) -> tuple[bytes, str]:
+    """Returns (blob, codec).  ``cctx``: one ZstdCompressor per checkpoint
+    (zstd contexts are not safe to share across concurrent saves), or None
+    to fall back to zlib."""
+    if cctx is not None:
+        return cctx.compress(data), "zstd"
+    return zlib.compress(data, level=6), "zlib"
+
+
+def _decompress(blob: bytes, codec: str, dctx) -> bytes:
+    if codec == "zstd":
+        if dctx is None:
+            raise ImportError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed")
+        return dctx.decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree) -> dict:
@@ -43,17 +70,18 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    cctx = zstd.ZstdCompressor(level=3)
+    cctx = zstd.ZstdCompressor(level=3) if zstd is not None else None
     manifest = {"step": step, "leaves": {}, "extra": extra or {}}
     for key, leaf in _flatten(tree).items():
         arr = np.asarray(jax.device_get(leaf))
-        blob = cctx.compress(arr.tobytes(order="C"))
-        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".zst"
+        blob, codec = _compress(arr.tobytes(order="C"), cctx)
+        ext = ".zst" if codec == "zstd" else ".zz"
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ext
         with open(os.path.join(tmp, fname), "wb") as f:
             f.write(blob)
         manifest["leaves"][key] = {
             "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
-            "crc32": zlib.crc32(blob) & 0xFFFFFFFF,
+            "crc32": zlib.crc32(blob) & 0xFFFFFFFF, "codec": codec,
         }
     with open(os.path.join(tmp, "MANIFEST.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
@@ -79,8 +107,7 @@ def restore_checkpoint(directory: str, step: int, target: Any,
     base = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(base, "MANIFEST.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dctx = zstd.ZstdDecompressor()
-
+    dctx = zstd.ZstdDecompressor() if zstd is not None else None
     flat_target = _flatten(target)
     flat_shard = _flatten(shardings) if shardings is not None else {}
     out = {}
@@ -92,8 +119,9 @@ def restore_checkpoint(directory: str, step: int, target: Any,
             blob = f.read()
         if (zlib.crc32(blob) & 0xFFFFFFFF) != meta["crc32"]:
             raise IOError(f"checksum mismatch for {key!r}")
-        arr = np.frombuffer(dctx.decompress(blob),
-                            dtype=np.dtype(meta["dtype"]))
+        arr = np.frombuffer(
+            _decompress(blob, meta.get("codec", "zstd"), dctx),
+            dtype=np.dtype(meta["dtype"]))
         arr = arr.reshape(meta["shape"])
         if tuple(arr.shape) != tuple(want.shape):
             raise ValueError(f"{key!r}: shape {arr.shape} != {want.shape}")

@@ -19,8 +19,20 @@ from .metrics import (
     pareto_front,
     run_stream,
 )
+from .jaxpack import (
+    ALL_ALGORITHM_NAMES,
+    SweepResult,
+    evaluate_stream_jax,
+    sweep_streams,
+)
 from .modified import ALL_ALGORITHMS, MODIFIED, modified_any_fit
 from .rscore import recovery_iterations, rscore, rscore_of_set
+from .scenarios import (
+    SCENARIO_FAMILIES,
+    generate_scenario,
+    scenario_suite,
+    stack_suite,
+)
 from .streams import PAPER_DELTAS, generate_stream, paper_streams
 
 __all__ = [
@@ -48,4 +60,12 @@ __all__ = [
     "PAPER_DELTAS",
     "generate_stream",
     "paper_streams",
+    "ALL_ALGORITHM_NAMES",
+    "SweepResult",
+    "evaluate_stream_jax",
+    "sweep_streams",
+    "SCENARIO_FAMILIES",
+    "generate_scenario",
+    "scenario_suite",
+    "stack_suite",
 ]

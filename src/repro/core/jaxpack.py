@@ -302,14 +302,11 @@ def _pack_dispatch(name: str):
     raise ValueError(f"unknown algorithm {name!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("algorithm",))
-def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
-                        ) -> Tuple[jax.Array, jax.Array]:
-    """Run one algorithm over an (N, P) stream.
-
-    Returns (bins_per_iter i32[N], rscore_per_iter f32[N]).  The previous
-    iteration's assignment feeds the next, as in the controller loop.
-    """
+def _stream_scan(stream: jax.Array, capacity, algorithm: str
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared scan over an (N, P) stream: the previous iteration's assignment
+    feeds the next, as in the controller loop.  Returns per-iteration
+    (bins i32[N], rscore f32[N], migrations i32[N])."""
     packer = _pack_dispatch(algorithm)
     n = stream.shape[1]
     capacity = jnp.float32(capacity)
@@ -318,8 +315,81 @@ def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
         res = packer(speeds, prev, capacity)
         moved = (prev >= 0) & (res.bin_of != prev)
         r = jnp.sum(jnp.where(moved, speeds, 0.0)) / capacity
-        return res.bin_of, (res.n_bins, r)
+        migs = jnp.sum(moved.astype(jnp.int32))
+        return res.bin_of, (res.n_bins, r, migs)
 
-    _, (bins, rs) = lax.scan(step, jnp.full(n, NEG, jnp.int32),
-                             stream.astype(jnp.float32))
+    _, (bins, rs, migs) = lax.scan(step, jnp.full(n, NEG, jnp.int32),
+                                   stream.astype(jnp.float32))
+    return bins, rs, migs
+
+
+@functools.partial(jax.jit, static_argnames=("algorithm",))
+def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Run one algorithm over an (N, P) stream.
+
+    Returns (bins_per_iter i32[N], rscore_per_iter f32[N]).  The previous
+    iteration's assignment feeds the next, as in the controller loop.
+    """
+    bins, rs, _ = _stream_scan(stream, capacity, algorithm)
     return bins, rs
+
+
+# ---------------------------------------------------------------------------
+# batched scenario sweep: all algorithms x a whole batch of streams
+# ---------------------------------------------------------------------------
+
+ALL_ALGORITHM_NAMES: Tuple[str, ...] = (
+    "NF", "NFD", "FF", "FFD", "BF", "BFD", "WF", "WFD",
+    "MWF", "MBF", "MWFP", "MBFP",
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SweepResult:
+    """Per-step traces of a batched sweep, indexed [algorithm, stream, iter].
+
+    ``algorithms`` records the row order of axis 0 (static metadata).
+    """
+    bins: jax.Array        # i32[A, B, T]  consumers used per iteration
+    rscores: jax.Array     # f32[A, B, T]  Eq. 10 rebalance cost per iteration
+    migrations: jax.Array  # i32[A, B, T]  partitions moved per iteration
+    algorithms: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True))
+
+    def for_algorithm(self, name: str
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        a = self.algorithms.index(name.upper())
+        return self.bins[a], self.rscores[a], self.migrations[a]
+
+
+@functools.partial(jax.jit, static_argnames=("algorithms",))
+def _sweep_streams_jit(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
+                       capacity) -> SweepResult:
+    per_algo = [
+        jax.vmap(lambda s, a=a: _stream_scan(s, capacity, a))(speeds_batch)
+        for a in algorithms
+    ]
+    bins = jnp.stack([p[0] for p in per_algo])
+    rs = jnp.stack([p[1] for p in per_algo])
+    migs = jnp.stack([p[2] for p in per_algo])
+    return SweepResult(bins=bins, rscores=rs, migrations=migs,
+                       algorithms=algorithms)
+
+
+def sweep_streams(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
+                  capacity) -> SweepResult:
+    """Evaluate ``algorithms`` over a whole batch of streams in one program.
+
+    ``speeds_batch``: f32[B, T, N] -- B streams of T measurements over N
+    partitions (e.g. from ``scenarios.scenario_suite`` / ``stack_suite``).
+    Each algorithm's scan is vmapped over the batch axis; with batch size 1
+    the result is bit-identical to ``evaluate_stream_jax`` on the single
+    stream (enforced by tests/test_scenarios.py).
+
+    Names are case-normalized *before* the jit boundary so equivalent
+    spellings share one compile-cache entry.
+    """
+    return _sweep_streams_jit(tuple(a.upper() for a in algorithms),
+                              speeds_batch, capacity)

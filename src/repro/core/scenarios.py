@@ -1,0 +1,211 @@
+"""Batched synthetic workload scenarios for the packer fleet.
+
+The paper evaluates the algorithms on six bounded-random-walk streams
+(Eq. 11, ``streams.py``).  Production consumer groups see far more shapes
+than a random walk: daily traffic cycles, launch ramps, flash crowds,
+topics appearing and disappearing, and heavy-tailed partition skew.  This
+module generates *batches* of such trajectories as ``f32[batch, iters, n]``
+arrays so the vmapped sweep driver (``jaxpack.sweep_streams``) can evaluate
+every algorithm over a whole fleet of scenarios in one XLA program.
+
+Families (see docs/paper_map.md for the full catalogue):
+
+* ``random_walk`` -- the paper's Eq. 11 walk, batched (continuity baseline).
+* ``diurnal``     -- sinusoidal day/night cycle with per-partition phase and
+                     amplitude plus walk noise.
+* ``ramp``        -- linear growth/decay per partition (product launches,
+                     migrations draining traffic away).
+* ``bursty``      -- flash crowds: Bernoulli spike arrivals with geometric
+                     decay riding a calm baseline.
+* ``churn``       -- partitions flip between hot and near-idle at random
+                     switch times (topics created/abandoned mid-stream).
+* ``heavy_tail``  -- log-normal per-partition base rates (a few whales, many
+                     minnows) with multiplicative noise.
+
+Everything is pure ``jax.random`` -- a fixed key gives a bit-identical
+batch on every call -- and every generator clips speeds to ``>= 0``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _walk(key: jax.Array, batch: int, iters: int, n: int, step_scale,
+          init: jax.Array) -> jax.Array:
+    """Unclipped drift: init + cumsum(uniform steps).  Used as additive /
+    log-space noise; callers clip the final speeds, not the drift (the
+    paper's per-step clip lives in ``_clipped_walk``)."""
+    steps = jax.random.uniform(key, (batch, iters - 1, n),
+                               minval=-1.0, maxval=1.0) * step_scale
+    return init[:, None, :] + jnp.concatenate(
+        [jnp.zeros((batch, 1, n)), jnp.cumsum(steps, axis=1)], axis=1)
+
+
+def _clipped_walk(key: jax.Array, batch: int, iters: int, n: int, step_scale,
+                  init: jax.Array) -> jax.Array:
+    """Eq. 11 exactly: s_i = max{0, s_{i-1} + phi}, phi ~ U[-d, d] per step."""
+    steps = jax.random.uniform(key, (iters - 1, batch, n),
+                               minval=-1.0, maxval=1.0) * step_scale
+
+    def body(s, phi):
+        s = jnp.maximum(s + phi, 0.0)
+        return s, s
+
+    _, tail = jax.lax.scan(body, init, steps)
+    return jnp.concatenate([init[None], tail], axis=0).transpose(1, 0, 2)
+
+
+def random_walk(key: jax.Array, batch: int, iters: int, n: int, *,
+                capacity: float = 1.0, delta: float = 10.0) -> jax.Array:
+    """The paper's Eq. 11 stream, batched.  ``delta`` in percent of C."""
+    k_init, k_walk = jax.random.split(key)
+    init = jax.random.uniform(k_init, (batch, n), maxval=capacity)
+    return _clipped_walk(k_walk, batch, iters, n,
+                         delta / 100.0 * capacity, init)
+
+
+def diurnal(key: jax.Array, batch: int, iters: int, n: int, *,
+            capacity: float = 1.0, period: int = 96, amplitude: float = 0.4,
+            noise: float = 0.02) -> jax.Array:
+    """Day/night cycle: per-partition mean, phase and amplitude, plus walk
+    noise.  ``period`` is the cycle length in iterations."""
+    k_mean, k_phase, k_amp, k_noise = jax.random.split(key, 4)
+    mean = jax.random.uniform(k_mean, (batch, 1, n), minval=0.1,
+                              maxval=0.6) * capacity
+    phase = jax.random.uniform(k_phase, (batch, 1, n), maxval=2 * jnp.pi)
+    amp = jax.random.uniform(k_amp, (batch, 1, n),
+                             maxval=amplitude) * capacity
+    t = jnp.arange(iters, dtype=jnp.float32)[None, :, None]
+    wave = mean + amp * jnp.sin(2 * jnp.pi * t / period + phase)
+    drift = _walk(k_noise, batch, iters, n, noise * capacity,
+                  jnp.zeros((batch, n)))
+    return jnp.maximum(wave + drift, 0.0)
+
+
+def ramp(key: jax.Array, batch: int, iters: int, n: int, *,
+         capacity: float = 1.0, max_slope: float = 1.5,
+         noise: float = 0.02) -> jax.Array:
+    """Linear ramps: each partition grows or decays toward a target over the
+    trace.  ``max_slope`` bounds total change in units of C."""
+    k_init, k_slope, k_noise = jax.random.split(key, 3)
+    init = jax.random.uniform(k_init, (batch, 1, n), maxval=0.8) * capacity
+    slope = jax.random.uniform(k_slope, (batch, 1, n), minval=-max_slope,
+                               maxval=max_slope) * capacity
+    t = jnp.arange(iters, dtype=jnp.float32)[None, :, None] / max(iters - 1, 1)
+    drift = _walk(k_noise, batch, iters, n, noise * capacity,
+                  jnp.zeros((batch, n)))
+    return jnp.maximum(init + slope * t + drift, 0.0)
+
+
+def bursty(key: jax.Array, batch: int, iters: int, n: int, *,
+           capacity: float = 1.0, base: float = 0.15, p_spike: float = 0.02,
+           spike: float = 1.0, decay: float = 0.8) -> jax.Array:
+    """Flash crowds: a calm baseline plus Bernoulli spike arrivals that decay
+    geometrically (rate ``decay`` per iteration)."""
+    k_base, k_arrive, k_size = jax.random.split(key, 3)
+    floor = jax.random.uniform(k_base, (batch, 1, n), minval=0.2,
+                               maxval=1.0) * base * capacity
+    arrive = jax.random.bernoulli(k_arrive, p_spike, (iters, batch, n))
+    size = jax.random.uniform(k_size, (iters, batch, n), minval=0.3,
+                              maxval=1.0) * spike * capacity
+
+    def body(level, xs):
+        hit, s = xs
+        level = jnp.maximum(level * decay, jnp.where(hit, s, 0.0))
+        return level, level
+
+    _, levels = jax.lax.scan(body, jnp.zeros((batch, n)), (arrive, size))
+    return floor + levels.transpose(1, 0, 2)
+
+
+def churn(key: jax.Array, batch: int, iters: int, n: int, *,
+          capacity: float = 1.0, p_flip: float = 0.02, hot: float = 0.5,
+          idle: float = 0.01, noise: float = 0.05) -> jax.Array:
+    """Consumer churn: partitions toggle between a hot rate and near-idle at
+    random flip times (topics created / abandoned mid-stream)."""
+    k_state, k_flip, k_hot, k_noise = jax.random.split(key, 4)
+    state0 = jax.random.bernoulli(k_state, 0.5, (batch, n))
+    flips = jax.random.bernoulli(k_flip, p_flip, (iters, batch, n))
+    # parity of the running flip count toggles the initial state
+    parity = jnp.cumsum(flips.astype(jnp.int32), axis=0) % 2
+    on = state0[None] ^ (parity == 1)
+    level = jax.random.uniform(k_hot, (batch, 1, n), minval=0.5,
+                               maxval=1.5) * hot * capacity
+    jitter = 1.0 + jax.random.uniform(k_noise, (batch, iters, n),
+                                      minval=-1.0, maxval=1.0) * noise
+    on = on.transpose(1, 0, 2)
+    return jnp.maximum(jnp.where(on, level, idle * capacity) * jitter, 0.0)
+
+
+def heavy_tail(key: jax.Array, batch: int, iters: int, n: int, *,
+               capacity: float = 1.0, sigma: float = 1.2, scale: float = 0.1,
+               noise: float = 0.1) -> jax.Array:
+    """Heavy-tailed skew: log-normal per-partition base rates (a few whales
+    dominate) with multiplicative log-space noise over time."""
+    k_base, k_noise = jax.random.split(key)
+    log_base = jax.random.normal(k_base, (batch, 1, n)) * sigma
+    base = jnp.exp(log_base) * scale * capacity
+    # wob starts at 0 (zero init), so exp(wob) anchors iteration 0 at base
+    wob = _walk(k_noise, batch, iters, n, noise, jnp.zeros((batch, n)))
+    return base * jnp.exp(wob)
+
+
+ScenarioFn = Callable[..., jax.Array]
+
+SCENARIO_FAMILIES: Dict[str, ScenarioFn] = {
+    "random_walk": random_walk,
+    "diurnal": diurnal,
+    "ramp": ramp,
+    "bursty": bursty,
+    "churn": churn,
+    "heavy_tail": heavy_tail,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("family", "batch", "iters", "n"))
+def _generate(family: str, key: jax.Array, batch: int, iters: int, n: int,
+              capacity: float) -> jax.Array:
+    return SCENARIO_FAMILIES[family](key, batch, iters, n, capacity=capacity)
+
+
+def generate_scenario(family: str, key: jax.Array, batch: int, iters: int,
+                      n: int, *, capacity: float = 1.0,
+                      **knobs) -> jax.Array:
+    """Generate one family's batch of traces as ``f32[batch, iters, n]``.
+
+    Deterministic: the same ``key`` (and knobs) always yields the same batch.
+    Extra ``knobs`` are forwarded to the family generator (see each family's
+    signature; e.g. ``delta=`` for random_walk, ``period=`` for diurnal).
+    """
+    if family not in SCENARIO_FAMILIES:
+        raise ValueError(
+            f"unknown scenario family {family!r}; "
+            f"have {sorted(SCENARIO_FAMILIES)}")
+    if knobs:
+        out = SCENARIO_FAMILIES[family](key, batch, iters, n,
+                                        capacity=capacity, **knobs)
+    else:
+        out = _generate(family, key, batch, iters, n, capacity)
+    return out.astype(jnp.float32)
+
+
+def scenario_suite(key: jax.Array, batch: int, iters: int, n: int, *,
+                   capacity: float = 1.0,
+                   families: Sequence[str] = tuple(SCENARIO_FAMILIES),
+                   ) -> Dict[str, jax.Array]:
+    """One batch per family, independently keyed: {family: f32[B, T, N]}."""
+    keys = jax.random.split(key, len(families))
+    return {f: generate_scenario(f, k, batch, iters, n, capacity=capacity)
+            for f, k in zip(families, keys)}
+
+
+def stack_suite(suite: Dict[str, jax.Array]
+                ) -> Tuple[Tuple[str, ...], jax.Array]:
+    """Flatten a suite into (labels[B_total], f32[B_total, T, N]) for one
+    sweep_streams call; labels[i] names trace i's family."""
+    labels = tuple(f for f, v in suite.items() for _ in range(v.shape[0]))
+    return labels, jnp.concatenate(list(suite.values()), axis=0)

@@ -1,0 +1,14 @@
+"""Version shims and backend rules shared by the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 names it TPUCompilerParams; keep one alias for both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def default_interpret() -> bool:
+    """Only a real TPU runs the compiled Mosaic kernels; every other backend
+    (cpu, gpu) gets Pallas interpreter mode."""
+    return jax.default_backend() != "tpu"

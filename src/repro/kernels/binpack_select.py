@@ -1,15 +1,21 @@
-"""Fit-strategy bin selection as a Pallas TPU kernel.
+"""Fit-strategy bin selection as a Pallas TPU kernel, batched over streams.
 
 The packer's inner operation -- "given bin loads and an item, pick the
 first/best/worst bin it fits in" -- is a masked argmin/argmax reduction.
 Evaluating algorithm sweeps (12 algorithms x 6 deltas x 500 iterations x
-batches of streams) on device makes this the hot loop; the kernel evaluates
-a whole batch of (loads, item) instances per launch with the loads row
-resident in VMEM.
+batches of streams) on device makes this the hot loop, so the kernel grid
+carries an explicit *batch* dimension: each program instance reduces a
+whole ``(rows, M)`` tile of (loads, item) instances for one stream of the
+batch, with the loads tile resident in VMEM.  ``grid = (B, ceil(N/rows))``
+and both dimensions are parallel, so one launch covers the entire
+``f32[B, N, M]`` sweep.
 
 Semantics match ``repro.core.jaxpack._select_slot``: ties break to the
 lowest slot, an item "fits" iff load + w <= capacity and slot < k.
 Returns slot = M (out of range) when nothing fits.
+
+On hosts without a TPU the wrappers fall back to Pallas interpreter mode
+automatically, so the same call sites work in CI and on device.
 """
 from __future__ import annotations
 
@@ -20,53 +26,86 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import default_interpret as _default_interpret
+
 _BIG = 3.4e38  # python literal: jnp scalars would be captured as consts
 
+DEFAULT_ROW_TILE = 256
 
-def _select_kernel(loads_ref, w_ref, k_ref, cap_ref, slot_ref, *,
-                   strategy: str, m: int):
-    loads = loads_ref[0]                              # (M,)
-    w = w_ref[0]
-    k = k_ref[0]
-    cap = cap_ref[0]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+
+def _select_tile_kernel(loads_ref, w_ref, k_ref, cap_ref, slot_ref, *,
+                        strategy: str, m: int, rows: int):
+    """One (rows, M) tile: row-wise masked argmin/argmax along the M axis."""
+    loads = loads_ref[0]                              # (rows, M)
+    w = w_ref[0][:, None]                             # (rows, 1)
+    k = k_ref[0][:, None]                             # (rows, 1)
+    cap = cap_ref[0][:, None]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (rows, m), 1)
     fits = (idx < k) & (loads + w <= cap)
     if strategy == "first":
         score = jnp.where(fits, idx.astype(jnp.float32), _BIG)
-        best = jnp.argmin(score)
+        best = jnp.argmin(score, axis=1)
     elif strategy == "best":      # tightest fit = max load; first on tie
         score = jnp.where(fits, loads, -_BIG)
-        best = jnp.argmax(score)
+        best = jnp.argmax(score, axis=1)
     elif strategy == "worst":     # most slack = min load; first on tie
         score = jnp.where(fits, loads, _BIG)
-        best = jnp.argmin(score)
+        best = jnp.argmin(score, axis=1)
     else:
         raise ValueError(strategy)
-    found = jnp.any(fits)
+    found = jnp.any(fits, axis=1)
     slot_ref[0] = jnp.where(found, best.astype(jnp.int32), jnp.int32(m))
 
 
-def select_slot_batch(loads, w, k, capacity, *, strategy: str = "best",
-                      interpret: bool = False):
-    """loads: (N, M) f32; w, capacity: (N,) f32; k: (N,) i32 (bins created).
+def select_slot_grid(loads, w, k, capacity, *, strategy: str = "best",
+                     row_tile: int = DEFAULT_ROW_TILE,
+                     interpret: bool | None = None):
+    """Batched fit-selection over a grid of streams.
 
-    Returns (N,) i32 chosen slot per instance (M = nothing fits).
+    loads: (B, N, M) f32 bin loads; w, capacity: (B, N) f32; k: (B, N) i32
+    (bins created).  Returns (B, N) i32 chosen slot per instance (M when
+    nothing fits).  One kernel launch; ``grid = (B, ceil(N / row_tile))``.
     """
-    n, m = loads.shape
-    kernel = functools.partial(_select_kernel, strategy=strategy, m=m)
-    return pl.pallas_call(
+    if interpret is None:
+        interpret = _default_interpret()
+    b, n, m = loads.shape
+    rows = min(row_tile, n)
+    pad = (-n) % rows
+    if pad:
+        # padded rows see k=0 -> nothing fits; their output is sliced off
+        loads = jnp.pad(loads, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, pad)))
+        capacity = jnp.pad(capacity, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    kernel = functools.partial(_select_tile_kernel, strategy=strategy, m=m,
+                               rows=rows)
+    out = pl.pallas_call(
         kernel,
-        grid=(n,),
+        grid=(b, n_pad // rows),
         in_specs=[
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, rows, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
+            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
+            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
+        out_specs=pl.BlockSpec((1, rows), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(loads.astype(jnp.float32), w.astype(jnp.float32),
       k.astype(jnp.int32), capacity.astype(jnp.float32))
+    return out[:, :n]
+
+
+def select_slot_batch(loads, w, k, capacity, *, strategy: str = "best",
+                      interpret: bool | None = None):
+    """loads: (N, M) f32; w, capacity: (N,) f32; k: (N,) i32 (bins created).
+
+    Returns (N,) i32 chosen slot per instance (M = nothing fits).  Thin
+    wrapper over ``select_slot_grid`` with a singleton batch dimension.
+    """
+    return select_slot_grid(loads[None], w[None], k[None], capacity[None],
+                            strategy=strategy, interpret=interpret)[0]

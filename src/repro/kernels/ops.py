@@ -14,14 +14,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .binpack_select import select_slot_batch
+from .binpack_select import (DEFAULT_ROW_TILE, select_slot_batch,
+                             select_slot_grid)
 from .decode_attention import decode_attention_fwd
 from .flash_attention import flash_attention_fwd
+from ._compat import default_interpret as _default_interpret
 from .rwkv6_scan import rwkv6_wkv_fwd
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -118,5 +116,14 @@ def rwkv6_wkv(r, k, v, w, u, s0, chunk: Optional[int] = None):
 
 @functools.partial(jax.jit, static_argnames=("strategy",))
 def select_slot(loads, w, k, capacity, strategy: str = "best"):
-    return select_slot_batch(loads, w, k, capacity, strategy=strategy,
-                             interpret=_default_interpret())
+    # interpret defaults inside the kernel wrapper (same backend rule)
+    return select_slot_batch(loads, w, k, capacity, strategy=strategy)
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "row_tile"))
+def select_slot_batched(loads, w, k, capacity, strategy: str = "best",
+                        row_tile: int = DEFAULT_ROW_TILE):
+    """Batched-grid variant: loads (B, N, M); w/k/capacity (B, N).  One
+    kernel launch covers the whole sweep batch."""
+    return select_slot_grid(loads, w, k, capacity, strategy=strategy,
+                            row_tile=row_tile)

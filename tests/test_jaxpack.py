@@ -8,6 +8,7 @@ disagreement is a logic bug, never rounding.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

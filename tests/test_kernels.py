@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.binpack_select import select_slot_batch
+from repro.kernels.binpack_select import select_slot_batch, select_slot_grid
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.rwkv6_scan import rwkv6_wkv_fwd
@@ -149,3 +149,29 @@ def test_select_slot_matches_ref_and_packer(strategy):
             assert not bool(found)
         else:
             assert bool(found) and int(slot) == exp
+
+
+@pytest.mark.parametrize("strategy", ["first", "best", "worst"])
+@pytest.mark.parametrize("b,n,m,tile", [
+    (1, 64, 32, 64),     # singleton batch, exact tile
+    (4, 50, 16, 16),     # batch, padded rows (50 % 16 != 0)
+    (3, 300, 8, 128),    # multi-tile rows
+])
+def test_select_slot_grid_matches_ref(strategy, b, n, m, tile):
+    """Batched-grid kernel == per-stream oracle, including padded tiles."""
+    rng = np.random.default_rng(1)
+    loads = rng.uniform(0, 1, (b, n, m)).astype(np.float32)
+    w = rng.uniform(0, 0.6, (b, n)).astype(np.float32)
+    k = rng.integers(0, m + 1, (b, n)).astype(np.int32)
+    cap = np.ones((b, n), np.float32)
+    got = select_slot_grid(jnp.asarray(loads), jnp.asarray(w),
+                           jnp.asarray(k), jnp.asarray(cap),
+                           strategy=strategy, row_tile=tile, interpret=True)
+    want = np.stack([
+        np.asarray(ref.select_slot_ref(jnp.asarray(loads[i]),
+                                       jnp.asarray(w[i]), jnp.asarray(k[i]),
+                                       jnp.asarray(cap[i]),
+                                       strategy=strategy))
+        for i in range(b)
+    ])
+    np.testing.assert_array_equal(np.asarray(got), want)

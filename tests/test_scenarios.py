@@ -1,0 +1,134 @@
+"""Scenario generator + batched sweep driver tests.
+
+The load-bearing property (ISSUE acceptance criterion): the vmapped sweep
+with batch size 1 is *bit-identical* to the existing single-stream
+``evaluate_stream_jax`` path, so every figure produced through the batched
+engine is the figure the single-stream code would have produced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.jaxpack import (
+    ALL_ALGORITHM_NAMES,
+    evaluate_stream_jax,
+    sweep_streams,
+)
+from repro.core.scenarios import (
+    SCENARIO_FAMILIES,
+    generate_scenario,
+    scenario_suite,
+    stack_suite,
+)
+
+KEY = jax.random.key(42)
+
+
+# ---------------------------------------------------------------------------
+# generator: shapes, dtypes, ranges, determinism
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", sorted(SCENARIO_FAMILIES))
+def test_scenario_shape_dtype_nonnegative(family):
+    out = generate_scenario(family, KEY, batch=3, iters=20, n=7)
+    assert out.shape == (3, 20, 7)
+    assert out.dtype == jnp.float32
+    assert bool((np.asarray(out) >= 0.0).all()), f"{family} produced negatives"
+
+
+@pytest.mark.parametrize("family", sorted(SCENARIO_FAMILIES))
+def test_scenario_deterministic_under_fixed_key(family):
+    a = generate_scenario(family, KEY, batch=2, iters=16, n=5)
+    b = generate_scenario(family, KEY, batch=2, iters=16, n=5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = generate_scenario(family, jax.random.key(1), batch=2, iters=16, n=5)
+    assert not np.array_equal(np.asarray(a), np.asarray(c)), (
+        f"{family}: different keys gave identical traces")
+
+
+def test_scenario_knobs_forwarded():
+    calm = generate_scenario("random_walk", KEY, 1, 32, 6, delta=0.0)
+    wild = generate_scenario("random_walk", KEY, 1, 32, 6, delta=25.0)
+    calm = np.asarray(calm)
+    assert np.abs(calm - calm[:, :1]).max() < 1e-7  # delta=0: flat
+    assert np.abs(np.diff(np.asarray(wild), axis=1)).max() > 0
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        generate_scenario("tsunami", KEY, 1, 4, 2)
+
+
+def test_suite_and_stack():
+    suite = scenario_suite(KEY, batch=2, iters=8, n=4,
+                           families=("diurnal", "bursty", "churn"))
+    assert sorted(suite) == ["bursty", "churn", "diurnal"]
+    labels, batch = stack_suite(suite)
+    assert batch.shape == (6, 8, 4)
+    assert labels == ("diurnal", "diurnal", "bursty", "bursty",
+                      "churn", "churn")
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+def _trace_batch(batch=3, iters=24, n=8):
+    return generate_scenario("bursty", jax.random.key(7), batch, iters, n)
+
+
+def test_sweep_shapes_and_dtypes():
+    batch = _trace_batch()
+    res = sweep_streams(("NF", "BFD", "MBFP"), batch, 1.0)
+    assert res.algorithms == ("NF", "BFD", "MBFP")
+    for arr, dt in ((res.bins, jnp.int32), (res.rscores, jnp.float32),
+                    (res.migrations, jnp.int32)):
+        assert arr.shape == (3, 3, 24)
+        assert arr.dtype == dt
+    # first iteration starts from an empty assignment: nothing can migrate
+    assert int(np.asarray(res.migrations)[:, :, 0].sum()) == 0
+    assert float(np.asarray(res.rscores)[:, :, 0].sum()) == 0.0
+
+
+@pytest.mark.parametrize("algo", sorted(ALL_ALGORITHM_NAMES))
+def test_sweep_batch1_bit_identical_to_single_stream(algo):
+    batch = _trace_batch(batch=1, iters=30, n=10)
+    res = sweep_streams((algo,), batch, 1.0)
+    bins, rs = evaluate_stream_jax(batch[0], 1.0, algorithm=algo)
+    np.testing.assert_array_equal(np.asarray(res.bins[0, 0]),
+                                  np.asarray(bins))
+    # bit-identical, not approx: same scan, vmapped over a singleton axis
+    np.testing.assert_array_equal(np.asarray(res.rscores[0, 0]),
+                                  np.asarray(rs))
+
+
+def test_sweep_batched_rows_match_individual_streams():
+    """Each row of a batch>1 sweep equals that stream swept alone."""
+    batch = _trace_batch(batch=3, iters=20, n=6)
+    res = sweep_streams(("BFD", "MWF"), batch, 1.0)
+    for b in range(3):
+        solo = sweep_streams(("BFD", "MWF"), batch[b:b + 1], 1.0)
+        np.testing.assert_array_equal(np.asarray(res.bins[:, b]),
+                                      np.asarray(solo.bins[:, 0]))
+        np.testing.assert_array_equal(np.asarray(res.rscores[:, b]),
+                                      np.asarray(solo.rscores[:, 0]))
+        np.testing.assert_array_equal(np.asarray(res.migrations[:, b]),
+                                      np.asarray(solo.migrations[:, 0]))
+
+
+def test_sweep_migration_counts_consistent_with_rscore():
+    """Zero migrations in an iteration forces a zero Rscore and vice versa
+    (all generated speeds are > 0 with probability 1)."""
+    batch = _trace_batch(batch=2, iters=24, n=8)
+    res = sweep_streams(("FFD",), batch, 1.0)
+    migs = np.asarray(res.migrations[0])
+    rs = np.asarray(res.rscores[0])
+    assert ((migs == 0) == (rs == 0.0)).all()
+
+
+def test_sweep_result_for_algorithm_lookup():
+    batch = _trace_batch(batch=2, iters=10, n=5)
+    res = sweep_streams(("NF", "WFD"), batch, 1.0)
+    bins, rs, migs = res.for_algorithm("wfd")
+    np.testing.assert_array_equal(np.asarray(bins), np.asarray(res.bins[1]))
+    np.testing.assert_array_equal(np.asarray(migs),
+                                  np.asarray(res.migrations[1]))

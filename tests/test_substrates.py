@@ -78,13 +78,50 @@ def test_checkpoint_detects_corruption(tmp_path):
     d = str(tmp_path / "ckpt")
     save_checkpoint(d, 1, {"x": jnp.ones((8,))})
     blob = [f for f in os.listdir(os.path.join(d, "step_00000001"))
-            if f.endswith(".zst")][0]
+            if f.endswith((".zst", ".zz"))][0]
     path = os.path.join(d, "step_00000001", blob)
     with open(path, "r+b") as f:
         f.seek(4)
         f.write(b"\x00\x01")
     with pytest.raises(Exception):
         restore_checkpoint(d, 1, {"x": jax.ShapeDtypeStruct((8,), jnp.float32)})
+
+
+def test_checkpoint_zlib_fallback_roundtrip(tmp_path, monkeypatch):
+    """Without zstandard, blobs are zlib-compressed .zz files and restore
+    exactly; the codec is recorded per leaf in the manifest."""
+    from repro.checkpoint import store
+    monkeypatch.setattr(store, "zstd", None)
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(6.0), "b": jnp.ones((2, 2))}
+    store.save_checkpoint(d, 1, tree)
+    files = os.listdir(os.path.join(d, "step_00000001"))
+    assert all(f.endswith(".zz") for f in files if f != "MANIFEST.msgpack")
+    out = store.restore_checkpoint(
+        d, 1, {"w": jax.ShapeDtypeStruct((6,), jnp.float32),
+               "b": jax.ShapeDtypeStruct((2, 2), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(6.0))
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.ones((2, 2)))
+
+
+def test_checkpoint_zstd_without_zstandard_raises(tmp_path, monkeypatch):
+    """A zstd-coded checkpoint on a host without zstandard fails loudly."""
+    import msgpack
+
+    from repro.checkpoint import store
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"x": jnp.ones((4,))})
+    mpath = os.path.join(d, "step_00000001", "MANIFEST.msgpack")
+    with open(mpath, "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    for meta in manifest["leaves"].values():
+        meta["codec"] = "zstd"
+    with open(mpath, "wb") as f:
+        f.write(msgpack.packb(manifest))
+    monkeypatch.setattr(store, "zstd", None)
+    with pytest.raises(ImportError, match="zstandard is not"):
+        store.restore_checkpoint(
+            d, 1, {"x": jax.ShapeDtypeStruct((4,), jnp.float32)})
 
 
 def test_pipeline_determinism_and_resume():
