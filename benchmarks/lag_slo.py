@@ -1,0 +1,117 @@
+"""Lag-SLO sweep: every packing algorithm + both reactive baselines x all
+six scenario families, through the closed-loop twin (``repro.lagsim``).
+
+For each family a batch of traces runs under every policy in one vmapped
+XLA program; the per-(policy, stream) SLO metrics (peak lag, violation
+fraction, time-to-drain, consumer-seconds, migrations) are averaged over
+the batch and written to ``BENCH_lagsim.json`` at the repo root -- the
+start of the perf/SLO trajectory the ROADMAP asks for.
+
+The file also records the speed claim behind the subsystem: wall time per
+simulated (stream, step) for the batched twin vs the Python object loop
+(``serving/simulation.py``) on a same-sized workload.  The acceptance bar
+is a >= 50x advantage; on CPU the measured gap is orders of magnitude.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py          (lagsim_* rows)
+or    PYTHONPATH=src:. python benchmarks/lag_slo.py      (JSON only)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
+from repro.lagsim import (
+    ALL_POLICY_NAMES,
+    LagSimConfig,
+    summarize_sweep,
+    sweep_lag,
+)
+from repro.serving import AutoscaleSimulation
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_lagsim.json")
+
+BATCH = 2
+ITERS = 48
+N_PARTITIONS = 10
+CAPACITY = 1.0
+SEED = 0
+
+
+def _python_loop_us_per_step(n: int, steps: int = 120) -> float:
+    """Wall time per tick of the Python closed loop on one stream."""
+    cap = 1.0e6
+    rates = [0.35e6 + 0.04e6 * i for i in range(n)]
+    sim = AutoscaleSimulation(
+        n_partitions=n, rate_fn=AutoscaleSimulation.constant_rates(rates),
+        capacity=cap, algorithm="BFD", monitor_interval=5.0)
+    sim.run(seconds=10, dt=1.0)            # warm up past consumer creation
+    t0 = time.perf_counter()
+    sim.run(seconds=steps, dt=1.0)
+    return (time.perf_counter() - t0) / steps * 1e6
+
+
+def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
+        policies: Sequence[str] = ALL_POLICY_NAMES,
+        families: Sequence[str] = tuple(SCENARIO_FAMILIES),
+        seed: int = SEED) -> Dict:
+    """Full sweep -> nested result dict (also written to BENCH_lagsim.json)."""
+    policies = tuple(p.upper() for p in policies)
+    cfg = LagSimConfig(capacity=CAPACITY, dt=1.0, migration_steps=2)
+    suite = scenario_suite(jax.random.key(seed), batch, iters, n,
+                           capacity=CAPACITY, families=tuple(families))
+
+    per_family: Dict[str, Dict[str, Dict[str, float]]] = {}
+    seconds: Dict[str, float] = {}
+    for fam, traces in suite.items():
+        res = jax.block_until_ready(sweep_lag(policies, traces, cfg))  # compile
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(sweep_lag(policies, traces, cfg))
+        seconds[fam] = time.perf_counter() - t0
+        summary = summarize_sweep(res, cfg)                  # {metric: [P, B]}
+        per_family[fam] = {
+            pol: {metric: float(np.mean(vals[p]))
+                  for metric, vals in summary.items()}
+            for p, pol in enumerate(policies)
+        }
+
+    jax_us = float(np.mean(list(seconds.values()))) * 1e6 / (
+        len(policies) * batch * iters)
+    py_us = _python_loop_us_per_step(n)
+    out = {
+        "config": {
+            "batch": batch, "iters": iters, "n_partitions": n,
+            "capacity": CAPACITY, "migration_steps": cfg.migration_steps,
+            "slo_lag": cfg.resolve(n).slo_lag, "seed": seed,
+            "policies": list(policies), "families": list(suite),
+        },
+        "families": per_family,
+        "timing": {
+            "lagsim_us_per_stream_step": jax_us,
+            "python_us_per_step": py_us,
+            "speedup_vs_python": py_us / jax_us if jax_us > 0 else float("inf"),
+            "sweep_seconds_per_family": seconds,
+        },
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def main() -> None:
+    out = run()
+    t = out["timing"]
+    print(f"wrote {BENCH_PATH}")
+    print(f"lagsim: {t['lagsim_us_per_stream_step']:.2f} us/(stream*step)  "
+          f"python loop: {t['python_us_per_step']:.1f} us/step  "
+          f"speedup: {t['speedup_vs_python']:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ where meaningful, else 0; derived = the quantity the paper reports).
   fig9_pareto_*       Pareto-front membership per delta        (Fig. 9)
   tab6_capacity_*     consumer max-throughput calibration      (Table VI/Fig. 10)
   packer_latency_*    reassignment-decision latency            (Sec. III premise)
+  lagsim_*            closed-loop lag SLO sweep + speedup      (Sec. VI-D claim)
   roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
 
 The fig6/fig8/fig9 sections run through the batched scenario-sweep engine
@@ -49,6 +50,18 @@ def main() -> None:
     from benchmarks import packer_latency
     for name, us in packer_latency.run().items():
         print(f"packer_latency_{name},{us:.1f},0")
+
+    from benchmarks import lag_slo
+    lag = lag_slo.run()                 # also writes BENCH_lagsim.json
+    for fam, per_policy in sorted(lag["families"].items()):
+        for pol, metrics in per_policy.items():
+            for metric in ("violation_frac", "consumer_seconds",
+                           "total_migrations"):
+                print(f"lagsim_{fam}_{pol}_{metric},0,"
+                      f"{metrics[metric]:.6f}")
+    print(f"lagsim_speedup_vs_python,"
+          f"{lag['timing']['lagsim_us_per_stream_step']:.1f},"
+          f"{lag['timing']['speedup_vs_python']:.1f}")
 
     from benchmarks import roofline
     for name, val in roofline.run().items():

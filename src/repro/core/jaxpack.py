@@ -302,6 +302,16 @@ def _pack_dispatch(name: str):
     raise ValueError(f"unknown algorithm {name!r}")
 
 
+def packer_for(name: str):
+    """Public dispatch: ``name`` -> ``fn(speeds, prev, capacity) -> PackedJax``.
+
+    The callable is scan-safe (pure jax.lax control flow), so downstream
+    closed loops -- the controller decision step, ``repro.lagsim`` -- can run
+    a repack every simulated step inside one jitted program.
+    """
+    return _pack_dispatch(name)
+
+
 def _stream_scan(stream: jax.Array, capacity, algorithm: str
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Shared scan over an (N, P) stream: the previous iteration's assignment

@@ -1,0 +1,103 @@
+"""Fused closed-loop lag update as a Pallas TPU kernel, batched over streams.
+
+One simulated step of the lag digital twin (``repro.lagsim``) is:
+
+  1. production:  avail_i = lag_i + produced_i
+  2. segment-sum: L_c = sum of avail_i over *readable* partitions of bin c
+  3. drain:       every readable partition of bin c sheds the fraction
+                  min(1, cap_c / L_c) of its backlog, so each consumer
+                  drains exactly min(L_c, cap_c) bytes in aggregate
+                  (proportional water-filling of a shared budget)
+
+Steps 2-3 are a one-hot segment reduction plus a gather -- the hot inner
+loop when the twin sweeps hundreds of scenarios -- so the kernel fuses all
+three into a single VMEM pass per stream: ``grid = (B,)``, each program
+instance owns one stream's ``(N,)`` state and reduces over the ``(N, M)``
+one-hot plane in registers.  Partitions that are unreadable (mid-migration
+downtime, ``readable == 0``) or unassigned (``assign < 0``) keep their
+backlog untouched.
+
+Semantics are pinned to the pure-jnp oracle ``lag_update_reference`` below
+(tests/test_lagsim.py); on hosts without a TPU the wrapper falls back to
+Pallas interpreter mode automatically, like ``binpack_select``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import default_interpret as _default_interpret
+
+_TINY = 1e-30   # python literal so it is not captured as a traced const
+
+
+def lag_update_reference(lag, produced, assign, readable, cap, *, m: int):
+    """Pure-jnp oracle over ``(..., N)`` state arrays.
+
+    lag, produced: f32[..., N] backlog and this step's production (bytes);
+    assign: i32[..., N] bin name per partition (< ``m``; -1 = unassigned);
+    readable: bool/i32[..., N] -- 0 while a partition is in migration
+    downtime; cap: per-consumer drain budget for the step, a scalar or any
+    shape broadcastable to the per-bin sums f32[..., M].  Returns the
+    post-drain backlog f32[..., N].
+    """
+    avail = lag + produced
+    names = jnp.arange(m, dtype=jnp.int32)
+    live = (readable.astype(bool)) & (assign >= 0)
+    onehot = (assign[..., :, None] == names) & live[..., :, None]   # (..., N, M)
+    per_bin = jnp.sum(jnp.where(onehot, avail[..., :, None], 0.0), axis=-2)
+    ratio = jnp.minimum(1.0, cap / jnp.maximum(per_bin, _TINY))
+    frac = jnp.sum(jnp.where(onehot, ratio[..., None, :], 0.0), axis=-1)
+    return jnp.maximum(avail * (1.0 - frac), 0.0)
+
+
+def _lag_update_kernel(lag_ref, prod_ref, assign_ref, readable_ref, cap_ref,
+                       out_ref, *, n: int, m: int):
+    """One stream: fused produce + one-hot segment drain over (N, M)."""
+    avail = lag_ref[0] + prod_ref[0]                       # (N,)
+    assign = assign_ref[0]
+    live = (readable_ref[0] > 0) & (assign >= 0)
+    names = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    onehot = (assign[:, None] == names) & live[:, None]    # (N, M)
+    per_bin = jnp.sum(jnp.where(onehot, avail[:, None], 0.0), axis=0)  # (M,)
+    ratio = jnp.minimum(1.0, cap_ref[0] / jnp.maximum(per_bin, _TINY))
+    frac = jnp.sum(jnp.where(onehot, ratio[None, :], 0.0), axis=1)     # (N,)
+    out_ref[0] = jnp.maximum(avail * (1.0 - frac), 0.0)
+
+
+def lag_update_batch(lag, produced, assign, readable, cap, *,
+                     interpret: bool | None = None):
+    """Fused lag update over a batch of streams in one kernel launch.
+
+    lag, produced: f32[B, N]; assign: i32[B, N] (-1 = unassigned);
+    readable: i32[B, N] (0 = migration downtime); cap: f32[B, M] per-bin
+    drain budget for the step.  Returns f32[B, N] post-drain backlog.
+    ``grid = (B,)``; each instance holds one stream's (N,) state plus the
+    (N, M) one-hot plane in VMEM.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, n = lag.shape
+    m = cap.shape[1]
+    kernel = functools.partial(_lag_update_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(lag.astype(jnp.float32), produced.astype(jnp.float32),
+      assign.astype(jnp.int32), readable.astype(jnp.int32),
+      cap.astype(jnp.float32))

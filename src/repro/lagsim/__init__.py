@@ -1,0 +1,32 @@
+"""Vectorized closed-loop lag simulator with SLO metrics.
+
+A digital twin of the consumer-group control loop: per-partition backlog
+evolves under a production trace, a scaling policy (the paper's bin-packing
+algorithms or KEDA-style reactive baselines) and migration downtime, as one
+``jax.lax.scan`` per stream vmapped over the scenario batch.  See
+``engine.py`` for the step semantics, ``policies.py`` for the policy
+catalogue and ``metrics.py`` for the SLO reductions.
+"""
+from .engine import (
+    LagSimConfig,
+    LagSweepResult,
+    LagTrace,
+    simulate_lag,
+    sweep_lag,
+)
+from .metrics import SLO_METRIC_NAMES, longest_excursion, slo_summary, summarize_sweep
+from .policies import ALL_POLICY_NAMES, REACTIVE_BASELINE_NAMES
+
+__all__ = [
+    "ALL_POLICY_NAMES",
+    "LagSimConfig",
+    "LagSweepResult",
+    "LagTrace",
+    "REACTIVE_BASELINE_NAMES",
+    "SLO_METRIC_NAMES",
+    "longest_excursion",
+    "simulate_lag",
+    "slo_summary",
+    "summarize_sweep",
+    "sweep_lag",
+]

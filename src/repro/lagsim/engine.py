@@ -1,0 +1,206 @@
+"""Closed-loop lag digital twin: one ``lax.scan`` per stream, vmapped over
+the scenario batch.
+
+``serving/simulation.py`` ticks one Python-object world at a time
+(broker + JSON mailboxes + replica objects); this engine keeps only the
+state that determines consumer-group lag -- per-partition backlog, the
+assignment, and migration downtime -- and evolves it as pure arrays, so a
+whole fleet of scenarios x policies compiles into a handful of XLA
+programs.  Per step ``t``:
+
+  1. each partition produces ``rate[t] * dt`` bytes of backlog;
+  2. the policy (a bin-packing algorithm or a reactive baseline, see
+     ``policies.py``) maps the current speeds / backlog / previous
+     assignment to a new assignment and a consumer count;
+  3. partitions whose owner changed become unreadable for
+     ``migration_steps`` steps -- the paper's rebalancing cost (data
+     cannot be read while a queue migrates) made physical;
+  4. every consumer drains up to ``capacity * dt`` bytes from its
+     readable partitions, proportionally to their backlog (shared-budget
+     water-filling; the fused Pallas kernel in
+     ``kernels/lag_update.py`` implements the same update).
+
+The recorded trajectories (total/max lag, consumers, migrations,
+unreadable partitions) feed the SLO metrics in ``metrics.py``.  A golden
+test cross-validates the twin against ``serving/simulation.py`` on a
+constant-rate scenario (tests/test_lagsim.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.lag_update import lag_update_batch, lag_update_reference
+
+from .policies import make_policy
+
+NEG = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class LagSimConfig:
+    """Static knobs of the twin (hashable: one jit cache entry per config).
+
+    ``capacity`` is the consumer drain rate in bytes/s (the paper's C),
+    ``dt`` the seconds per step.  ``lag_threshold`` / ``slo_lag`` /
+    ``max_consumers`` default to values derived from capacity and the
+    partition count when left ``None`` (see ``resolve``).
+    """
+
+    capacity: float = 1.0
+    dt: float = 1.0
+    migration_steps: int = 2          # downtime steps for a moved partition
+    lag_threshold: Optional[float] = None    # KEDA_LAG target (bytes)
+    target_utilization: float = 0.75         # RATE_THRESHOLD target
+    max_consumers: Optional[int] = None      # reactive clamp; default n
+    scale_down_patience: int = 3             # stabilization window (steps)
+    slo_lag: Optional[float] = None          # metrics threshold (bytes)
+    use_kernel: bool = False                 # Pallas fused update in the scan
+
+    @property
+    def slo_lag_or_default(self) -> float:
+        """The metrics threshold; defaults to one consumer-step of drain."""
+        return (self.slo_lag if self.slo_lag is not None
+                else self.capacity * self.dt)
+
+    def resolve(self, n: int) -> "LagSimConfig":
+        """Fill derived defaults for an ``n``-partition workload."""
+        return dataclasses.replace(
+            self,
+            lag_threshold=(self.lag_threshold if self.lag_threshold is not None
+                           else 2.0 * self.capacity * self.dt),
+            max_consumers=(self.max_consumers if self.max_consumers is not None
+                           else n),
+            slo_lag=self.slo_lag_or_default,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LagTrace:
+    """Per-step trajectories of one simulated stream (axes ``[..., T]``)."""
+
+    lag_total: jax.Array    # f32  total backlog after draining
+    lag_max: jax.Array      # f32  worst single-partition backlog
+    consumers: jax.Array    # i32  consumers billed this step
+    migrations: jax.Array   # i32  partitions that changed owner
+    unreadable: jax.Array   # i32  partitions in migration downtime
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LagSweepResult:
+    """Stacked trajectories of a policy sweep, indexed ``[policy, stream, t]``."""
+
+    lag_total: jax.Array    # f32[P, B, T]
+    lag_max: jax.Array      # f32[P, B, T]
+    consumers: jax.Array    # i32[P, B, T]
+    migrations: jax.Array   # i32[P, B, T]
+    unreadable: jax.Array   # i32[P, B, T]
+    policies: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    def for_policy(self, name: str) -> LagTrace:
+        p = self.policies.index(name.upper())
+        return LagTrace(self.lag_total[p], self.lag_max[p], self.consumers[p],
+                        self.migrations[p], self.unreadable[p])
+
+
+def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
+              cfg: LagSimConfig) -> LagTrace:
+    """Unjitted core: ``trace`` f32[T, N] -> LagTrace of f32/i32[T]."""
+    n = trace.shape[1]
+    m = 2 * n + 2                       # packer bin-name universe
+    cfg = cfg.resolve(n)
+    cap_step = jnp.float32(cfg.capacity * cfg.dt)
+    init, policy_step = make_policy(
+        policy, n, jnp.float32(cfg.capacity),
+        lag_threshold=jnp.float32(cfg.lag_threshold),
+        target_utilization=jnp.float32(cfg.target_utilization),
+        max_consumers=cfg.max_consumers,
+        scale_down_patience=cfg.scale_down_patience)
+
+    def drain(lag, produced, assign, readable):
+        if cfg.use_kernel:
+            out = lag_update_batch(
+                lag[None], produced[None], assign[None],
+                readable.astype(jnp.int32)[None],
+                jnp.full((1, m), cap_step, jnp.float32))
+            return out[0]
+        return lag_update_reference(lag, produced, assign, readable,
+                                    cap_step, m=m)
+
+    def step(carry, rate_t):
+        lag, assign, down, pstate = carry
+        produced = rate_t * jnp.float32(cfg.dt)
+        observed = lag + produced       # backlog a lag-reactive scaler sees
+        new_assign, n_active, pstate = policy_step(
+            rate_t, observed, assign, pstate)
+        moved = (assign >= 0) & (new_assign != assign)
+        down = jnp.where(moved, jnp.int32(cfg.migration_steps),
+                         jnp.maximum(down - 1, 0))
+        readable = (down == 0) & (new_assign >= 0)
+        new_lag = drain(lag, produced, new_assign, readable)
+        ys = (jnp.sum(new_lag), jnp.max(new_lag),
+              n_active.astype(jnp.int32),
+              jnp.sum(moved.astype(jnp.int32)),
+              jnp.sum((down > 0).astype(jnp.int32)))
+        return (new_lag, new_assign, down, pstate), ys
+
+    carry0 = (initial_lag.astype(jnp.float32), jnp.full(n, NEG, jnp.int32),
+              jnp.zeros(n, jnp.int32), init(n))
+    _, (tot, mx, cons, migs, unread) = lax.scan(
+        step, carry0, trace.astype(jnp.float32))
+    return LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
+                    migrations=migs, unreadable=unread)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
+def _simulate_jit(trace, initial_lag, policy: str, cfg: LagSimConfig):
+    return _simulate(trace, initial_lag, policy, cfg)
+
+
+def simulate_lag(trace: jax.Array, *, policy: str,
+                 cfg: LagSimConfig = LagSimConfig(),
+                 initial_lag: Optional[jax.Array] = None) -> LagTrace:
+    """Run one policy over one stream ``f32[T, N]`` -> ``LagTrace`` of [T].
+
+    ``initial_lag`` (f32[N], default zeros) seeds the per-partition backlog
+    -- e.g. to resume from a measured system state or to study spike
+    recovery from a known excursion.
+    """
+    if initial_lag is None:
+        initial_lag = jnp.zeros(trace.shape[1], jnp.float32)
+    return _simulate_jit(trace, jnp.asarray(initial_lag, jnp.float32),
+                         policy.upper(), cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("policies", "cfg"))
+def _sweep_jit(policies: Tuple[str, ...], traces: jax.Array,
+               cfg: LagSimConfig) -> LagSweepResult:
+    zero0 = jnp.zeros(traces.shape[2], jnp.float32)
+    per_policy = [
+        jax.vmap(lambda tr, p=p: _simulate(tr, zero0, p, cfg))(traces)
+        for p in policies
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_policy)
+    return LagSweepResult(
+        lag_total=stacked.lag_total, lag_max=stacked.lag_max,
+        consumers=stacked.consumers, migrations=stacked.migrations,
+        unreadable=stacked.unreadable, policies=policies)
+
+
+def sweep_lag(policies: Tuple[str, ...], traces: jax.Array,
+              cfg: LagSimConfig = LagSimConfig()) -> LagSweepResult:
+    """Closed-loop sweep: every policy over a batch of streams f32[B, T, N].
+
+    Each policy's scan is vmapped over the batch axis; with batch size 1 a
+    row is bit-identical to ``simulate_lag`` on the single stream
+    (tests/test_lagsim.py).  Names are case-normalized before the jit
+    boundary so equivalent spellings share one compile-cache entry.
+    """
+    return _sweep_jit(tuple(p.upper() for p in policies), traces, cfg)

@@ -1,0 +1,110 @@
+"""Scaling policies for the closed-loop lag simulator.
+
+Two families share one scan-safe interface:
+
+* **Packing policies** -- every name in ``jaxpack.ALL_ALGORITHM_NAMES``.
+  Each step repacks the current write speeds with the previous assignment
+  as ``prev`` (sticky naming), exactly like the controller's REASSIGN
+  state; the bin names are the consumer ids.
+
+* **Reactive baselines** -- the industry-standard scalers the paper is
+  implicitly compared against (KEDA Kafka scaler / Cloud Run Kafka
+  autoscaler, see SNIPPETS.md):
+
+  - ``KEDA_LAG``: desired consumers = ceil(total_lag / lag_threshold),
+    KEDA's ``lagThreshold`` rule, clamped to [1, max_consumers].
+  - ``RATE_THRESHOLD``: desired consumers = ceil(total_write_rate /
+    (target_utilization * capacity)) -- a consumption-rate target with no
+    notion of per-partition fit.
+
+  Both assign partitions eagerly by ``partition % n`` (Kafka's eager
+  round-robin rebalance): whenever ``n`` changes, most partitions migrate
+  and eat downtime -- the rebalancing cost the R-score is designed to
+  avoid.  Scale-down waits for ``scale_down_patience`` consecutive
+  under-target steps (KEDA's stabilization window); scale-up is immediate.
+
+A policy is ``(init, step)``:
+
+  init(n) -> state0                                  (pytree carried by scan)
+  step(speeds, lag, prev_assign, state)
+      -> (assign i32[N], n_consumers i32, state')
+
+``speeds`` are the step's true per-partition write rates (the twin's
+monitor is an oracle); ``lag`` is the backlog *including* this step's
+production, which is what a lag-reactive scaler observes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.jaxpack import ALL_ALGORITHM_NAMES, packer_for
+
+REACTIVE_BASELINE_NAMES: Tuple[str, ...] = ("KEDA_LAG", "RATE_THRESHOLD")
+ALL_POLICY_NAMES: Tuple[str, ...] = ALL_ALGORITHM_NAMES + REACTIVE_BASELINE_NAMES
+
+
+def _make_packing_policy(name: str, n: int, capacity):
+    packer = packer_for(name)
+
+    def init(n_partitions: int):
+        return jnp.int32(0)            # stateless; prev_assign is the memory
+
+    def step(speeds, lag, prev_assign, state):
+        res = packer(speeds, prev_assign, capacity)
+        return res.bin_of, res.n_bins, state
+
+    return init, step
+
+
+def _make_reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
+                          target_utilization, max_consumers,
+                          scale_down_patience):
+    pid = jnp.arange(n, dtype=jnp.int32)
+    max_c = jnp.int32(max_consumers)
+    patience = jnp.int32(scale_down_patience)
+
+    def init(n_partitions: int):
+        return (jnp.int32(1), jnp.int32(0))     # (n_current, under_count)
+
+    def step(speeds, lag, prev_assign, state):
+        n_cur, under = state
+        if kind == "lag":
+            want = jnp.ceil(jnp.sum(lag) / lag_threshold)
+        else:
+            want = jnp.ceil(jnp.sum(speeds) / (target_utilization * capacity))
+        want = jnp.clip(want.astype(jnp.int32), 1, max_c)
+        under = jnp.where(want < n_cur, under + 1, jnp.int32(0))
+        go_down = under >= patience
+        n_new = jnp.where(want > n_cur, want,
+                          jnp.where(go_down, want, n_cur))
+        under = jnp.where(go_down, jnp.int32(0), under)
+        assign = pid % n_new
+        return assign, n_new, (n_new, under)
+
+    return init, step
+
+
+def make_policy(name: str, n: int, capacity, *, lag_threshold,
+                target_utilization, max_consumers, scale_down_patience):
+    """Build ``(init, step)`` for ``name`` over ``n`` partitions.
+
+    ``capacity``/``lag_threshold`` are in bytes *per step* (the engine
+    pre-multiplies by dt).  Unknown names raise ValueError.
+    """
+    key = name.upper()
+    if key in ALL_ALGORITHM_NAMES:
+        return _make_packing_policy(key, n, capacity)
+    if key == "KEDA_LAG":
+        return _make_reactive_policy(
+            "lag", n, capacity, lag_threshold=lag_threshold,
+            target_utilization=target_utilization, max_consumers=max_consumers,
+            scale_down_patience=scale_down_patience)
+    if key == "RATE_THRESHOLD":
+        return _make_reactive_policy(
+            "rate", n, capacity, lag_threshold=lag_threshold,
+            target_utilization=target_utilization, max_consumers=max_consumers,
+            scale_down_patience=scale_down_patience)
+    raise ValueError(
+        f"unknown policy {name!r}; have {sorted(ALL_POLICY_NAMES)}")

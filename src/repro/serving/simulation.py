@@ -36,6 +36,15 @@ class SimMetrics:
 
 
 class AutoscaleSimulation:
+    """Closed-loop world simulation.
+
+    Randomness: ``seed`` drives only this object's producer-side jitter rng
+    (``rate_jitter`` below); deterministic workloads (``constant_rates``, or
+    any jitter-free ``rate_fn``) are unaffected by it.  Stochastic rate
+    functions such as ``random_walk_rates`` carry their *own* seed argument
+    -- pass it there, not here.
+    """
+
     def __init__(
         self,
         n_partitions: int,
@@ -49,6 +58,7 @@ class AutoscaleSimulation:
         min_reassign_interval: float = 0.0,
         overload_factor: float = 1.0,
         seed: int = 0,
+        rate_jitter: float = 0.0,           # +-fraction of rate, from ``seed``
     ):
         self.clock = SimClock()
         self.broker = Broker(self.clock)
@@ -72,14 +82,21 @@ class AutoscaleSimulation:
         self._next_monitor = 0.0
         self.metrics = SimMetrics()
         self.rng = np.random.default_rng(seed)
+        self.rate_jitter = float(rate_jitter)
         self.produced_bytes = 0
 
     # ------------------------------------------------------------------ tick
     def _produce(self, dt: float) -> None:
         t = self.clock.now()
+        jitter = (1.0 + self.rate_jitter *
+                  self.rng.uniform(-1.0, 1.0, self.n_partitions)
+                  if self.rate_jitter else None)
         for i in range(self.n_partitions):
             tp = TopicPartition(self.topic, i)
-            self._accum[i] += max(0.0, self.rate_fn(tp, t)) * dt
+            rate = max(0.0, self.rate_fn(tp, t))
+            if jitter is not None:
+                rate = max(0.0, rate * jitter[i])
+            self._accum[i] += rate * dt
             while self._accum[i] >= self.record_bytes:
                 self.broker.produce(tp, value=b"x" * 0, nbytes=self.record_bytes)
                 self._accum[i] -= self.record_bytes

@@ -1,0 +1,267 @@
+"""Closed-loop lag simulator tests.
+
+Load-bearing properties (ISSUE acceptance criteria):
+
+* the fused Pallas lag-update kernel is bit-equal to its jnp oracle, and
+  the engine produces identical trajectories through either path;
+* batch-size-1 sweeps are bit-identical to the single-stream path;
+* the twin reproduces ``serving/simulation.py`` lag trajectories on a
+  constant-rate golden scenario within a few record quanta.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lag_update import lag_update_batch, lag_update_reference
+from repro.lagsim import (
+    ALL_POLICY_NAMES,
+    REACTIVE_BASELINE_NAMES,
+    LagSimConfig,
+    longest_excursion,
+    simulate_lag,
+    slo_summary,
+    summarize_sweep,
+    sweep_lag,
+)
+
+CFG = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+
+
+def _constant(T, rates):
+    return jnp.tile(jnp.asarray(rates, jnp.float32), (T, 1))
+
+
+# ---------------------------------------------------------------------------
+# engine basics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ("BFD", "KEDA_LAG"))
+def test_simulate_shapes_and_dtypes(policy):
+    r = simulate_lag(_constant(12, [0.3, 0.4, 0.2]), policy=policy, cfg=CFG)
+    for arr, dt in ((r.lag_total, jnp.float32), (r.lag_max, jnp.float32),
+                    (r.consumers, jnp.int32), (r.migrations, jnp.int32),
+                    (r.unreadable, jnp.int32)):
+        assert arr.shape == (12,)
+        assert arr.dtype == dt
+
+
+@pytest.mark.parametrize("policy", ("FFD", "MBFP", "RATE_THRESHOLD"))
+def test_underload_drains_to_zero(policy):
+    """Constant rates well under capacity: backlog vanishes, no churn after
+    the assignment settles."""
+    r = simulate_lag(_constant(30, [0.3, 0.4, 0.2, 0.35]), policy=policy,
+                     cfg=CFG)
+    assert float(r.lag_total[-1]) == 0.0
+    assert int(np.asarray(r.migrations)[5:].sum()) == 0
+
+
+def test_overload_grows_at_excess_rate():
+    """A partition above capacity backlogs at exactly (rate - C) * dt."""
+    r = simulate_lag(_constant(40, [1.5, 0.2, 0.2]), policy="BFD", cfg=CFG)
+    lt = np.asarray(r.lag_total)
+    np.testing.assert_allclose(np.diff(lt[-10:]), 0.5, rtol=1e-5)
+
+
+def test_initial_lag_seeds_backlog():
+    trace = _constant(20, [0.1, 0.1])
+    r0 = simulate_lag(trace, policy="BFD", cfg=CFG)
+    r1 = simulate_lag(trace, policy="BFD", cfg=CFG,
+                      initial_lag=jnp.asarray([5.0, 0.0], jnp.float32))
+    assert float(r1.lag_total[0]) > float(r0.lag_total[0])
+    # one consumer drains the seeded spike at capacity
+    lt = np.asarray(r1.lag_total)
+    assert float(lt[-1]) == 0.0
+    np.testing.assert_allclose(np.diff(lt[:4]), -0.8, rtol=1e-5)
+
+
+def test_migration_downtime_costs_lag():
+    """The same thrashy policy with longer downtime windows must backlog
+    strictly more: unreadable partitions keep producing."""
+    spike = jnp.where(jnp.arange(40)[:, None] < 20, 0.2, 0.9)
+    trace = jnp.tile(spike, (1, 5)).astype(jnp.float32)
+    peaks = []
+    for steps in (0, 4):
+        cfg = dataclasses.replace(CFG, migration_steps=steps)
+        r = simulate_lag(trace, policy="KEDA_LAG", cfg=cfg)
+        peaks.append(float(np.asarray(r.lag_total).max()))
+        if steps:
+            assert int(np.asarray(r.unreadable).sum()) > 0
+    assert peaks[1] > peaks[0]
+
+
+def test_reactive_baseline_scales_with_load():
+    """KEDA-style scaler adds consumers when backlog crosses the threshold
+    and releases them (after the patience window) once it drains."""
+    trace = jnp.concatenate([
+        _constant(10, [0.1] * 6), _constant(10, [0.8] * 6),
+        _constant(25, [0.1] * 6)])
+    r = simulate_lag(trace, policy="KEDA_LAG", cfg=CFG)
+    n = np.asarray(r.consumers)
+    assert n[:5].max() == 1
+    assert n[10:20].max() >= 3
+    assert n[-1] <= 2
+    assert int(np.asarray(r.migrations).sum()) > 0
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        simulate_lag(_constant(4, [0.1]), policy="PID", cfg=CFG)
+
+
+def test_policy_name_catalogue():
+    assert set(REACTIVE_BASELINE_NAMES) == {"KEDA_LAG", "RATE_THRESHOLD"}
+    assert set(REACTIVE_BASELINE_NAMES) < set(ALL_POLICY_NAMES)
+    assert "MBFP" in ALL_POLICY_NAMES
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+def test_sweep_batch1_bit_identical_to_single_stream():
+    trace = jax.random.uniform(jax.random.key(0), (24, 6), maxval=0.8)
+    res = sweep_lag(("BFD", "KEDA_LAG"), trace[None], CFG)
+    for p in ("BFD", "KEDA_LAG"):
+        solo = simulate_lag(trace, policy=p, cfg=CFG)
+        got = res.for_policy(p)
+        np.testing.assert_array_equal(np.asarray(got.lag_total[0]),
+                                      np.asarray(solo.lag_total))
+        np.testing.assert_array_equal(np.asarray(got.consumers[0]),
+                                      np.asarray(solo.consumers))
+        np.testing.assert_array_equal(np.asarray(got.migrations[0]),
+                                      np.asarray(solo.migrations))
+
+
+def test_sweep_rows_match_individual_streams():
+    traces = jax.random.uniform(jax.random.key(1), (3, 16, 5), maxval=0.7)
+    res = sweep_lag(("FFD",), traces, CFG)
+    for b in range(3):
+        solo = sweep_lag(("FFD",), traces[b:b + 1], CFG)
+        np.testing.assert_array_equal(np.asarray(res.lag_total[:, b]),
+                                      np.asarray(solo.lag_total[:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+def test_lag_update_kernel_matches_reference():
+    rng = np.random.default_rng(0)
+    for b, n, mm in ((1, 4, 10), (3, 12, 26), (2, 33, 68)):
+        lag = jnp.asarray(rng.uniform(0, 5, (b, n)), jnp.float32)
+        prod = jnp.asarray(rng.uniform(0, 1, (b, n)), jnp.float32)
+        assign = jnp.asarray(rng.integers(-1, mm, (b, n)), jnp.int32)
+        readable = jnp.asarray(rng.integers(0, 2, (b, n)), jnp.int32)
+        cap = jnp.full((b, mm), 1.3, jnp.float32)
+        out_k = lag_update_batch(lag, prod, assign, readable, cap)
+        out_r = lag_update_reference(lag, prod, assign, readable, cap, m=mm)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_lag_update_budget_conservation():
+    """Per consumer, total bytes drained in one step never exceed cap."""
+    rng = np.random.default_rng(7)
+    b, n, mm = 2, 20, 14
+    lag = jnp.asarray(rng.uniform(0, 3, (b, n)), jnp.float32)
+    prod = jnp.asarray(rng.uniform(0, 1, (b, n)), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, mm, (b, n)), jnp.int32)
+    readable = jnp.ones((b, n), jnp.int32)
+    cap = jnp.full((b, mm), 0.9, jnp.float32)
+    out = np.asarray(lag_update_batch(lag, prod, assign, readable, cap))
+    drained = np.asarray(lag + prod) - out
+    assert (drained >= -1e-6).all()
+    for bi in range(b):
+        for c in range(mm):
+            sel = np.asarray(assign)[bi] == c
+            assert drained[bi][sel].sum() <= 0.9 + 1e-5
+
+
+def test_engine_kernel_path_matches_jnp_path():
+    trace = jax.random.uniform(jax.random.key(5), (18, 7), maxval=0.6)
+    a = simulate_lag(trace, policy="MBFP", cfg=CFG)
+    b = simulate_lag(trace, policy="MBFP",
+                     cfg=dataclasses.replace(CFG, use_kernel=True))
+    np.testing.assert_allclose(np.asarray(a.lag_total),
+                               np.asarray(b.lag_total), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.consumers),
+                                  np.asarray(b.consumers))
+
+
+# ---------------------------------------------------------------------------
+# SLO metrics
+# ---------------------------------------------------------------------------
+def test_longest_excursion():
+    mask = np.array([[0, 1, 1, 1, 0, 1, 0], [1, 1, 0, 0, 1, 1, 1]], bool)
+    np.testing.assert_array_equal(longest_excursion(mask), [3, 3])
+
+
+def test_slo_summary_values():
+    lag = np.array([0.0, 3.0, 3.0, 0.5, 0.0])
+    cons = np.array([1, 2, 2, 2, 1])
+    migs = np.array([0, 3, 0, 0, 2])
+    s = slo_summary(lag, cons, migs, slo_lag=1.0, dt=2.0)
+    assert s["peak_lag"] == 3.0
+    assert s["violation_frac"] == pytest.approx(0.4)
+    assert s["time_to_drain"] == 4.0          # 2 steps x dt
+    assert s["consumer_seconds"] == 16.0
+    assert s["total_migrations"] == 5
+
+
+def test_summarize_sweep_shapes():
+    traces = jax.random.uniform(jax.random.key(2), (2, 10, 4), maxval=0.9)
+    res = sweep_lag(("BFD", "RATE_THRESHOLD"), traces, CFG)
+    s = summarize_sweep(res, CFG)
+    for v in s.values():
+        assert v.shape == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# golden cross-validation against the Python closed loop
+# ---------------------------------------------------------------------------
+def test_golden_matches_python_simulation():
+    """``repro.lagsim`` reproduces ``serving/simulation.py`` lag
+    trajectories on a constant-rate scenario.
+
+    The Python world is synchronized out of its startup transient (consumer
+    creation + two-phase handoff have no fixed-step equivalent), then both
+    simulators run the same constant workload from the same per-partition
+    backlog.  ``batch_bytes`` is clamped to ``capacity * dt`` so the Python
+    replica is the paper's constant-rate-C consumer (its default config
+    banks unused budget and bursts above C at up to ``batch_bytes``/s,
+    which the twin deliberately does not model).  Agreement is within a
+    few record quanta per step.
+    """
+    from repro.broker import TopicPartition
+    from repro.serving import AutoscaleSimulation
+
+    cap = 1.0e6
+    rates = [0.3e6, 0.5e6, 0.4e6, 0.6e6, 0.2e6, 0.45e6]
+    n = len(rates)
+    t_sync, t_run = 8, 60
+    record_bytes = 64
+    sim = AutoscaleSimulation(
+        n_partitions=n, rate_fn=AutoscaleSimulation.constant_rates(rates),
+        capacity=cap, algorithm="BFD", record_bytes=record_bytes,
+        monitor_interval=1.0)
+    sim.replica_cfg.batch_bytes = int(cap)
+    sim.manager.config.batch_bytes = int(cap)
+    sim.run(seconds=t_sync, dt=1.0)
+    lag0 = np.array([sim.broker.lag("autoscaler", TopicPartition("sensors", i))
+                     for i in range(n)], np.float32)
+    m = sim.run(seconds=t_run, dt=1.0)
+    py_lag = np.asarray(m.lag_bytes, float)[t_sync:]
+    py_n = np.asarray(m.n_replicas)[t_sync:]
+
+    trace = jnp.tile(jnp.asarray(rates, jnp.float32), (t_run, 1))
+    r = simulate_lag(trace, policy="BFD",
+                     cfg=LagSimConfig(capacity=cap, dt=1.0),
+                     initial_lag=jnp.asarray(lag0))
+    jx_lag = np.asarray(r.lag_total)
+    # consumer counts agree exactly; lag within a few record quanta
+    np.testing.assert_array_equal(py_n, np.asarray(r.consumers))
+    tol = 4 * record_bytes * n
+    assert np.abs(py_lag - jx_lag).max() <= tol, (
+        f"lag divergence {np.abs(py_lag - jx_lag).max():.0f} B > {tol} B")
+    # and nothing migrated in either world under constant load
+    assert int(np.asarray(r.migrations).sum()) == 0

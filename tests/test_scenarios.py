@@ -46,6 +46,24 @@ def test_scenario_deterministic_under_fixed_key(family):
         f"{family}: different keys gave identical traces")
 
 
+def test_suite_bit_identical_across_recompilation():
+    """Same seed => bit-identical trace batch for all six families, even
+    after the jit caches are dropped (a recompile must not change bits)."""
+    def build():
+        suite = scenario_suite(jax.random.key(123), batch=2, iters=12, n=5)
+        return {f: np.asarray(v) for f, v in suite.items()}
+
+    first = build()
+    assert sorted(first) == sorted(SCENARIO_FAMILIES)
+    jax.clear_caches()
+    second = build()
+    for family in SCENARIO_FAMILIES:
+        a, b = first[family], second[family]
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes(), (
+            f"{family}: recompilation changed trace bits")
+
+
 def test_scenario_knobs_forwarded():
     calm = generate_scenario("random_walk", KEY, 1, 32, 6, delta=0.0)
     wild = generate_scenario("random_walk", KEY, 1, 32, 6, delta=25.0)
