@@ -1,0 +1,233 @@
+"""Optimality gaps and Pareto-frontier hypervolumes: every heuristic scored
+against computed ground truth (``repro.opt``), per scenario family.
+
+Three layers of truth per family:
+
+1. **Exact oracle** -- branch-and-bound (`repro.opt.branch_bound`) solves
+   every (stream, iteration) instance to proven optimality; each
+   algorithm's per-iteration bin counts from the batched sweep
+   (``jaxpack.sweep_streams``) are compared as
+   ``gap = (bins - opt) / opt`` (and against the certified L2 lower
+   bound, which keeps the gap >= 0 by construction).
+2. **Annealed optimum** -- the batched simulated annealer at lambda = 0
+   re-solves the same instances; its gap against the oracle certifies the
+   stochastic optimizer itself.
+3. **Frontier** -- per stream, a lambda sweep at a mid-trace instance
+   (previous assignment = the sticky-BFD incumbent) traces the
+   bins-vs-R-score Pareto front; each heuristic repacks the same instance
+   and is scored by domination status and single-point hypervolume ratio
+   against the annealed front.
+
+Writes ``BENCH_opt.json`` at the repo root.  ``--smoke`` shrinks every
+dimension for CI and asserts the invariants the acceptance criteria pin:
+oracle exact everywhere, all 12 per-algorithm gaps vs the lower bound
+nonnegative.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py              (opt_* rows)
+or    PYTHONPATH=src:. python benchmarks/optimality_gap.py   (JSON only)
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
+from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
+from repro.opt import (
+    anneal_chains,
+    anneal_frontier,
+    branch_and_bound,
+    heuristic_point,
+    incumbent_assignment,
+    optimality_gap,
+)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_opt.json")
+
+CAPACITY = 1.0
+SEED = 0
+
+FULL = dict(batch=2, iters=12, n=8, lambdas=(0.0, 0.5, 1.0, 2.0, 4.0, 8.0),
+            restarts=3, steps=250, chains=16)
+SMOKE = dict(batch=1, iters=6, n=6, lambdas=(0.0, 1.0, 4.0),
+             restarts=2, steps=150, chains=12)
+
+
+@functools.partial(jax.jit, static_argnames=("chains", "steps"))
+def _anneal_bins_many(speeds_many, key, *, chains: int, steps: int):
+    """Best annealed (lambda = 0) bin count per instance ``f32[I, N]``."""
+    n = speeds_many.shape[1]
+    lam = jnp.zeros((chains,), jnp.float32)
+    prev = jnp.full((n,), -1, jnp.int32)
+    keys = jax.random.split(key, speeds_many.shape[0])
+
+    def one(speeds, k):
+        res = anneal_chains(speeds, prev, jnp.float32(CAPACITY), lam, k,
+                            steps=steps)
+        return jnp.min(res.bins)
+
+    return jax.vmap(one)(speeds_many, keys)
+
+
+def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
+        restarts: int, steps: int, chains: int,
+        families: Sequence[str] = tuple(SCENARIO_FAMILIES),
+        seed: int = SEED) -> Dict:
+    """Full evaluation -> nested result dict (also written to
+    BENCH_opt.json)."""
+    suite = scenario_suite(jax.random.key(seed), batch, iters, n,
+                           capacity=CAPACITY, families=tuple(families))
+    t_rep = max(iters // 2, 1)
+    out_families: Dict[str, Dict] = {}
+
+    for fi, (fam, traces) in enumerate(suite.items()):
+        tr = np.asarray(traces, np.float64)              # [B, T, N]
+        sweep = sweep_streams(ALL_ALGORITHM_NAMES, traces, CAPACITY)
+        bins = np.asarray(sweep.bins)                    # [A, B, T]
+
+        # 1) exact oracle on every (stream, iteration) instance
+        t0 = time.perf_counter()
+        opt = np.zeros((batch, iters), np.int64)
+        lb = np.zeros((batch, iters), np.int64)
+        exact = 0
+        for b in range(batch):
+            for t in range(iters):
+                r = branch_and_bound(tr[b, t].tolist(), CAPACITY)
+                opt[b, t] = r.n_bins
+                lb[b, t] = r.lower_bound
+                exact += int(r.optimal)
+        oracle_s = time.perf_counter() - t0
+
+        gaps = {}
+        for a, name in enumerate(ALL_ALGORITHM_NAMES):
+            g_opt = optimality_gap(bins[a], opt)
+            g_lb = optimality_gap(bins[a], lb)
+            gaps[name] = {
+                "mean_bins": float(bins[a].mean()),
+                "mean_gap_vs_opt": float(g_opt.mean()),
+                "max_gap_vs_opt": float(g_opt.max()),
+                "mean_gap_vs_lb": float(g_lb.mean()),
+                "min_gap_vs_lb": float(g_lb.min()),
+            }
+
+        # 2) annealed optimum (lambda = 0) on the same instances
+        flat = jnp.asarray(tr.reshape(batch * iters, n), jnp.float32)
+        ann = np.asarray(_anneal_bins_many(
+            flat, jax.random.fold_in(jax.random.key(seed), fi),
+            chains=chains, steps=steps)).reshape(batch, iters)
+        g_ann = optimality_gap(ann, opt)
+        anneal_summary = {
+            "mean_gap_vs_opt": float(g_ann.mean()),
+            "match_frac": float((ann == opt).mean()),
+        }
+
+        # 3) frontier at a mid-trace instance per stream
+        hv_list = []
+        per_algo = {name: {"hv_ratio": [], "dominated": [], "bins": [],
+                           "rscore": []} for name in ALL_ALGORITHM_NAMES}
+        for b in range(batch):
+            prev = incumbent_assignment(tr[b], CAPACITY, t_rep)
+            speeds_t = tr[b, t_rep]
+            fr = anneal_frontier(
+                speeds_t, prev, CAPACITY,
+                jax.random.fold_in(jax.random.key(seed + 1), fi * batch + b),
+                lambdas=lambdas, restarts=restarts, steps=steps)
+            hv_list.append(fr.hypervolume)
+            for name in ALL_ALGORITHM_NAMES:
+                pt = heuristic_point(name, speeds_t, prev, CAPACITY)
+                met = fr.heuristic_metrics(pt)
+                per_algo[name]["hv_ratio"].append(met["hv_ratio"])
+                per_algo[name]["dominated"].append(met["dominated"])
+                per_algo[name]["bins"].append(met["bins"])
+                per_algo[name]["rscore"].append(met["rscore"])
+
+        out_families[fam] = {
+            "oracle": {
+                "mean_opt_bins": float(opt.mean()),
+                "mean_lower_bound": float(lb.mean()),
+                "exact_frac": exact / (batch * iters),
+                "seconds": oracle_s,
+            },
+            "gaps": gaps,
+            "anneal": anneal_summary,
+            "frontier": {
+                "lambdas": list(lambdas),
+                "t_rep": t_rep,
+                "mean_hypervolume": float(np.mean(hv_list)),
+                "per_algorithm": {
+                    name: {
+                        "mean_hv_ratio": float(np.mean(v["hv_ratio"])),
+                        "dominated_frac": float(np.mean(v["dominated"])),
+                        "mean_bins": float(np.mean(v["bins"])),
+                        "mean_rscore": float(np.mean(v["rscore"])),
+                    }
+                    for name, v in per_algo.items()
+                },
+            },
+        }
+
+    out = {
+        "config": {
+            "batch": batch, "iters": iters, "n_partitions": n,
+            "capacity": CAPACITY, "seed": seed, "lambdas": list(lambdas),
+            "restarts": restarts, "steps": steps, "chains": chains,
+            "algorithms": list(ALL_ALGORITHM_NAMES),
+            "families": list(suite),
+        },
+        "families": out_families,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def check_invariants(out: Dict) -> None:
+    """The acceptance bars: the oracle proved every instance, and no
+    heuristic ever beats the certified lower bound."""
+    for fam, res in out["families"].items():
+        assert res["oracle"]["exact_frac"] == 1.0, (
+            f"{fam}: oracle left instances unproven")
+        for name, g in res["gaps"].items():
+            # per-instance, not mean: a single bins < lower_bound anywhere
+            # is a soundness bug that averaging must not hide
+            assert g["min_gap_vs_lb"] >= 0.0, (
+                f"{fam}/{name}: some instance beat the certified lower "
+                f"bound (min gap {g['min_gap_vs_lb']} < 0)")
+        assert res["anneal"]["mean_gap_vs_opt"] >= 0.0, (
+            f"{fam}: annealer below the proven optimum")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; asserts gap/oracle invariants")
+    args = ap.parse_args()
+    p = SMOKE if args.smoke else FULL
+    out = run(**p)
+    check_invariants(out)
+    print(f"wrote {BENCH_PATH}")
+    for fam, res in out["families"].items():
+        worst = max(res["gaps"].items(),
+                    key=lambda kv: kv[1]["mean_gap_vs_opt"])
+        best = min(res["gaps"].items(),
+                   key=lambda kv: kv[1]["mean_gap_vs_opt"])
+        print(f"{fam:<12} opt={res['oracle']['mean_opt_bins']:.2f} bins  "
+              f"anneal match={res['anneal']['match_frac']:.0%}  "
+              f"best {best[0]} (+{100 * best[1]['mean_gap_vs_opt']:.1f}%)  "
+              f"worst {worst[0]} (+{100 * worst[1]['mean_gap_vs_opt']:.1f}%)")
+    if args.smoke:
+        print("smoke invariants OK: oracle exact everywhere, "
+              "all gaps vs lower bound >= 0")
+
+
+if __name__ == "__main__":
+    main()

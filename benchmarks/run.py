@@ -8,6 +8,8 @@ where meaningful, else 0; derived = the quantity the paper reports).
   tab6_capacity_*     consumer max-throughput calibration      (Table VI/Fig. 10)
   packer_latency_*    reassignment-decision latency            (Sec. III premise)
   lagsim_*            closed-loop lag SLO sweep + speedup      (Sec. VI-D claim)
+  opt_*               optimality gaps + frontier hypervolume   (Sec. II model /
+                                                               2024 follow-up)
   roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
 
 The fig6/fig8/fig9 sections run through the batched scenario-sweep engine
@@ -62,6 +64,17 @@ def main() -> None:
     print(f"lagsim_speedup_vs_python,"
           f"{lag['timing']['lagsim_us_per_stream_step']:.1f},"
           f"{lag['timing']['speedup_vs_python']:.1f}")
+
+    from benchmarks import optimality_gap
+    opt = optimality_gap.run(**optimality_gap.FULL)   # writes BENCH_opt.json
+    optimality_gap.check_invariants(opt)
+    for fam, res in sorted(opt["families"].items()):
+        for algo, g in res["gaps"].items():
+            print(f"opt_gap_{fam}_{algo},0,{g['mean_gap_vs_opt']:.6f}")
+        for algo, m in res["frontier"]["per_algorithm"].items():
+            print(f"opt_hv_{fam}_{algo},0,{m['mean_hv_ratio']:.6f}")
+        print(f"opt_anneal_gap_{fam},0,"
+              f"{res['anneal']['mean_gap_vs_opt']:.6f}")
 
     from benchmarks import roofline
     for name, val in roofline.run().items():

@@ -1,0 +1,92 @@
+"""Trace the bins-vs-R-score Pareto frontier of one packing instance and
+place every heuristic against it.
+
+The paper's heuristics race each other; this example computes the thing
+they should be judged by (the 2024 follow-up's view): the *frontier* of
+assignments trading consumer cost against rebalance cost.  For one stream
+of a chosen scenario family it
+
+  1. builds the mid-trace instance: current speeds plus the sticky-BFD
+     incumbent assignment from the preceding iterations;
+  2. sweeps lambda over the batched annealer (``repro.opt``) -- every
+     (lambda, restart) chain in one XLA program -- and extracts the
+     non-dominated (bins, R-score) front, with the exact branch-and-bound
+     bin floor for reference;
+  3. repacks the same instance with all 12 heuristics and reports each
+     one's position: on/off the front, and its single-point hypervolume
+     share of the annealed front's.
+
+  PYTHONPATH=src python examples/pareto_frontier.py
+  PYTHONPATH=src python examples/pareto_frontier.py --family heavy_tail --n 10
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.jaxpack import ALL_ALGORITHM_NAMES
+from repro.core.scenarios import SCENARIO_FAMILIES, generate_scenario
+from repro.opt import (
+    anneal_frontier,
+    branch_and_bound,
+    heuristic_point,
+    incumbent_assignment,
+)
+
+CAPACITY = 1.0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--family", default="diurnal",
+                    choices=sorted(SCENARIO_FAMILIES))
+    ap.add_argument("--n", type=int, default=8, help="partitions")
+    ap.add_argument("--iters", type=int, default=16, help="trace length")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lambdas", type=float, nargs="+",
+                    default=[0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0])
+    ap.add_argument("--restarts", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    trace = np.asarray(generate_scenario(
+        args.family, jax.random.key(args.seed), 1, args.iters, args.n,
+        capacity=CAPACITY))[0]                                 # [T, N]
+    t_rep = args.iters // 2
+    prev = incumbent_assignment(trace, CAPACITY, t_rep)
+    speeds = trace[t_rep]
+
+    opt = branch_and_bound(speeds.tolist(), CAPACITY)
+    print(f"{args.family}: iteration {t_rep} of a {args.iters}-step stream, "
+          f"{args.n} partitions, sum(speeds)={speeds.sum():.2f} C")
+    print(f"exact bin floor (branch-and-bound, "
+          f"{'proven optimal' if opt.optimal else 'upper bound'}): "
+          f"{opt.n_bins} consumers\n")
+
+    fr = anneal_frontier(speeds, prev, CAPACITY, jax.random.key(args.seed),
+                         lambdas=args.lambdas, restarts=args.restarts,
+                         steps=args.steps)
+    print("annealed lambda sweep (best chain per lambda):")
+    for lam, (b, r) in zip(fr.lambdas, fr.per_lambda):
+        print(f"  lambda={lam:<5g} -> {int(b)} consumers, Rscore {r:.3f}")
+    print(f"\nPareto front (over all {len(args.lambdas) * args.restarts} "
+          f"chains), hypervolume {fr.hypervolume:.3f}:")
+    for b, r in fr.front:
+        print(f"  {int(b)} consumers, Rscore {r:.3f}")
+
+    print(f"\n{'algorithm':<8} {'consumers':>9} {'Rscore':>8} "
+          f"{'vs frontier':>12} {'HV share':>9}")
+    for name in ALL_ALGORITHM_NAMES:
+        pt = heuristic_point(name, speeds, prev, CAPACITY)
+        met = fr.heuristic_metrics(pt)
+        tag = "dominated" if met["dominated"] else "on front"
+        print(f"{name:<8} {int(pt[0]):>9} {pt[1]:>8.3f} {tag:>12} "
+              f"{met['hv_ratio']:>8.1%}")
+    print("\n(HV share = the heuristic point's own hypervolume over the "
+          "annealed front's; 100% = it matches the whole frontier)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,18 +20,47 @@ def rscore(
     new: Mapping[PartitionId, ConsumerId],
     speeds: Mapping[PartitionId, float],
     capacity: float,
+    *,
+    missing: str = "zero",
 ) -> float:
     moved = rebalanced_partitions(prev, new)
-    return rscore_of_set(moved, speeds, capacity)
+    return rscore_of_set(moved, speeds, capacity, missing=missing)
 
 
 def rscore_of_set(
     moved: Set[PartitionId],
     speeds: Mapping[PartitionId, float],
     capacity: float,
+    *,
+    missing: str = "zero",
 ) -> float:
+    """Eq. 10 over an explicit moved-set.
+
+    ``missing`` fixes the contract for partitions in ``moved`` that have
+    no entry in ``speeds``:
+
+    * ``"zero"`` (default): count them as speed 0.0.  This is deliberate,
+      not an accident of ``dict.get``: the monitor has no write-speed
+      sample yet for a partition that appeared mid-iteration, and a
+      never-measured partition has consumed nothing a hand-off could
+      stall (its backlog-accumulation cost is genuinely unknown but
+      bounded by ~one monitor window).
+    * ``"raise"``: raise ``KeyError`` naming every uncovered partition --
+      for callers (benchmarks, the oracle bridge) whose speed maps are
+      supposed to be total, where a miss means a bookkeeping bug.
+    """
     if capacity <= 0:
         raise ValueError("capacity must be positive")
+    if missing not in ("zero", "raise"):
+        raise ValueError(
+            f"missing must be 'zero' or 'raise', got {missing!r}")
+    if missing == "raise":
+        unknown = [p for p in moved if p not in speeds]
+        if unknown:
+            raise KeyError(
+                f"no write-speed sample for rebalanced partitions "
+                f"{sorted(unknown, key=repr)!r}; pass missing='zero' to "
+                f"count them as 0 (the monitor-gap contract)")
     return float(sum(speeds.get(p, 0.0) for p in moved)) / float(capacity)
 
 

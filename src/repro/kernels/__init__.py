@@ -7,9 +7,11 @@ interpret-mode shape/dtype sweeps in tests/test_kernels.py.
 The paper itself is a control-plane contribution (no kernel); these kernels
 serve the data plane it orchestrates -- plus ``binpack_select``, which puts
 the packer's own inner reduction on device for batched algorithm sweeps,
-and ``lag_update``, the fused produce+drain step of the closed-loop lag
-twin (``repro.lagsim``; oracle lives next to the kernel in its module).
+``lag_update``, the fused produce+drain step of the closed-loop lag twin
+(``repro.lagsim``), and ``move_eval``, the all-moves delta-cost plane of
+the batched annealer (``repro.opt``; for these two the oracle lives next
+to the kernel in its module).
 """
-from . import lag_update, ops, ref
+from . import lag_update, move_eval, ops, ref
 
-__all__ = ["lag_update", "ops", "ref"]
+__all__ = ["lag_update", "move_eval", "ops", "ref"]

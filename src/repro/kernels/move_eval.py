@@ -1,0 +1,148 @@
+"""Delta-cost evaluation of all (partition, target-bin) moves as a Pallas
+TPU kernel, batched over annealing chains.
+
+The stochastic packing optimizer (``repro.opt.anneal``) runs thousands of
+simulated-annealing chains in parallel; each step every chain must know the
+cost change of *every* single-item relocation -- move partition ``p`` from
+its current bin to bin ``b`` -- under the objective
+
+    cost = bins_used + (lam / C) * sum_{moved p} speed(p)
+
+(the paper's consumer count plus the Eq. 10 R-score weighted by ``lam``).
+That is an ``f32[K, N, M]`` plane per step and the optimizer's hot inner
+loop, so the kernel fuses the whole evaluation into one VMEM pass per
+chain: ``grid = (K,)``, each program instance holds one chain's bin state
+(loads/counts over ``M`` name slots) plus the shared item data and emits
+the full ``(N, M)`` delta tile.  Moves that would violate capacity are
+masked to ``MOVE_BLOCKED`` (a large finite sentinel); a move is allowed iff
+
+    b != assign[p]  and  (loads[b] + w <= C   or
+                          counts[b] == 0 and w > C)
+
+-- the same oversized-item exception as ``binpack.py`` (an item wider than
+a bin may sit alone in a dedicated overflow bin, nothing ever joins it).
+
+Semantics are pinned to the pure-jnp oracle ``move_delta_reference`` below
+(tests/test_kernels.py); on hosts without a TPU the wrapper falls back to
+Pallas interpreter mode automatically, like ``binpack_select`` and
+``lag_update``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import default_interpret as _default_interpret
+
+# Large finite sentinel for masked (infeasible) moves.  Finite so that
+# downstream softmax/Gumbel selection arithmetic (-MOVE_BLOCKED / T) stays
+# inside the float32 range for any sane temperature.
+MOVE_BLOCKED = 1e30
+
+
+def move_delta_reference(loads, counts, assign, speeds, prev, lam, capacity):
+    """Pure-jnp oracle over ``(..., M)`` bin state and ``(..., N)`` items.
+
+    loads:  f32[..., M] current load per bin name slot;
+    counts: i32[..., M] items per bin name slot (bins with only zero-speed
+            items still count as open);
+    assign: i32[..., N] current bin name per item (always >= 0);
+    speeds: f32[..., N] item sizes;
+    prev:   i32[..., N] previous bin name per item, -1 = unassigned
+            (the R-score only prices moves of previously-assigned items);
+    lam:    f32[...] R-score weight, broadcast over the (N, M) plane;
+    capacity: f32[...] bin size C, broadcast likewise.
+
+    Returns f32[..., N, M]: ``delta[..., p, b]`` is the cost change of
+    relocating item ``p`` to bin ``b``, or ``MOVE_BLOCKED`` when the move
+    is a no-op (``b == assign[p]``) or infeasible.
+    """
+    loads = loads.astype(jnp.float32)
+    counts = counts.astype(jnp.int32)
+    assign = assign.astype(jnp.int32)
+    speeds = speeds.astype(jnp.float32)
+    prev = prev.astype(jnp.int32)
+    m = loads.shape[-1]
+    lam = jnp.asarray(lam, jnp.float32)[..., None, None]
+    cap = jnp.asarray(capacity, jnp.float32)[..., None, None]
+
+    count_a = jnp.take_along_axis(counts, assign, axis=-1)       # (..., N)
+    names = jnp.arange(m, dtype=jnp.int32)                       # (M,)
+    w = speeds[..., :, None]                                     # (..., N, 1)
+    d_bins = ((counts[..., None, :] == 0).astype(jnp.float32)
+              - (count_a[..., :, None] == 1).astype(jnp.float32))
+    sticky = prev >= 0
+    was_moved = ((assign != prev) & sticky).astype(jnp.float32)  # (..., N)
+    now_moved = ((names != prev[..., :, None])
+                 & sticky[..., :, None]).astype(jnp.float32)     # (..., N, M)
+    d_r = (now_moved - was_moved[..., :, None]) * w * (lam / cap)
+    allowed = ((assign[..., :, None] != names)
+               & ((loads[..., None, :] + w <= cap)
+                  | ((counts[..., None, :] == 0) & (w > cap))))
+    return jnp.where(allowed, d_bins + d_r, MOVE_BLOCKED)
+
+
+def _move_eval_kernel(loads_ref, counts_ref, assign_ref, speeds_ref,
+                      prev_ref, lam_ref, cap_ref, out_ref, *, n: int, m: int):
+    """One chain: the full (N, M) delta plane in a single VMEM pass."""
+    loads = loads_ref[0]                                  # (M,)
+    counts = counts_ref[0]                                # (M,)
+    assign = assign_ref[0]                                # (N,)
+    speeds = speeds_ref[0]                                # (N,)
+    prev = prev_ref[0]                                    # (N,)
+    lam = lam_ref[0, 0]
+    cap = cap_ref[0, 0]
+    names = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    cur = assign[:, None] == names                        # (N, M) one-hot
+    count_a = jnp.sum(jnp.where(cur, counts[None, :], 0), axis=1)   # (N,)
+    w = speeds[:, None]
+    d_bins = ((counts[None, :] == 0).astype(jnp.float32)
+              - (count_a[:, None] == 1).astype(jnp.float32))
+    sticky = prev >= 0
+    was_moved = ((assign != prev) & sticky).astype(jnp.float32)
+    now_moved = ((names != prev[:, None]) & sticky[:, None]).astype(jnp.float32)
+    d_r = (now_moved - was_moved[:, None]) * w * (lam / cap)
+    allowed = (~cur) & ((loads[None, :] + w <= cap)
+                        | ((counts[None, :] == 0) & (w > cap)))
+    out_ref[0] = jnp.where(allowed, d_bins + d_r, MOVE_BLOCKED)
+
+
+def move_delta_batch(loads, counts, assign, speeds, prev, lam, cap, *,
+                     interpret: bool | None = None):
+    """Fused move evaluation over a batch of chains in one kernel launch.
+
+    loads: f32[K, M]; counts: i32[K, M]; assign: i32[K, N];
+    speeds: f32[K, N]; prev: i32[K, N]; lam, cap: f32[K].
+    Returns f32[K, N, M] move deltas (``MOVE_BLOCKED`` where masked).
+    ``grid = (K,)``; each program instance owns one chain's bin state and
+    its (N, M) delta tile.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    k, m = loads.shape
+    n = assign.shape[1]
+    kernel = functools.partial(_move_eval_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n, m), jnp.float32),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(loads.astype(jnp.float32), counts.astype(jnp.int32),
+      assign.astype(jnp.int32), speeds.astype(jnp.float32),
+      prev.astype(jnp.int32), lam.astype(jnp.float32).reshape(k, 1),
+      cap.astype(jnp.float32).reshape(k, 1))

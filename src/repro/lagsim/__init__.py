@@ -15,13 +15,18 @@ from .engine import (
     sweep_lag,
 )
 from .metrics import SLO_METRIC_NAMES, longest_excursion, slo_summary, summarize_sweep
-from .policies import ALL_POLICY_NAMES, REACTIVE_BASELINE_NAMES
+from .policies import (
+    ALL_POLICY_NAMES,
+    OPTIMIZER_POLICY_NAMES,
+    REACTIVE_BASELINE_NAMES,
+)
 
 __all__ = [
     "ALL_POLICY_NAMES",
     "LagSimConfig",
     "LagSweepResult",
     "LagTrace",
+    "OPTIMIZER_POLICY_NAMES",
     "REACTIVE_BASELINE_NAMES",
     "SLO_METRIC_NAMES",
     "longest_excursion",

@@ -7,6 +7,19 @@ Two families share one scan-safe interface:
   as ``prev`` (sticky naming), exactly like the controller's REASSIGN
   state; the bin names are the consumer ids.
 
+* **Optimizer policies** -- the batched simulated annealer
+  (``repro.opt.anneal``) run once per simulated step, best-of-chains:
+
+  - ``ANNEAL``: minimizes the consumer count alone (lambda = 0) -- a
+    near-optimal but rebalance-oblivious upper baseline that shows what
+    pure bin minimization costs in migration churn;
+  - ``ANNEAL_STICKY``: minimizes ``bins + lambda * Rscore`` (lambda =
+    ``ANNEAL_STICKY_LAMBDA``), trading a consumer or two for stability
+    like the paper's Modified Any Fit family does.
+
+  Both carry their PRNG key in the policy state, so trajectories are
+  deterministic per stream and the whole sweep stays scan-safe.
+
 * **Reactive baselines** -- the industry-standard scalers the paper is
   implicitly compared against (KEDA Kafka scaler / Cloud Run Kafka
   autoscaler, see SNIPPETS.md):
@@ -37,12 +50,19 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.jaxpack import ALL_ALGORITHM_NAMES, packer_for
 
 REACTIVE_BASELINE_NAMES: Tuple[str, ...] = ("KEDA_LAG", "RATE_THRESHOLD")
-ALL_POLICY_NAMES: Tuple[str, ...] = ALL_ALGORITHM_NAMES + REACTIVE_BASELINE_NAMES
+OPTIMIZER_POLICY_NAMES: Tuple[str, ...] = ("ANNEAL", "ANNEAL_STICKY")
+ALL_POLICY_NAMES: Tuple[str, ...] = (
+    ALL_ALGORITHM_NAMES + REACTIVE_BASELINE_NAMES + OPTIMIZER_POLICY_NAMES)
+
+ANNEAL_STICKY_LAMBDA = 4.0      # R-score weight of ANNEAL_STICKY
+ANNEAL_CHAINS = 6               # chains per decision step
+ANNEAL_STEPS = 48               # anneal steps per decision step
 
 
 def _make_packing_policy(name: str, n: int, capacity):
@@ -54,6 +74,25 @@ def _make_packing_policy(name: str, n: int, capacity):
     def step(speeds, lag, prev_assign, state):
         res = packer(speeds, prev_assign, capacity)
         return res.bin_of, res.n_bins, state
+
+    return init, step
+
+
+def _make_anneal_policy(name: str, n: int, capacity, *, lam: float,
+                        chains: int = ANNEAL_CHAINS,
+                        steps: int = ANNEAL_STEPS):
+    from repro.opt.anneal import anneal_assign
+
+    def init(n_partitions: int):
+        # per-policy deterministic key; split every step so consecutive
+        # decisions explore independently while staying scan-safe
+        return jax.random.key(0x0A11EA1)
+
+    def step(speeds, lag, prev_assign, key):
+        key, sub = jax.random.split(key)
+        assign, n_bins = anneal_assign(speeds, prev_assign, capacity, sub,
+                                       lam=lam, chains=chains, steps=steps)
+        return assign, n_bins, key
 
     return init, step
 
@@ -96,6 +135,11 @@ def make_policy(name: str, n: int, capacity, *, lag_threshold,
     key = name.upper()
     if key in ALL_ALGORITHM_NAMES:
         return _make_packing_policy(key, n, capacity)
+    if key == "ANNEAL":
+        return _make_anneal_policy(key, n, capacity, lam=0.0)
+    if key == "ANNEAL_STICKY":
+        return _make_anneal_policy(key, n, capacity,
+                                   lam=ANNEAL_STICKY_LAMBDA)
     if key == "KEDA_LAG":
         return _make_reactive_policy(
             "lag", n, capacity, lag_threshold=lag_threshold,

@@ -1,0 +1,66 @@
+"""Global packing optimizer: exact oracles and batched stochastic search.
+
+Two layers turn the repo's heuristic race into a scored evaluation:
+
+* ``branch_bound`` -- pure-Python exact branch-and-bound with
+  Martello-Toth L2 lower bounds (oracle-grade ground truth for small N);
+* ``anneal`` / ``pareto`` -- a massively batched simulated-annealing
+  optimizer in JAX (thousands of chains, per-chain lambda) whose
+  ``bins + lambda * Rscore`` sweep traces cost-vs-R-score Pareto fronts;
+  the hot move-evaluation loop is the Pallas kernel
+  ``repro.kernels.move_eval``.
+
+``benchmarks/optimality_gap.py`` combines both into per-algorithm
+optimality gaps and frontier hypervolumes (``BENCH_opt.json``);
+``lagsim.policies`` exposes the annealer as the closed-loop policies
+``ANNEAL`` / ``ANNEAL_STICKY``.
+"""
+from .anneal import (
+    AnnealResult,
+    anneal_assign,
+    anneal_chains,
+    anneal_pack,
+    assignment_cost,
+    name_universe,
+)
+from .branch_bound import (
+    BnBResult,
+    branch_and_bound,
+    brute_force,
+    lower_bound_l1,
+    lower_bound_l2,
+)
+from .pareto import (
+    FrontierResult,
+    anneal_frontier,
+    dominated,
+    heuristic_point,
+    hypervolume_2d,
+    incumbent_assignment,
+    optimality_gap,
+    pareto_front,
+    reference_point,
+)
+
+__all__ = [
+    "AnnealResult",
+    "BnBResult",
+    "FrontierResult",
+    "anneal_assign",
+    "anneal_chains",
+    "anneal_frontier",
+    "anneal_pack",
+    "assignment_cost",
+    "branch_and_bound",
+    "brute_force",
+    "dominated",
+    "heuristic_point",
+    "hypervolume_2d",
+    "incumbent_assignment",
+    "lower_bound_l1",
+    "lower_bound_l2",
+    "name_universe",
+    "optimality_gap",
+    "pareto_front",
+    "reference_point",
+]

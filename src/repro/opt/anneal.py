@@ -1,0 +1,200 @@
+"""Massively batched stochastic packing optimizer: simulated-annealing /
+heat-bath chains over partition->bin assignments, vmappable over scenario
+batches.
+
+Each chain carries a *feasible* assignment of the N partitions to bin
+names in ``[0, 2N+2)`` (the same name universe as ``jaxpack``, so sticky
+matches against any heuristic's previous assignment are representable).
+Per step the chain
+
+  1. evaluates the cost delta of every single-partition relocation --
+     the ``f32[K, N, M]`` plane computed by ``kernels/move_eval.py``
+     (jnp oracle by default; the Pallas kernel via ``use_kernel=True``);
+  2. samples its next state from the heat-bath (Glauber) distribution
+     ``softmax(-delta / T)`` over all allowed moves plus "stay", via
+     Gumbel-max, with a geometric temperature schedule ``t0 -> t1``;
+  3. tracks the best assignment seen so far.
+
+The objective is ``bins + lam * Rscore`` (the R-score already carries the
+1/C normalization of Eq. 10) with a per-chain ``lam``, so one launch
+anneals a whole lambda sweep x restarts -- the frontier tracer in
+``pareto.py`` rides exactly this.  Moves are masked to
+capacity-feasible targets (with the ``binpack.py`` oversized-item
+exception) and chains start from the always-feasible identity assignment,
+so every state ever visited -- and hence the returned best -- is feasible
+by construction.
+
+Everything is pure ``jax.lax`` control flow: the whole optimizer runs
+inside jit/vmap/scan, which is how the ``ANNEAL``/``ANNEAL_STICKY``
+closed-loop policies (``lagsim/policies.py``) embed it in the simulator's
+step scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.move_eval import (
+    MOVE_BLOCKED,
+    move_delta_batch,
+    move_delta_reference,
+)
+
+
+def name_universe(n: int) -> int:
+    """Bin-name universe size, matching ``jaxpack`` (names < 2n+2)."""
+    return 2 * n + 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AnnealResult:
+    """Best state per chain after annealing (axis 0 = chain)."""
+
+    assign: jax.Array   # i32[K, N] best assignment (bin names)
+    bins: jax.Array     # i32[K]    bins used by the best assignment
+    rscore: jax.Array   # f32[K]    Eq. 10 cost of the best assignment vs prev
+    cost: jax.Array     # f32[K]    bins + lam * rscore (recomputed exactly)
+    lam: jax.Array      # f32[K]    the chain's lambda (echoed for sweeps)
+
+
+def assignment_cost(assign, speeds, prev, capacity, lam, *, m: int):
+    """Exact objective of assignments ``i32[..., N]`` (names in [0, m)).
+
+    Returns ``(cost, bins, rscore)`` with shapes ``[...]``: open-bin count
+    (bins holding at least one partition, zero-speed partitions included),
+    Eq. 10 R-score against ``prev`` (-1 entries never count as moved), and
+    ``bins + lam * rscore``.
+    """
+    onehot = jax.nn.one_hot(assign, m, dtype=jnp.float32)        # (..., N, M)
+    counts = jnp.sum(onehot, axis=-2)
+    bins = jnp.sum((counts > 0).astype(jnp.int32), axis=-1)
+    moved = (prev >= 0) & (assign != prev)
+    r = jnp.sum(jnp.where(moved, speeds, 0.0), axis=-1) / capacity
+    return bins.astype(jnp.float32) + lam * r, bins, r
+
+
+def _temperature_schedule(steps: int, t0: float, t1: float) -> jax.Array:
+    frac = jnp.arange(steps, dtype=jnp.float32) / max(steps - 1, 1)
+    return jnp.float32(t0) * (jnp.float32(t1) / jnp.float32(t0)) ** frac
+
+
+def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
+                  lam: jax.Array, key: jax.Array, *, steps: int = 200,
+                  t0: float = 1.0, t1: float = 0.02,
+                  use_kernel: bool = False) -> AnnealResult:
+    """Run ``K = lam.shape[0]`` annealing chains over one instance.
+
+    speeds: f32[N]; prev: i32[N] (-1 = unassigned); lam: f32[K] per-chain
+    R-score weight; capacity may be a traced scalar.  Scan-safe: pure
+    ``lax`` control flow, so callers may jit/vmap freely (``steps``,
+    ``t0``, ``t1``, ``use_kernel`` must be static).
+    """
+    n = speeds.shape[0]
+    m = name_universe(n)
+    k = lam.shape[0]
+    speeds = speeds.astype(jnp.float32)
+    prev = prev.astype(jnp.int32)
+    lam = lam.astype(jnp.float32)
+    cap = jnp.asarray(capacity, jnp.float32)
+
+    speeds_k = jnp.broadcast_to(speeds, (k, n))
+    prev_k = jnp.broadcast_to(prev, (k, n))
+    cap_k = jnp.broadcast_to(cap, (k,))
+
+    # identity start: partition p alone in bin p -- always feasible
+    assign0 = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (k, n))
+    loads0 = jnp.broadcast_to(
+        jnp.concatenate([speeds, jnp.zeros(m - n, jnp.float32)]), (k, m))
+    counts0 = jnp.broadcast_to(jnp.concatenate(
+        [jnp.ones(n, jnp.int32), jnp.zeros(m - n, jnp.int32)]), (k, m))
+    cost0, _, _ = assignment_cost(assign0, speeds_k, prev_k, cap, lam,
+                                  m=m)
+
+    nm = n * m
+
+    def chain_update(assign, loads, counts, cost, best_cost, best_assign,
+                     choice, delta_pm):
+        do = choice < nm
+        idx = jnp.minimum(choice, nm - 1).astype(jnp.int32)
+        p = idx // m
+        b = idx % m
+        d = delta_pm.reshape(-1)[idx]
+        do = do & (d < MOVE_BLOCKED / 2)      # belt & braces vs masked moves
+        w = speeds[p]
+        a = assign[p]
+        assign_n = assign.at[p].set(b)
+        loads_n = loads.at[a].add(-w).at[b].add(w)
+        counts_n = counts.at[a].add(-1).at[b].add(1)
+        cost_n = cost + d
+        assign = jnp.where(do, assign_n, assign)
+        loads = jnp.where(do, loads_n, loads)
+        counts = jnp.where(do, counts_n, counts)
+        cost = jnp.where(do, cost_n, cost)
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        best_assign = jnp.where(better, assign, best_assign)
+        return assign, loads, counts, cost, best_cost, best_assign
+
+    def body(carry, xs):
+        assign, loads, counts, cost, best_cost, best_assign = carry
+        temp, key_t = xs
+        if use_kernel:
+            delta = move_delta_batch(loads, counts, assign, speeds_k,
+                                     prev_k, lam, cap_k)
+        else:
+            delta = move_delta_reference(loads, counts, assign, speeds_k,
+                                         prev_k, lam, cap_k)
+        logits = jnp.concatenate(
+            [-delta.reshape(k, nm) / temp, jnp.zeros((k, 1), jnp.float32)],
+            axis=1)
+        g = jax.random.gumbel(key_t, (k, nm + 1), jnp.float32)
+        choice = jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+        carry = jax.vmap(chain_update)(assign, loads, counts, cost,
+                                       best_cost, best_assign, choice, delta)
+        return carry, None
+
+    init = (assign0, loads0, counts0, cost0, cost0, assign0)
+    ts = _temperature_schedule(steps, t0, t1)
+    keys = jax.random.split(key, steps)
+    carry, _ = lax.scan(body, init, (ts, keys))
+    best_assign = carry[5]
+    # the scan tracks cost incrementally (float drift over many deltas);
+    # re-derive the best state's exact cost from scratch
+    cost, bins, r = assignment_cost(best_assign, speeds_k, prev_k, cap, lam,
+                                    m=m)
+    return AnnealResult(assign=best_assign, bins=bins, rscore=r, cost=cost,
+                        lam=lam)
+
+
+def anneal_assign(speeds: jax.Array, prev: jax.Array, capacity,
+                  key: jax.Array, *, lam: float = 0.0, chains: int = 8,
+                  steps: int = 64, t0: float = 1.0, t1: float = 0.02,
+                  use_kernel: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Single-lambda convenience: best chain's ``(assign i32[N], bins i32)``.
+
+    This is the entry point the ``ANNEAL``/``ANNEAL_STICKY`` closed-loop
+    policies call once per simulated step.
+    """
+    lam_vec = jnp.full((chains,), lam, jnp.float32)
+    res = anneal_chains(speeds, prev, capacity, lam_vec, key, steps=steps,
+                        t0=t0, t1=t1, use_kernel=use_kernel)
+    i = jnp.argmin(res.cost)
+    return res.assign[i], res.bins[i]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "t0", "t1", "use_kernel"))
+def anneal_pack(speeds: jax.Array, prev: jax.Array, capacity,
+                lam: jax.Array, key: jax.Array, *, steps: int = 200,
+                t0: float = 1.0, t1: float = 0.02,
+                use_kernel: bool = False) -> AnnealResult:
+    """Jitted ``anneal_chains`` for standalone (non-nested) callers."""
+    return anneal_chains(speeds, prev, capacity, lam, key, steps=steps,
+                         t0=t0, t1=t1, use_kernel=use_kernel)

@@ -1,0 +1,161 @@
+"""Pareto frontiers over (consumer cost, rebalance cost) and the metrics
+that score heuristics against them.
+
+The 2024 follow-up to the paper ("Multi-Objective Optimization of Consumer
+Group Autoscaling in Message Broker Systems") frames the autoscaler's real
+object of interest as the *frontier* trading consumer count against
+rebalance (R-score) cost.  This module traces that frontier with the
+batched annealer -- one chain per (lambda, restart), all in one launch --
+and provides the plain-numpy reductions the benchmarks report:
+
+* ``pareto_front``     -- non-dominated subset, both objectives minimized;
+* ``hypervolume_2d``   -- dominated area w.r.t. a reference point (the
+                          standard multi-objective quality indicator);
+* ``anneal_frontier``  -- lambda-sweep -> FrontierResult per instance;
+* ``optimality_gap``   -- (heuristic - optimal) / optimal bin counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .anneal import anneal_pack
+
+Point = Tuple[float, float]
+
+
+def heuristic_point(name: str, speeds, prev, capacity) -> Point:
+    """One heuristic's (bins, rscore) position on an instance: repack
+    ``speeds`` with ``prev`` via ``jaxpack.packer_for(name)`` and price
+    the moved set by Eq. 10.  The shared convention for scoring
+    heuristics against frontiers (benchmarks and examples alike)."""
+    from repro.core.jaxpack import packer_for
+
+    speeds = np.asarray(speeds, np.float64)
+    prev = np.asarray(prev)
+    res = packer_for(name)(jnp.asarray(speeds, jnp.float32),
+                           jnp.asarray(prev, jnp.int32), capacity)
+    bin_of = np.asarray(res.bin_of)
+    moved = (prev >= 0) & (bin_of != prev)
+    return (float(int(res.n_bins)),
+            float(speeds[moved].sum()) / float(capacity))
+
+
+def incumbent_assignment(trace, capacity, t: int,
+                         algorithm: str = "BFD") -> np.ndarray:
+    """Sticky assignment after iterations ``[0, t)`` of one stream
+    ``[T, N]`` under ``algorithm`` -- the canonical ``prev`` for
+    mid-trace frontier instances."""
+    from repro.core.jaxpack import packer_for
+
+    trace = np.asarray(trace)
+    packer = packer_for(algorithm)
+    prev = jnp.full(trace.shape[1], -1, jnp.int32)
+    for s in range(t):
+        prev = packer(jnp.asarray(trace[s], jnp.float32), prev,
+                      capacity).bin_of
+    return np.asarray(prev)
+
+
+def pareto_front(points: Sequence[Point]) -> List[Point]:
+    """Non-dominated subset of ``points`` (minimize both coordinates),
+    sorted by the first coordinate.  Duplicate points collapse."""
+    pts = sorted(set((float(x), float(y)) for x, y in points))
+    front: List[Point] = []
+    best_y = np.inf
+    for x, y in pts:
+        if y < best_y:
+            front.append((x, y))
+            best_y = y
+    return front
+
+
+def dominated(p: Point, front: Sequence[Point]) -> bool:
+    """True iff some frontier point is <= ``p`` in both coordinates and
+    strictly better in at least one."""
+    px, py = float(p[0]), float(p[1])
+    return any(x <= px and y <= py and (x < px or y < py) for x, y in front)
+
+
+def hypervolume_2d(points: Sequence[Point], ref: Point) -> float:
+    """Area dominated by ``points`` inside the box ``[.., ref]`` (both
+    objectives minimized; points at or beyond ``ref`` contribute 0)."""
+    rx, ry = float(ref[0]), float(ref[1])
+    front = pareto_front([(x, y) for x, y in points if x < rx and y < ry])
+    hv = 0.0
+    prev_y = ry
+    for x, y in front:
+        hv += (rx - x) * (prev_y - y)
+        prev_y = y
+    return hv
+
+
+@dataclasses.dataclass
+class FrontierResult:
+    """Annealed lambda-sweep frontier for one packing instance."""
+
+    lambdas: List[float]            # the swept lambda grid
+    per_lambda: List[Point]         # best (bins, rscore) per lambda
+    front: List[Point]              # Pareto front over *all* chains
+    ref: Point                      # reference point used for hypervolume
+    hypervolume: float              # HV(front, ref)
+
+    def heuristic_metrics(self, point: Point) -> dict:
+        """Score one heuristic's (bins, rscore) point against the frontier:
+        hypervolume ratio (its single-point HV over the front's) and
+        domination status."""
+        hv = hypervolume_2d([point], self.ref)
+        return {
+            "bins": float(point[0]),
+            "rscore": float(point[1]),
+            "dominated": bool(dominated(point, self.front)),
+            "hv_ratio": float(hv / self.hypervolume)
+            if self.hypervolume > 0 else 1.0,
+        }
+
+
+def reference_point(speeds, prev, capacity) -> Point:
+    """Canonical HV reference for an instance: one bin more than
+    partitions, one unit of R more than moving every assigned partition."""
+    speeds = np.asarray(speeds, np.float64)
+    prev = np.asarray(prev)
+    r_all = float(speeds[prev >= 0].sum()) / float(capacity)
+    return (float(speeds.shape[0]) + 1.0, r_all + 1.0)
+
+
+def anneal_frontier(speeds, prev, capacity, key, *,
+                    lambdas: Sequence[float] = (0.0, 0.25, 0.5, 1.0, 2.0,
+                                                4.0, 8.0),
+                    restarts: int = 4, steps: int = 250,
+                    use_kernel: bool = False) -> FrontierResult:
+    """Trace the cost-vs-R-score frontier of one instance by sweeping
+    ``lambdas``, ``restarts`` chains each, in a single batched anneal."""
+    lam_vec = jnp.repeat(jnp.asarray(lambdas, jnp.float32), restarts)
+    res = anneal_pack(jnp.asarray(speeds, jnp.float32),
+                      jnp.asarray(prev, jnp.int32), capacity, lam_vec, key,
+                      steps=steps, use_kernel=use_kernel)
+    bins = np.asarray(res.bins, np.int64)
+    rs = np.asarray(res.rscore, np.float64)
+    cost = np.asarray(res.cost, np.float64)
+    pts = [(float(b), float(r)) for b, r in zip(bins, rs)]
+    per_lambda: List[Point] = []
+    for i in range(len(lambdas)):
+        sl = slice(i * restarts, (i + 1) * restarts)
+        j = i * restarts + int(np.argmin(cost[sl]))
+        per_lambda.append((float(bins[j]), float(rs[j])))
+    ref = reference_point(speeds, prev, capacity)
+    front = pareto_front(pts)
+    return FrontierResult(lambdas=[float(l) for l in lambdas],
+                          per_lambda=per_lambda, front=front, ref=ref,
+                          hypervolume=hypervolume_2d(front, ref))
+
+
+def optimality_gap(heuristic_bins, optimal_bins) -> np.ndarray:
+    """Relative gap ``(heuristic - optimal) / max(optimal, 1)``,
+    elementwise over arrays of bin counts."""
+    h = np.asarray(heuristic_bins, np.float64)
+    o = np.asarray(optimal_bins, np.float64)
+    return (h - o) / np.maximum(o, 1.0)

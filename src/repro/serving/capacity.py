@@ -17,15 +17,28 @@ import json
 import os
 from typing import Dict, Optional
 
-DEFAULT_RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                               "dryrun_results.jsonl")
+# repo root, resolved robustly from this file (src/repro/serving -> root)
+# rather than left as a fragile relative join for open() to trip over
+_REPO_ROOT = os.path.abspath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    os.pardir, os.pardir, os.pardir))
+DEFAULT_RESULTS = os.path.join(_REPO_ROOT, "dryrun_results.jsonl")
 
 
 def derived_replica_capacity(arch: str, shape: str = "decode_32k",
                              mesh: str = "16x16", rules: str = "baseline",
                              results_path: Optional[str] = None,
                              bytes_per_token: float = 4.0) -> Dict:
-    path = results_path or DEFAULT_RESULTS
+    path = os.path.abspath(results_path or DEFAULT_RESULTS)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no dry-run results at {path}. The replica capacity is derived "
+            f"from the compiled roofline, so generate the file first with "
+            f"the dry-run step:\n"
+            f"  PYTHONPATH=src python -m repro.launch.dryrun "
+            f"--arch {arch} --shape {shape} --out {path}\n"
+            f"(writes one JSON line per arch/shape/mesh/rules cell), or pass "
+            f"results_path= pointing at an existing dryrun_results.jsonl.")
     best = None
     with open(path) as f:
         for line in f:

@@ -9,6 +9,11 @@ from repro.kernels import ref
 from repro.kernels.binpack_select import select_slot_batch, select_slot_grid
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.move_eval import (
+    MOVE_BLOCKED,
+    move_delta_batch,
+    move_delta_reference,
+)
 from repro.kernels.rwkv6_scan import rwkv6_wkv_fwd
 
 
@@ -149,6 +154,68 @@ def test_select_slot_matches_ref_and_packer(strategy):
             assert not bool(found)
         else:
             assert bool(found) and int(slot) == exp
+
+
+# ---------------------------------------------------------------------------
+# annealer move evaluation
+# ---------------------------------------------------------------------------
+def _random_chain_state(rng, k, n, m):
+    """A consistent (loads, counts, assign) batch derived from assignments,
+    as the annealer maintains it."""
+    speeds = rng.uniform(0, 1.2, (k, n)).astype(np.float32)
+    assign = rng.integers(0, m, (k, n)).astype(np.int32)
+    onehot = np.eye(m, dtype=np.float32)[assign]            # (K, N, M)
+    counts = onehot.sum(axis=1).astype(np.int32)
+    loads = (onehot * speeds[..., None]).sum(axis=1).astype(np.float32)
+    return speeds, assign, loads, counts
+
+
+@pytest.mark.parametrize("k,n,m", [(1, 4, 10), (7, 6, 14), (3, 24, 50)])
+def test_move_eval_kernel_matches_ref(k, n, m):
+    rng = np.random.default_rng(11)
+    speeds, assign, loads, counts = _random_chain_state(rng, k, n, m)
+    prev = rng.integers(-1, m, (k, n)).astype(np.int32)
+    lam = np.linspace(0.0, 8.0, k).astype(np.float32)
+    cap = np.full(k, 1.0, np.float32)
+    got = move_delta_batch(jnp.asarray(loads), jnp.asarray(counts),
+                           jnp.asarray(assign), jnp.asarray(speeds),
+                           jnp.asarray(prev), jnp.asarray(lam),
+                           jnp.asarray(cap), interpret=True)
+    want = move_delta_reference(jnp.asarray(loads), jnp.asarray(counts),
+                                jnp.asarray(assign), jnp.asarray(speeds),
+                                jnp.asarray(prev), jnp.asarray(lam),
+                                jnp.asarray(cap))
+    assert got.shape == (k, n, m)
+    # identical mask, near-identical values (one fused multiply of float32s)
+    np.testing.assert_array_equal(np.asarray(got) >= MOVE_BLOCKED / 2,
+                                  np.asarray(want) >= MOVE_BLOCKED / 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_move_eval_masks_current_bin_and_capacity():
+    """No-op moves and capacity violations are MOVE_BLOCKED; an oversized
+    item may still enter an empty bin (its dedicated overflow bin)."""
+    loads = jnp.asarray([[0.9, 0.0, 0.5]], jnp.float32)
+    counts = jnp.asarray([[1, 0, 1]], jnp.int32)
+    assign = jnp.asarray([[0, 2]], jnp.int32)
+    speeds = jnp.asarray([[0.9, 0.5]], jnp.float32)
+    prev = jnp.asarray([[-1, -1]], jnp.int32)
+    one = jnp.ones(1, jnp.float32)
+    d = np.asarray(move_delta_batch(loads, counts, assign, speeds, prev,
+                                    0 * one, one, interpret=True))[0]
+    assert d[0, 0] >= MOVE_BLOCKED / 2          # own bin: no-op
+    assert d[0, 2] >= MOVE_BLOCKED / 2          # 0.5 + 0.9 > C
+    assert d[0, 1] == pytest.approx(0.0)        # empty bin: open one, close one
+    assert d[1, 0] >= MOVE_BLOCKED / 2          # 0.9 + 0.5 > C
+    assert d[1, 1] == pytest.approx(0.0)
+    # oversized item alone may take an empty bin
+    speeds2 = jnp.asarray([[1.4, 0.5]], jnp.float32)
+    loads2 = jnp.asarray([[1.4, 0.0, 0.5]], jnp.float32)
+    d2 = np.asarray(move_delta_batch(loads2, counts, assign, speeds2, prev,
+                                     0 * one, one, interpret=True))[0]
+    assert d2[0, 1] == pytest.approx(0.0)       # overflow bin relocation
+    assert d2[0, 2] >= MOVE_BLOCKED / 2         # may not join an occupied bin
 
 
 @pytest.mark.parametrize("strategy", ["first", "best", "worst"])

@@ -1,0 +1,75 @@
+"""Hypothesis property tests for the Sec. IV-C sticky naming rule.
+
+The sticky adaptation only changes which *names* newly created bins get,
+so for every fit strategy it can never change the number of bins or which
+partitions share a bin -- that is a theorem and the properties pin it
+exactly.  Its R-score effect needs a more careful statement than "never
+worse than sticky=False": non-sticky sequential naming (0, 1, 2, ...) can
+*accidentally* coincide with a partition's previous consumer and luckily
+count it as not-moved, and an adversarial ``prev`` can hand that luck
+more speed than sticky's deliberate reuse
+(``test_sticky_rscore.test_sticky_not_always_below_nonsticky_sequential_naming``
+pins a concrete counterexample).  What sticky does guarantee is the
+fresh-naming bound: it never does worse than giving every new bin a
+brand-new name, under which *every* previously-assigned partition counts
+as moved.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.binpack import FIT_STRATEGIES, pack
+from repro.core.rscore import rscore, rscore_of_set
+
+C = 1.0
+
+speeds_st = st.lists(
+    st.integers(min_value=0, max_value=2048).map(lambda k: k / 1024.0),
+    min_size=1,
+    max_size=20,
+)
+
+
+def _instance(speeds, seed):
+    rng = np.random.default_rng(seed)
+    n = len(speeds)
+    sp = {j: w for j, w in enumerate(speeds)}
+    prev_vals = rng.integers(-1, max(1, n), size=n)
+    prev = {j: int(c) for j, c in enumerate(prev_vals) if c >= 0}
+    return sp, prev
+
+
+@settings(max_examples=150, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       strategy=st.sampled_from(FIT_STRATEGIES), decreasing=st.booleans())
+def test_sticky_never_changes_bin_count_or_grouping(speeds, seed, strategy,
+                                                    decreasing):
+    """For every fit strategy (and Decreasing variant): sticky vs
+    non-sticky produce the same number of bins and the same partition
+    grouping -- the adaptation is a pure renaming."""
+    sp, prev = _instance(speeds, seed)
+    res_s = pack(sp, C, strategy=strategy, decreasing=decreasing, prev=prev,
+                 sticky=True)
+    res_n = pack(sp, C, strategy=strategy, decreasing=decreasing, prev=prev,
+                 sticky=False)
+    assert res_s.n_bins == res_n.n_bins
+    assert res_s.composition() == res_n.composition()
+
+
+@settings(max_examples=150, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       strategy=st.sampled_from(FIT_STRATEGIES), decreasing=st.booleans())
+def test_sticky_rscore_never_exceeds_fresh_naming(speeds, seed, strategy,
+                                                  decreasing):
+    """Sticky naming never produces a higher R-score than the no-reuse
+    baseline, where every new bin gets a name outside ``prev`` and hence
+    every previously-assigned partition counts as rebalanced."""
+    sp, prev = _instance(speeds, seed)
+    res = pack(sp, C, strategy=strategy, decreasing=decreasing, prev=prev,
+               sticky=True)
+    r_sticky = rscore(prev, res.pid_to_bin, sp, C)
+    r_fresh = rscore_of_set(set(prev), sp, C)
+    assert r_sticky <= r_fresh + 1e-9
