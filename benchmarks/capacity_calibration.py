@@ -71,3 +71,15 @@ def run() -> Dict[str, Dict[str, float]]:
             "mode_over_capacity": float(mode / CAPACITY),
         }
     return out
+
+
+from benchmarks.sections import section  # noqa: E402
+
+
+@section("tab6_capacity", prefixes=("tab6_capacity_",))
+def _rows():
+    for name, res in run().items():
+        yield (f"tab6_capacity_{name}_mode_bytes_s,0,"
+               f"{res['measured_mode_bytes_s']:.0f}")
+        yield (f"tab6_capacity_{name}_mode_over_capacity,0,"
+               f"{res['mode_over_capacity']:.4f}")

@@ -17,22 +17,20 @@ or    PYTHONPATH=src:. python benchmarks/lag_slo.py      (JSON only)
 """
 from __future__ import annotations
 
-import json
 import os
 import time
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.api import BenchReport
 from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
-from repro.lagsim import (
-    ALL_POLICY_NAMES,
-    LagSimConfig,
-    summarize_sweep,
-    sweep_lag,
-)
+from repro.lagsim import LagSimConfig, summarize_sweep, sweep_lag
+from repro.registry import list_policies
 from repro.serving import AutoscaleSimulation
+
+from benchmarks.sections import section
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_lagsim.json")
@@ -58,10 +56,15 @@ def _python_loop_us_per_step(n: int, steps: int = 120) -> float:
 
 
 def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
-        policies: Sequence[str] = ALL_POLICY_NAMES,
+        policies: Optional[Sequence[str]] = None,
         families: Sequence[str] = tuple(SCENARIO_FAMILIES),
         seed: int = SEED) -> Dict:
-    """Full sweep -> nested result dict (also written to BENCH_lagsim.json)."""
+    """Full sweep -> nested result dict (also written to BENCH_lagsim.json).
+
+    ``policies`` defaults to every jax-backend policy in the registry
+    (packers + reactive baselines + optimizers, in registration order)."""
+    if policies is None:
+        policies = list_policies(backend="jax")
     policies = tuple(p.upper() for p in policies)
     cfg = LagSimConfig(capacity=CAPACITY, dt=1.0, migration_steps=2)
     suite = scenario_suite(jax.random.key(seed), batch, iters, n,
@@ -84,24 +87,37 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
     jax_us = float(np.mean(list(seconds.values()))) * 1e6 / (
         len(policies) * batch * iters)
     py_us = _python_loop_us_per_step(n)
-    out = {
-        "config": {
+    report = BenchReport(
+        kind="lagsim",
+        config={
             "batch": batch, "iters": iters, "n_partitions": n,
             "capacity": CAPACITY, "migration_steps": cfg.migration_steps,
             "slo_lag": cfg.resolve(n).slo_lag, "seed": seed,
             "policies": list(policies), "families": list(suite),
         },
-        "families": per_family,
-        "timing": {
+        families=per_family,
+        extra={"timing": {
             "lagsim_us_per_stream_step": jax_us,
             "python_us_per_step": py_us,
             "speedup_vs_python": py_us / jax_us if jax_us > 0 else float("inf"),
             "sweep_seconds_per_family": seconds,
-        },
-    }
-    with open(BENCH_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-    return out
+        }},
+    )
+    return report.write(BENCH_PATH)
+
+
+@section("lagsim", prefixes=("lagsim_",), bench_json="BENCH_lagsim.json")
+def _rows():
+    lag = run()                 # also writes BENCH_lagsim.json
+    for fam, per_policy in sorted(lag["families"].items()):
+        for pol, metrics in per_policy.items():
+            for metric in ("violation_frac", "consumer_seconds",
+                           "total_migrations"):
+                yield (f"lagsim_{fam}_{pol}_{metric},0,"
+                       f"{metrics[metric]:.6f}")
+    yield (f"lagsim_speedup_vs_python,"
+           f"{lag['timing']['lagsim_us_per_stream_step']:.1f},"
+           f"{lag['timing']['speedup_vs_python']:.1f}")
 
 
 def main() -> None:

@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import os
 import time
 from typing import Dict, Sequence
@@ -39,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
+from repro.api import BenchReport
+from repro.core.jaxpack import sweep_streams
 from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
 from repro.opt import (
     anneal_chains,
@@ -49,6 +49,11 @@ from repro.opt import (
     incumbent_assignment,
     optimality_gap,
 )
+from repro.registry import PACKER_FAMILIES, list_policies
+
+from benchmarks.sections import section
+
+ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_opt.json")
@@ -91,7 +96,7 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
 
     for fi, (fam, traces) in enumerate(suite.items()):
         tr = np.asarray(traces, np.float64)              # [B, T, N]
-        sweep = sweep_streams(ALL_ALGORITHM_NAMES, traces, CAPACITY)
+        sweep = sweep_streams(ALGORITHMS, traces, CAPACITY)
         bins = np.asarray(sweep.bins)                    # [A, B, T]
 
         # 1) exact oracle on every (stream, iteration) instance
@@ -108,7 +113,7 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
         oracle_s = time.perf_counter() - t0
 
         gaps = {}
-        for a, name in enumerate(ALL_ALGORITHM_NAMES):
+        for a, name in enumerate(ALGORITHMS):
             g_opt = optimality_gap(bins[a], opt)
             g_lb = optimality_gap(bins[a], lb)
             gaps[name] = {
@@ -133,7 +138,7 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
         # 3) frontier at a mid-trace instance per stream
         hv_list = []
         per_algo = {name: {"hv_ratio": [], "dominated": [], "bins": [],
-                           "rscore": []} for name in ALL_ALGORITHM_NAMES}
+                           "rscore": []} for name in ALGORITHMS}
         for b in range(batch):
             prev = incumbent_assignment(tr[b], CAPACITY, t_rep)
             speeds_t = tr[b, t_rep]
@@ -142,7 +147,7 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
                 jax.random.fold_in(jax.random.key(seed + 1), fi * batch + b),
                 lambdas=lambdas, restarts=restarts, steps=steps)
             hv_list.append(fr.hypervolume)
-            for name in ALL_ALGORITHM_NAMES:
+            for name in ALGORITHMS:
                 pt = heuristic_point(name, speeds_t, prev, CAPACITY)
                 met = fr.heuristic_metrics(pt)
                 per_algo[name]["hv_ratio"].append(met["hv_ratio"])
@@ -175,19 +180,18 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
             },
         }
 
-    out = {
-        "config": {
+    report = BenchReport(
+        kind="opt",
+        config={
             "batch": batch, "iters": iters, "n_partitions": n,
             "capacity": CAPACITY, "seed": seed, "lambdas": list(lambdas),
             "restarts": restarts, "steps": steps, "chains": chains,
-            "algorithms": list(ALL_ALGORITHM_NAMES),
+            "algorithms": list(ALGORITHMS),
             "families": list(suite),
         },
-        "families": out_families,
-    }
-    with open(BENCH_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-    return out
+        families=out_families,
+    )
+    return report.write(BENCH_PATH)
 
 
 def check_invariants(out: Dict) -> None:
@@ -204,6 +208,19 @@ def check_invariants(out: Dict) -> None:
                 f"bound (min gap {g['min_gap_vs_lb']} < 0)")
         assert res["anneal"]["mean_gap_vs_opt"] >= 0.0, (
             f"{fam}: annealer below the proven optimum")
+
+
+@section("opt", prefixes=("opt_",), bench_json="BENCH_opt.json")
+def _rows():
+    out = run(**FULL)                   # also writes BENCH_opt.json
+    check_invariants(out)
+    for fam, res in sorted(out["families"].items()):
+        for algo, g in res["gaps"].items():
+            yield f"opt_gap_{fam}_{algo},0,{g['mean_gap_vs_opt']:.6f}"
+        for algo, m in res["frontier"]["per_algorithm"].items():
+            yield f"opt_hv_{fam}_{algo},0,{m['mean_hv_ratio']:.6f}"
+        yield (f"opt_anneal_gap_{fam},0,"
+               f"{res['anneal']['mean_gap_vs_opt']:.6f}")
 
 
 def main() -> None:

@@ -23,11 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.binpack import CLASSICAL
 from repro.core.jaxpack import modified_any_fit_jax, pack_jax, sweep_streams
-from repro.core.modified import MODIFIED
 from repro.core.scenarios import generate_scenario
 from repro.kernels.ops import select_slot_batched
+from repro.registry import packer_for
+
+from benchmarks.sections import section
 
 
 def _time(fn, reps=5) -> float:
@@ -47,10 +48,12 @@ def run(sizes=(50, 200, 500)) -> Dict[str, float]:
         sp = {j: float(w) for j, w in enumerate(speeds)}
         prev_map = {j: int(c) for j, c in enumerate(prev) if c >= 0}
 
+        ref_bfd = packer_for("BFD", backend="py")
+        ref_mbfp = packer_for("MBFP", backend="py")
         out[f"ref_BFD_n{n}_us"] = _time(
-            lambda: CLASSICAL["BFD"](sp, 1.0, prev=prev_map))
+            lambda: ref_bfd(sp, 1.0, prev=prev_map))
         out[f"ref_MBFP_n{n}_us"] = _time(
-            lambda: MODIFIED["MBFP"](sp, 1.0, prev=prev_map))
+            lambda: ref_mbfp(sp, 1.0, prev=prev_map))
         sj = jnp.asarray(speeds, jnp.float32)
         pj = jnp.asarray(prev)
         out[f"jax_BFD_n{n}_us"] = _time(
@@ -82,3 +85,9 @@ def run(sizes=(50, 200, 500)) -> Dict[str, float]:
                 select_slot_batched(loads, w, k, cap, strategy=strat)),
             reps=3)
     return out
+
+
+@section("packer_latency", prefixes=("packer_latency_",))
+def _rows():
+    for name, us in run().items():
+        yield f"packer_latency_{name},{us:.1f},0"

@@ -19,11 +19,14 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
-from repro.core.metrics import pareto_front
+from repro.core.jaxpack import sweep_streams
+from repro.core.metrics import cbs_from_bins, pareto_front
 from repro.core.streams import PAPER_DELTAS, generate_stream
+from repro.registry import PACKER_FAMILIES, list_policies
 
-ALGORITHMS = ALL_ALGORITHM_NAMES
+from benchmarks.sections import section
+
+ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 N_PARTITIONS = 50
 CAPACITY = 1.0
 
@@ -54,9 +57,7 @@ def cbs_table(data: Dict) -> Dict[float, Dict[str, float]]:
     """Eq. 12 per delta."""
     table = {}
     for delta, per_algo in data["deltas"].items():
-        z = np.stack([per_algo[a][0] for a in ALGORITHMS])  # (A, N)
-        zmin = np.maximum(z.min(axis=0), 1)
-        cbs = ((z - zmin) / zmin).mean(axis=1)
+        cbs = cbs_from_bins(np.stack([per_algo[a][0] for a in ALGORITHMS]))
         table[delta] = dict(zip(ALGORITHMS, cbs.tolist()))
     return table
 
@@ -75,3 +76,32 @@ def pareto_table(data: Dict) -> Dict[float, Tuple[list, dict]]:
         pts = {a: (cbs[delta][a], er[delta][a]) for a in ALGORITHMS}
         out[delta] = (pareto_front(pts), pts)
     return out
+
+
+# ---------------------------------------------------------------------------
+# benchmark sections (rows of benchmarks/run.py)
+# ---------------------------------------------------------------------------
+
+@section("fig6_cbs", prefixes=("fig6_cbs_",))
+def _rows_fig6():
+    data = sweep()
+    for delta, per in sorted(cbs_table(data).items()):
+        for algo, val in per.items():
+            us = data["seconds"][(delta, algo)] * 1e6
+            yield f"fig6_cbs_d{delta}_{algo},{us:.1f},{val:.6f}"
+
+
+@section("fig8_rscore", prefixes=("fig8_rscore_",))
+def _rows_fig8():
+    data = sweep()
+    for delta, per in sorted(rscore_table(data).items()):
+        for algo, val in per.items():
+            yield f"fig8_rscore_d{delta}_{algo},0,{val:.6f}"
+
+
+@section("fig9_pareto", prefixes=("fig9_pareto_",))
+def _rows_fig9():
+    data = sweep()
+    for delta, (front, pts) in sorted(pareto_table(data).items()):
+        for algo in ALGORITHMS:
+            yield f"fig9_pareto_d{delta}_{algo},0,{int(algo in front)}"

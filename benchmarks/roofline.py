@@ -105,6 +105,15 @@ def run(path: str = DEFAULT_PATH) -> Dict[str, float]:
     return out
 
 
+from benchmarks.sections import section  # noqa: E402
+
+
+@section("roofline", prefixes=("roofline_",))
+def _rows():
+    for name, val in run().items():
+        yield f"roofline_{name},0,{val:.4f}"
+
+
 if __name__ == "__main__":
     rows = load()
     for mesh in ("16x16", "2x16x16"):

@@ -12,73 +12,32 @@ where meaningful, else 0; derived = the quantity the paper reports).
                                                                2024 follow-up)
   roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
 
-The fig6/fig8/fig9 sections run through the batched scenario-sweep engine
-(``repro.core.jaxpack.sweep_streams``): each algorithm evaluates all six
-delta-streams in one vmapped XLA program.
+Sections self-register: each benchmark module owns its rows via
+``benchmarks.sections.section(name, prefixes=..., bench_json=...)`` and
+this driver just imports the modules (registration order = output order)
+and replays the registry -- a section's rows cannot silently drift from
+the module that computes them, and a row outside its declared prefixes
+is an error.  Policy/algorithm names inside every section resolve
+through ``repro.registry``.
 
 Run:  PYTHONPATH=src:. python benchmarks/run.py
 """
 from __future__ import annotations
 
-import sys
+from benchmarks import sections
+
+# importing a benchmark module registers its sections; this order is the
+# output order
+from benchmarks import paper_eval          # noqa: F401  fig6/fig8/fig9
+from benchmarks import capacity_calibration  # noqa: F401  tab6
+from benchmarks import packer_latency      # noqa: F401  packer_latency
+from benchmarks import lag_slo             # noqa: F401  lagsim (BENCH_lagsim.json)
+from benchmarks import optimality_gap      # noqa: F401  opt (BENCH_opt.json)
+from benchmarks import roofline            # noqa: F401  roofline
 
 
 def main() -> None:
-    print("name,us_per_call,derived")
-
-    from benchmarks import paper_eval
-    data = paper_eval.sweep()
-    cbs = paper_eval.cbs_table(data)
-    for delta, per in sorted(cbs.items()):
-        for algo, val in per.items():
-            us = data["seconds"][(delta, algo)] * 1e6
-            print(f"fig6_cbs_d{delta}_{algo},{us:.1f},{val:.6f}")
-    rs = paper_eval.rscore_table(data)
-    for delta, per in sorted(rs.items()):
-        for algo, val in per.items():
-            print(f"fig8_rscore_d{delta}_{algo},0,{val:.6f}")
-    pareto = paper_eval.pareto_table(data)
-    for delta, (front, pts) in sorted(pareto.items()):
-        for algo in paper_eval.ALGORITHMS:
-            print(f"fig9_pareto_d{delta}_{algo},0,{int(algo in front)}")
-
-    from benchmarks import capacity_calibration
-    for name, res in capacity_calibration.run().items():
-        print(f"tab6_capacity_{name}_mode_bytes_s,0,"
-              f"{res['measured_mode_bytes_s']:.0f}")
-        print(f"tab6_capacity_{name}_mode_over_capacity,0,"
-              f"{res['mode_over_capacity']:.4f}")
-
-    from benchmarks import packer_latency
-    for name, us in packer_latency.run().items():
-        print(f"packer_latency_{name},{us:.1f},0")
-
-    from benchmarks import lag_slo
-    lag = lag_slo.run()                 # also writes BENCH_lagsim.json
-    for fam, per_policy in sorted(lag["families"].items()):
-        for pol, metrics in per_policy.items():
-            for metric in ("violation_frac", "consumer_seconds",
-                           "total_migrations"):
-                print(f"lagsim_{fam}_{pol}_{metric},0,"
-                      f"{metrics[metric]:.6f}")
-    print(f"lagsim_speedup_vs_python,"
-          f"{lag['timing']['lagsim_us_per_stream_step']:.1f},"
-          f"{lag['timing']['speedup_vs_python']:.1f}")
-
-    from benchmarks import optimality_gap
-    opt = optimality_gap.run(**optimality_gap.FULL)   # writes BENCH_opt.json
-    optimality_gap.check_invariants(opt)
-    for fam, res in sorted(opt["families"].items()):
-        for algo, g in res["gaps"].items():
-            print(f"opt_gap_{fam}_{algo},0,{g['mean_gap_vs_opt']:.6f}")
-        for algo, m in res["frontier"]["per_algorithm"].items():
-            print(f"opt_hv_{fam}_{algo},0,{m['mean_hv_ratio']:.6f}")
-        print(f"opt_anneal_gap_{fam},0,"
-              f"{res['anneal']['mean_gap_vs_opt']:.6f}")
-
-    from benchmarks import roofline
-    for name, val in roofline.run().items():
-        print(f"roofline_{name},0,{val:.4f}")
+    sections.emit_all()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,75 @@
+"""Self-registering benchmark sections for ``benchmarks/run.py``.
+
+Each benchmark module owns its CSV rows: it registers a runner under a
+section name together with the row prefixes it is allowed to emit (and,
+when it writes one, its ``BENCH_*.json`` artifact).  ``run.py`` just
+replays the registry in registration order, so a section's rows can never
+silently drift from (or outlive) the module that computes them --
+``emit_all`` raises if a runner emits a row outside its declared
+prefixes.
+
+Registering a section::
+
+    from benchmarks.sections import section
+
+    @section("fig6_cbs", prefixes=("fig6_cbs_",))
+    def rows():
+        yield f"fig6_cbs_d5_BFD,0,{value:.6f}"
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Iterable, List, Optional, Tuple
+
+HEADER = "name,us_per_call,derived"
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@dataclasses.dataclass(frozen=True)
+class Section:
+    name: str                     # section id (registration order = run order)
+    runner: Callable[[], Iterable[str]]   # yields "name,us,derived" rows
+    prefixes: Tuple[str, ...]     # every emitted row must start with one
+    bench_json: Optional[str]     # artifact the runner writes, if any
+
+
+SECTIONS: List[Section] = []
+
+
+def section(name: str, *, prefixes: Tuple[str, ...],
+            bench_json: Optional[str] = None) -> Callable:
+    """Decorator: register ``runner`` as benchmark section ``name``."""
+
+    def deco(runner: Callable[[], Iterable[str]]) -> Callable:
+        if any(s.name == name for s in SECTIONS):
+            raise ValueError(f"benchmark section {name!r} already registered")
+        SECTIONS.append(Section(name=name, runner=runner,
+                                prefixes=tuple(prefixes),
+                                bench_json=bench_json))
+        return runner
+
+    return deco
+
+
+def emit_all(print_fn: Callable[[str], None] = print) -> None:
+    """Run every registered section in registration order, printing its
+    rows.  A row outside the section's declared prefixes is an error, and
+    a section declaring a ``bench_json`` artifact must actually (re)write
+    it at the repo root during its run."""
+    print_fn(HEADER)
+    for sec in SECTIONS:
+        t0 = time.time()
+        for row in sec.runner():
+            if not row.startswith(sec.prefixes):
+                raise RuntimeError(
+                    f"section {sec.name!r} emitted row {row.split(',')[0]!r} "
+                    f"outside its declared prefixes {sec.prefixes}")
+            print_fn(row)
+        if sec.bench_json is not None:
+            path = os.path.join(REPO_ROOT, sec.bench_json)
+            if not os.path.exists(path) or os.path.getmtime(path) < t0 - 1.0:
+                raise RuntimeError(
+                    f"section {sec.name!r} declared bench_json="
+                    f"{sec.bench_json!r} but did not write it")

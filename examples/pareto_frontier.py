@@ -26,8 +26,8 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.jaxpack import ALL_ALGORITHM_NAMES
 from repro.core.scenarios import SCENARIO_FAMILIES, generate_scenario
+from repro.registry import PACKER_FAMILIES, list_policies
 from repro.opt import (
     anneal_frontier,
     branch_and_bound,
@@ -78,7 +78,7 @@ def main() -> None:
 
     print(f"\n{'algorithm':<8} {'consumers':>9} {'Rscore':>8} "
           f"{'vs frontier':>12} {'HV share':>9}")
-    for name in ALL_ALGORITHM_NAMES:
+    for name in list_policies(family=PACKER_FAMILIES, backend="jax"):
         pt = heuristic_point(name, speeds, prev, CAPACITY)
         met = fr.heuristic_metrics(pt)
         tag = "dominated" if met["dominated"] else "on front"

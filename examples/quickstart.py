@@ -1,40 +1,44 @@
-"""Quickstart: the paper's algorithms in five minutes.
+"""Quickstart: the paper's algorithms in five minutes, through the stable
+``repro.api`` facade.
+
+Everything here resolves policy names through ``repro.registry`` -- the
+one catalogue of packers (Sec. II-B heuristics + Sec. IV-B/IV-C sticky
+family), optimizers and reactive scalers -- and returns the versioned
+result dataclasses of ``repro.api``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import (ALL_ALGORITHMS, evaluate_deltas, generate_stream,
-                        modified_any_fit, pack, pareto_front, rscore)
+from repro import api
 
 C = 2.3e6  # consumer capacity, bytes/s (the paper's measured 2.3 MB/s)
 
-# --- one packing decision ---------------------------------------------------
+# --- what's on the shelf -----------------------------------------------------
+for family in api.FAMILIES:
+    print(f"{family:<10} {', '.join(api.list_policies(family=family))}")
+
+# --- one packing decision ----------------------------------------------------
 speeds = {"orders-0": 1.1e6, "orders-1": 0.7e6, "sensors-0": 1.9e6,
           "sensors-1": 0.4e6, "invoices-0": 0.2e6}
-result = pack(speeds, C, strategy="best", decreasing=True)   # BFD
-print(f"BFD packs {len(speeds)} partitions onto {result.n_bins} consumers:")
-for cid, parts in sorted(result.bins().items()):
-    load = sum(speeds[p] for p in parts)
-    print(f"  consumer {cid}: {parts} ({load / 1e6:.2f} MB/s)")
+res = api.pack(speeds, C, algorithm="BFD")
+print(f"\nBFD packs {len(speeds)} partitions onto {res.n_bins} consumers:")
+for cid in sorted(res.loads):
+    parts = sorted(p for p, c in res.assignment.items() if c == cid)
+    print(f"  consumer {cid}: {parts} ({res.loads[cid] / 1e6:.2f} MB/s)")
 
 # --- a rebalance-aware decision (Algorithm 1, MBFP) --------------------------
 speeds["sensors-0"] = 2.5e6                    # the load shifted
-prev = result.pid_to_bin
-new = modified_any_fit(speeds, C, group={c: ps for c, ps in result.bins().items()},
-                       fit="best", sort_key="max_partition")
-r = rscore(prev, new.pid_to_bin, speeds, C)
+new = api.pack(speeds, C, algorithm="MBFP", prev=res.assignment)
 print(f"\nafter a load spike, MBFP uses {new.n_bins} consumers, "
-      f"Rscore={r:.3f} consumer-iterations/s of backlog while rebalancing")
+      f"Rscore={new.rscore:.3f} consumer-iterations/s of backlog while "
+      f"rebalancing")
 
-# --- the paper's evaluation on a synthetic stream (Eq. 11) -------------------
-streams = {d: generate_stream(30, 120, d, 1.0, seed=0) for d in (5, 15, 25)}
-table = evaluate_deltas(
-    {k: ALL_ALGORITHMS[k] for k in ("BFD", "FFD", "NFD", "MBF", "MBFP")},
-    streams, capacity=1.0)
+# --- the paper's evaluation on synthetic streams (Eq. 11) --------------------
+table = api.evaluate(algorithms=("BFD", "FFD", "NFD", "MBF", "MBFP"),
+                     deltas=(5, 15, 25), n_partitions=30,
+                     n_measurements=120, capacity=1.0, seed=0)
 print("\n delta  algo   CBS      E[R]   (lower is better on both)")
-for d, pts in sorted(table.items()):
-    front = pareto_front(pts)
-    for a, (cbs, er) in sorted(pts.items()):
-        mark = " *pareto" if a in front else ""
-        print(f"  {d:3d}   {a:5s} {cbs:7.4f} {er:7.3f}{mark}")
+for d in table.deltas:
+    for a in sorted(table.algorithms):
+        mark = " *pareto" if a in table.pareto[d] else ""
+        print(f"  {d:3d}   {a:5s} {table.cbs[d][a]:7.4f} "
+              f"{table.avg_rscore[d][a]:7.3f}{mark}")

@@ -19,8 +19,11 @@ import collections
 import jax
 import numpy as np
 
-from repro.core.jaxpack import ALL_ALGORITHM_NAMES, sweep_streams
+from repro.core.jaxpack import sweep_streams
 from repro.core.scenarios import scenario_suite, stack_suite
+from repro.registry import PACKER_FAMILIES, list_policies
+
+ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 
 FAMILIES = ("diurnal", "ramp", "bursty", "churn", "heavy_tail")
 BATCH = 3          # streams per family
@@ -33,10 +36,10 @@ def main() -> None:
     suite = scenario_suite(jax.random.key(0), BATCH, ITERS, N_PARTITIONS,
                            capacity=CAPACITY, families=FAMILIES)
     labels, batch = stack_suite(suite)
-    print(f"sweeping {len(ALL_ALGORITHM_NAMES)} algorithms over "
+    print(f"sweeping {len(ALGORITHMS)} algorithms over "
           f"{batch.shape[0]} streams ({len(FAMILIES)} families x {BATCH}) "
           f"of {ITERS} iterations x {N_PARTITIONS} partitions ...")
-    res = sweep_streams(ALL_ALGORITHM_NAMES, batch, CAPACITY)
+    res = sweep_streams(ALGORITHMS, batch, CAPACITY)
 
     rows = collections.defaultdict(dict)
     bins = np.asarray(res.bins)          # (A, B, T)

@@ -1,0 +1,372 @@
+"""Stable public facade of the reproduction.
+
+One import gives the five verbs the paper's evaluation is made of, all
+resolving policy names through ``repro.registry`` and all returning
+versioned result dataclasses (``schema_version`` = ``API_VERSION``):
+
+* ``pack``      -- one packing decision (any registered packer, either
+                   backend) -> ``PackOutcome``;
+* ``sweep``     -- every algorithm x a batch of speed streams through the
+                   vmapped scan engine -> ``SweepOutcome``;
+* ``simulate``  -- closed-loop lag twin: policies x traces with migration
+                   downtime and SLO metrics -> ``SimulateOutcome``;
+* ``optimize``  -- lambda-sweep annealed Pareto frontier of one instance
+                   -> ``OptimizeOutcome``;
+* ``evaluate``  -- the paper's Figs. 6-9 tables (CBS / avg R-score /
+                   Pareto membership) on Eq. 11 streams -> ``EvaluateOutcome``.
+
+Policy discovery re-exports the registry: ``list_policies``,
+``make_policy``, ``get_spec``, ``packer_for``, ``PolicySpec``, ``Policy``.
+
+``BenchReport`` is the shared envelope every ``BENCH_*.json`` is written
+through (one schema across benchmark artifacts).  The CI API-surface step
+runs ``selfcheck()``; the documented surface lives in README "Public
+API" and is pinned by ``tests/test_api_surface.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.registry import (
+    BACKENDS,
+    FAMILIES,
+    PACKER_FAMILIES,
+    Policy,
+    PolicySpec,
+    get_spec,
+    list_policies,
+    make_policy,
+    packer_for,
+)
+
+#: schema version stamped on every result dataclass and BENCH_*.json
+API_VERSION = 1
+
+__all__ = [
+    "API_VERSION",
+    "BACKENDS",
+    "BenchReport",
+    "evaluate",
+    "EvaluateOutcome",
+    "FAMILIES",
+    "get_spec",
+    "list_policies",
+    "make_policy",
+    "optimize",
+    "OptimizeOutcome",
+    "pack",
+    "PACKER_FAMILIES",
+    "packer_for",
+    "PackOutcome",
+    "Policy",
+    "PolicySpec",
+    "selfcheck",
+    "simulate",
+    "SimulateOutcome",
+    "sweep",
+    "SweepOutcome",
+]
+
+
+# ---------------------------------------------------------------------------
+# result dataclasses (the shared versioned schema)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackOutcome:
+    """One packing decision."""
+
+    algorithm: str
+    backend: str
+    capacity: float
+    n_bins: int
+    assignment: Dict[Any, int]        # pid -> consumer (bin name)
+    loads: Dict[int, float]           # consumer -> assigned write speed
+    rscore: Optional[float] = None    # Eq. 10 vs ``prev`` (None: no prev)
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class SweepOutcome:
+    """Batched scenario sweep, axes ``[algorithm, stream, iteration]``."""
+
+    algorithms: Tuple[str, ...]
+    bins: np.ndarray                  # i32[A, B, T]
+    rscores: np.ndarray               # f32[A, B, T]
+    migrations: np.ndarray            # i32[A, B, T]
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class SimulateOutcome:
+    """Closed-loop lag sweep: SLO metrics per policy x stream."""
+
+    policies: Tuple[str, ...]
+    metrics: Dict[str, np.ndarray]    # metric -> f64[P, B]
+    lag_total: np.ndarray             # f32[P, B, T] raw trajectories
+    consumers: np.ndarray             # i32[P, B, T]
+    migrations: np.ndarray            # i32[P, B, T]
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class OptimizeOutcome:
+    """Annealed lambda-sweep Pareto frontier of one packing instance."""
+
+    lambdas: List[float]
+    per_lambda: List[Tuple[float, float]]   # best (bins, rscore) per lambda
+    front: List[Tuple[float, float]]        # non-dominated set
+    hypervolume: float
+    heuristics: Dict[str, dict]             # name -> frontier metrics
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class EvaluateOutcome:
+    """The paper's Figs. 6-9 tables over Eq. 11 delta-streams."""
+
+    algorithms: Tuple[str, ...]
+    deltas: Tuple[int, ...]
+    cbs: Dict[int, Dict[str, float]]        # Eq. 12 per delta
+    avg_rscore: Dict[int, Dict[str, float]]  # Eq. 13 per delta
+    pareto: Dict[int, List[str]]            # front membership per delta
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class BenchReport:
+    """Shared envelope for ``BENCH_*.json`` artifacts.
+
+    ``as_dict`` keeps each benchmark's historical top-level keys
+    (``config`` / ``families`` / anything in ``extra``) and stamps the
+    shared schema fields, so one schema covers every artifact without
+    breaking row emitters that index into the dict.
+    """
+
+    kind: str                          # e.g. "lagsim", "opt"
+    config: Dict[str, Any]
+    families: Dict[str, Any]
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema_version: int = API_VERSION
+
+    def as_dict(self) -> Dict[str, Any]:
+        reserved = {"schema_version", "kind", "config", "families"}
+        clash = reserved & set(self.extra)
+        if clash:
+            raise ValueError(
+                f"BenchReport.extra must not shadow envelope keys: "
+                f"{sorted(clash)}")
+        return {
+            "schema_version": self.schema_version,
+            "kind": self.kind,
+            "config": self.config,
+            "families": self.families,
+            **self.extra,
+        }
+
+    def write(self, path: str) -> Dict[str, Any]:
+        out = self.as_dict()
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the five verbs
+# ---------------------------------------------------------------------------
+
+def pack(speeds, capacity: float, *, algorithm: str = "BFD",
+         prev: Optional[Mapping] = None, backend: str = "py") -> PackOutcome:
+    """One packing decision with any registered packer.
+
+    ``backend="py"``: ``speeds`` is a mapping pid -> write speed (or a
+    sequence of (pid, speed)); ``prev`` maps pid -> previous consumer.
+    ``backend="jax"``: ``speeds`` is f32[n], ``prev`` i32[n] (-1 =
+    unassigned); pids are array indices.
+    """
+    fn = packer_for(algorithm, backend=backend)
+    name = algorithm.upper()
+    if backend == "py":
+        speeds_of = dict(speeds)
+        prev = dict(prev) if prev else None
+        res = fn(speeds_of, capacity, prev=prev)
+        assignment = dict(res.pid_to_bin)
+        loads = {int(c): float(l) for c, l in res.loads.items()}
+        n_bins = res.n_bins
+    else:
+        import jax.numpy as jnp
+
+        sp = np.asarray(speeds, np.float64)
+        pv = (np.full(sp.shape[0], -1, np.int32) if prev is None
+              else np.asarray(prev, np.int32))
+        res = fn(jnp.asarray(sp, jnp.float32), jnp.asarray(pv), capacity)
+        bin_of = np.asarray(res.bin_of)
+        n_bins = int(res.n_bins)
+        assignment = {int(j): int(c) for j, c in enumerate(bin_of)}
+        names = np.asarray(res.names)[:n_bins]
+        lds = np.asarray(res.loads)[:n_bins]
+        loads = {int(c): float(l) for c, l in zip(names, lds)}
+        speeds_of = {int(j): float(w) for j, w in enumerate(sp)}
+        prev = ({int(j): int(c) for j, c in enumerate(pv) if c >= 0}
+                if prev is not None else None)
+    r = None
+    if prev:
+        from repro.core.rscore import rscore
+
+        r = rscore(prev, assignment, speeds_of, capacity)
+    return PackOutcome(algorithm=name, backend=backend,
+                       capacity=float(capacity), n_bins=int(n_bins),
+                       assignment=assignment, loads=loads, rscore=r)
+
+
+def sweep(traces, capacity: float = 1.0, *,
+          algorithms: Optional[Sequence[str]] = None) -> SweepOutcome:
+    """Every algorithm x a batch of streams ``f32[B, T, N]`` in one
+    vmapped XLA program per algorithm (``jaxpack.sweep_streams``)."""
+    from repro.core.jaxpack import sweep_streams
+
+    if algorithms is None:
+        algorithms = list_policies(family=PACKER_FAMILIES, backend="jax")
+    res = sweep_streams(tuple(algorithms), traces, capacity)
+    return SweepOutcome(algorithms=res.algorithms,
+                        bins=np.asarray(res.bins),
+                        rscores=np.asarray(res.rscores),
+                        migrations=np.asarray(res.migrations))
+
+
+def simulate(traces, *, policies: Optional[Sequence[str]] = None,
+             config=None, **cfg_overrides) -> SimulateOutcome:
+    """Closed-loop lag twin over ``traces`` f32[B, T, N]: backlog, shared
+    drain budgets and migration downtime per policy, reduced to SLO
+    metrics (violation fraction, peak lag, time-to-drain,
+    consumer-seconds, migrations)."""
+    import dataclasses as _dc
+
+    from repro.lagsim import LagSimConfig, summarize_sweep, sweep_lag
+
+    if policies is None:
+        policies = list_policies(backend="jax")
+    cfg = config if config is not None else LagSimConfig()
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    res = sweep_lag(tuple(policies), traces, cfg)
+    metrics = {k: np.asarray(v) for k, v in summarize_sweep(res, cfg).items()}
+    return SimulateOutcome(policies=res.policies, metrics=metrics,
+                           lag_total=np.asarray(res.lag_total),
+                           consumers=np.asarray(res.consumers),
+                           migrations=np.asarray(res.migrations))
+
+
+def optimize(speeds, prev=None, capacity: float = 1.0, *,
+             lambdas: Sequence[float] = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0),
+             restarts: int = 4, steps: int = 250, seed: int = 0,
+             score_heuristics: Union[bool, Sequence[str]] = True
+             ) -> OptimizeOutcome:
+    """Trace the bins-vs-R-score Pareto frontier of one instance with the
+    batched annealer, and (optionally) place registered heuristics
+    against it by domination status and hypervolume share."""
+    import jax
+
+    from repro.opt import anneal_frontier, heuristic_point
+
+    sp = np.asarray(speeds, np.float64)
+    pv = (np.full(sp.shape[0], -1, np.int32) if prev is None
+          else np.asarray(prev, np.int32))
+    fr = anneal_frontier(sp, pv, capacity, jax.random.key(seed),
+                         lambdas=tuple(lambdas), restarts=restarts,
+                         steps=steps)
+    if score_heuristics is True:
+        names = list_policies(family=PACKER_FAMILIES, backend="jax")
+    elif score_heuristics:
+        names = tuple(score_heuristics)
+    else:
+        names = ()
+    heur = {name: fr.heuristic_metrics(heuristic_point(name, sp, pv, capacity))
+            for name in names}
+    return OptimizeOutcome(lambdas=fr.lambdas, per_lambda=fr.per_lambda,
+                           front=fr.front, hypervolume=fr.hypervolume,
+                           heuristics=heur)
+
+
+def evaluate(*, algorithms: Optional[Sequence[str]] = None,
+             deltas: Sequence[int] = (5, 15, 25), n_partitions: int = 30,
+             n_measurements: int = 120, capacity: float = 1.0,
+             seed: int = 0) -> EvaluateOutcome:
+    """The paper's evaluation (Figs. 6-9): Cardinal Bin Score (Eq. 12),
+    average R-score (Eq. 13) and Pareto-front membership per
+    delta-stream (Eq. 11), through the batched sweep engine."""
+    from repro.core.metrics import cbs_from_bins, pareto_front
+    from repro.core.streams import generate_stream
+
+    if algorithms is None:
+        algorithms = list_policies(family=PACKER_FAMILIES, backend="jax")
+    algorithms = tuple(a.upper() for a in algorithms)
+    deltas = tuple(int(d) for d in deltas)
+    batch = np.stack([
+        generate_stream(n_partitions, n_measurements, d, capacity, seed=seed)
+        for d in deltas
+    ])
+    out = sweep(batch, capacity, algorithms=algorithms)
+    cbs: Dict[int, Dict[str, float]] = {}
+    avg_r: Dict[int, Dict[str, float]] = {}
+    pareto: Dict[int, List[str]] = {}
+    for i, d in enumerate(deltas):
+        cbs[d] = dict(zip(algorithms,
+                          cbs_from_bins(out.bins[:, i, :]).tolist()))
+        avg_r[d] = dict(zip(algorithms,
+                            out.rscores[:, i, :].mean(axis=1).tolist()))
+        pts = {a: (cbs[d][a], avg_r[d][a]) for a in algorithms}
+        pareto[d] = sorted(pareto_front(pts))
+    return EvaluateOutcome(algorithms=algorithms, deltas=deltas, cbs=cbs,
+                           avg_rscore=avg_r, pareto=pareto)
+
+
+# ---------------------------------------------------------------------------
+# surface checks (CI)
+# ---------------------------------------------------------------------------
+
+def selfcheck() -> None:
+    """CI smoke: the exported surface is intact, matches the documented
+    surface (README "Public API", when the repo checkout is present), and
+    the registry is populated for every family on its expected backends."""
+    import os
+    import re
+
+    mod = globals()
+    missing = [name for name in __all__ if name not in mod]
+    assert not missing, f"__all__ exports missing objects: {missing}"
+    assert __all__ == sorted(__all__, key=str.lower), (
+        "__all__ must stay sorted (case-insensitive) so the documented "
+        "surface is diffable")
+    readme = os.path.join(os.path.dirname(__file__), "..", "..", "README.md")
+    if os.path.exists(readme):            # repo checkout (not an install)
+        with open(readme) as f:
+            text = f.read()
+        m = re.search(r"## Public API\n(.*?)(?:\n## |\Z)", text, re.S)
+        assert m, "README.md must keep a '## Public API' section"
+        documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`",
+                                    m.group(1)))
+        undocumented = set(__all__) - documented
+        assert not undocumented, (
+            f"exports missing from README Public API: {sorted(undocumented)}")
+    for family in FAMILIES:
+        names = list_policies(family=family)
+        assert names, f"no policies registered for family {family!r}"
+    packers_py = list_policies(family=PACKER_FAMILIES, backend="py")
+    packers_jax = list_policies(family=PACKER_FAMILIES, backend="jax")
+    assert packers_py == packers_jax, (
+        "every packer must be registered on both backends: "
+        f"{packers_py} != {packers_jax}")
+    assert len(packers_jax) == 12, packers_jax
+
+
+if __name__ == "__main__":
+    selfcheck()
+    for fam in FAMILIES:
+        print(f"{fam:<10} {', '.join(list_policies(family=fam))}")
+    print("repro.api selfcheck OK "
+          f"(API_VERSION={API_VERSION}, {len(__all__)} exports)")

@@ -20,12 +20,23 @@ from .metrics import (
     run_stream,
 )
 from .jaxpack import (
-    ALL_ALGORITHM_NAMES,
     SweepResult,
     evaluate_stream_jax,
     sweep_streams,
 )
-from .modified import ALL_ALGORITHMS, MODIFIED, modified_any_fit
+from .modified import MODIFIED, modified_any_fit
+
+
+def __getattr__(name: str):
+    # deprecated name tables forward to the per-module shims (which warn
+    # once and resolve through repro.registry)
+    if name == "ALL_ALGORITHMS":
+        from . import modified as _modified
+        return _modified.ALL_ALGORITHMS
+    if name == "ALL_ALGORITHM_NAMES":
+        from . import jaxpack as _jaxpack
+        return _jaxpack.ALL_ALGORITHM_NAMES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from .rscore import recovery_iterations, rscore, rscore_of_set
 from .scenarios import (
     SCENARIO_FAMILIES,
@@ -51,7 +62,6 @@ __all__ = [
     "evaluate_deltas",
     "pareto_front",
     "run_stream",
-    "ALL_ALGORITHMS",
     "MODIFIED",
     "modified_any_fit",
     "recovery_iterations",
@@ -60,7 +70,6 @@ __all__ = [
     "PAPER_DELTAS",
     "generate_stream",
     "paper_streams",
-    "ALL_ALGORITHM_NAMES",
     "SweepResult",
     "evaluate_stream_jax",
     "sweep_streams",

@@ -30,8 +30,9 @@ from typing import Callable, Dict, List, Mapping, Optional, Set, Tuple
 
 from repro.broker import Broker, TopicPartition
 
+from repro.registry import PACKER_FAMILIES, list_policies, packer_for
+
 from .assignment import ConsumerId, PackResult, group_view, rebalanced_partitions
-from .modified import ALL_ALGORITHMS
 from .rscore import rscore_of_set
 
 METADATA_TOPIC = "consumer.metadata"
@@ -143,9 +144,10 @@ class Controller:
         self.broker = broker
         self.manager = manager
         self.cfg = config
-        if config.algorithm not in ALL_ALGORITHMS:
+        if config.algorithm not in list_policies(family=PACKER_FAMILIES,
+                                                 backend="py"):
             raise ValueError(f"unknown algorithm {config.algorithm!r}")
-        self.algorithm: Callable = ALL_ALGORITHMS[config.algorithm]
+        self.algorithm: Callable = packer_for(config.algorithm, backend="py")
         broker.create_topic(METADATA_TOPIC, 1)
 
         self.state = ControllerState.SYNCHRONIZE

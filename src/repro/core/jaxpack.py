@@ -281,35 +281,19 @@ def modified_any_fit_jax(
 # whole-stream evaluation (bins + Rscore per iteration) in one jitted scan
 # ---------------------------------------------------------------------------
 
-def _pack_dispatch(name: str):
-    name = name.upper()
-    classical = {
-        "NF": ("next", False), "NFD": ("next", True),
-        "FF": ("first", False), "FFD": ("first", True),
-        "BF": ("best", False), "BFD": ("best", True),
-        "WF": ("worst", False), "WFD": ("worst", True),
-    }
-    modified = {
-        "MWF": ("worst", "cumulative"), "MBF": ("best", "cumulative"),
-        "MWFP": ("worst", "max_partition"), "MBFP": ("best", "max_partition"),
-    }
-    if name in classical:
-        strategy, dec = classical[name]
-        return lambda s, p, c: pack_jax(s, p, c, strategy=strategy, decreasing=dec)
-    if name in modified:
-        fit, key = modified[name]
-        return lambda s, p, c: modified_any_fit_jax(s, p, c, fit=fit, sort_key=key)
-    raise ValueError(f"unknown algorithm {name!r}")
-
-
 def packer_for(name: str):
     """Public dispatch: ``name`` -> ``fn(speeds, prev, capacity) -> PackedJax``.
 
     The callable is scan-safe (pure jax.lax control flow), so downstream
     closed loops -- the controller decision step, ``repro.lagsim`` -- can run
-    a repack every simulated step inside one jitted program.
+    a repack every simulated step inside one jitted program.  Names resolve
+    through ``repro.registry`` (the single policy catalogue); the identity
+    of each algorithm -- fit strategy, decreasing pre-sort, consumer sort
+    key -- lives in its registered ``PolicySpec``.
     """
-    return _pack_dispatch(name)
+    from repro.registry import packer_for as _registry_packer_for
+
+    return _registry_packer_for(name, backend="jax")
 
 
 def _stream_scan(stream: jax.Array, capacity, algorithm: str
@@ -317,7 +301,7 @@ def _stream_scan(stream: jax.Array, capacity, algorithm: str
     """Shared scan over an (N, P) stream: the previous iteration's assignment
     feeds the next, as in the controller loop.  Returns per-iteration
     (bins i32[N], rscore f32[N], migrations i32[N])."""
-    packer = _pack_dispatch(algorithm)
+    packer = packer_for(algorithm)
     n = stream.shape[1]
     capacity = jnp.float32(capacity)
 
@@ -349,10 +333,18 @@ def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
 # batched scenario sweep: all algorithms x a whole batch of streams
 # ---------------------------------------------------------------------------
 
-ALL_ALGORITHM_NAMES: Tuple[str, ...] = (
-    "NF", "NFD", "FF", "FFD", "BF", "BFD", "WF", "WFD",
-    "MWF", "MBF", "MWFP", "MBFP",
-)
+def __getattr__(name: str):
+    # deprecation shim: the hand-enumerated name table is now derived from
+    # the registry (tests/test_registry.py pins the warning)
+    if name == "ALL_ALGORITHM_NAMES":
+        from repro.registry import PACKER_FAMILIES, list_policies
+        from repro.registry.compat import warn_deprecated
+
+        warn_deprecated(__name__, "ALL_ALGORITHM_NAMES",
+                        "repro.registry.list_policies(family=('heuristic', "
+                        "'sticky'), backend='jax')")
+        return list_policies(family=PACKER_FAMILIES, backend="jax")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @jax.tree_util.register_dataclass

@@ -57,13 +57,21 @@ def run_stream(
     return runs
 
 
+def cbs_from_bins(z) -> np.ndarray:
+    """Eq. 12 on a per-iteration bin-count matrix ``(A, N)`` (algorithms x
+    iterations): mean relative excess over the per-iteration best.  The
+    single definition every CBS consumer (``cardinal_bin_score``,
+    ``repro.api.evaluate``, ``benchmarks/paper_eval``) reduces through."""
+    z = np.asarray(z, dtype=np.float64)
+    zmin = z.min(axis=0)
+    zmin = np.maximum(zmin, 1.0)  # guard: zero bins only if zero load for all
+    return ((z - zmin) / zmin).mean(axis=1)
+
+
 def cardinal_bin_score(runs: Mapping[str, StreamRun]) -> Dict[str, float]:
     """Eq. 12 over a family of runs on the same stream."""
     names = list(runs)
-    z = np.array([runs[n].bins for n in names], dtype=np.float64)  # (A, N)
-    zmin = z.min(axis=0)
-    zmin = np.maximum(zmin, 1.0)  # guard: zero bins only if zero load for all
-    cbs = ((z - zmin) / zmin).mean(axis=1)
+    cbs = cbs_from_bins([runs[n].bins for n in names])
     return {n: float(c) for n, c in zip(names, cbs)}
 
 

@@ -136,7 +136,16 @@ mbfp = _member("best", "max_partition")
 
 MODIFIED = {"MWF": mwf, "MBF": mbf, "MWFP": mwfp, "MBFP": mbfp}
 
-ALL_ALGORITHMS = {}
-from .binpack import CLASSICAL as _CLASSICAL  # noqa: E402
-ALL_ALGORITHMS.update(_CLASSICAL)
-ALL_ALGORITHMS.update(MODIFIED)
+
+def __getattr__(name: str):
+    # deprecation shim: the combined name->callable table is now derived
+    # from the registry (tests/test_registry.py pins the warning)
+    if name == "ALL_ALGORITHMS":
+        from repro.registry import PACKER_FAMILIES, list_policies, packer_for
+        from repro.registry.compat import warn_deprecated
+
+        warn_deprecated(__name__, "ALL_ALGORITHMS",
+                        "repro.registry.packer_for(name, backend='py')")
+        return {n: packer_for(n, backend="py")
+                for n in list_policies(family=PACKER_FAMILIES, backend="py")}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,17 +16,26 @@ from .engine import (
 )
 from .metrics import SLO_METRIC_NAMES, longest_excursion, slo_summary, summarize_sweep
 from .policies import (
-    ALL_POLICY_NAMES,
     OPTIMIZER_POLICY_NAMES,
+    PACKING_POLICY_NAMES,
     REACTIVE_BASELINE_NAMES,
 )
 
+
+def __getattr__(name: str):
+    # deprecated: forwards to the policies shim (which warns once and
+    # resolves through repro.registry)
+    if name == "ALL_POLICY_NAMES":
+        from . import policies as _policies
+        return _policies.ALL_POLICY_NAMES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
-    "ALL_POLICY_NAMES",
     "LagSimConfig",
     "LagSweepResult",
     "LagTrace",
     "OPTIMIZER_POLICY_NAMES",
+    "PACKING_POLICY_NAMES",
     "REACTIVE_BASELINE_NAMES",
     "SLO_METRIC_NAMES",
     "longest_excursion",

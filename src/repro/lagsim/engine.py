@@ -36,8 +36,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels.lag_update import lag_update_batch, lag_update_reference
-
-from .policies import make_policy
+from repro.registry import make_policy
 
 NEG = -1
 
@@ -117,12 +116,15 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     m = 2 * n + 2                       # packer bin-name universe
     cfg = cfg.resolve(n)
     cap_step = jnp.float32(cfg.capacity * cfg.dt)
-    init, policy_step = make_policy(
-        policy, n, jnp.float32(cfg.capacity),
+    # strict=False: the engine passes its uniform reactive knob set to every
+    # policy; specs that do not declare a knob simply ignore it
+    pol = make_policy(
+        policy, n, jnp.float32(cfg.capacity), backend="jax", strict=False,
         lag_threshold=jnp.float32(cfg.lag_threshold),
         target_utilization=jnp.float32(cfg.target_utilization),
         max_consumers=cfg.max_consumers,
         scale_down_patience=cfg.scale_down_patience)
+    init, policy_step = pol.init, pol.step
 
     def drain(lag, produced, assign, readable):
         if cfg.use_kernel:

@@ -1,42 +1,9 @@
-"""Scaling policies for the closed-loop lag simulator.
+"""Scaling-policy catalogue of the closed-loop lag simulator.
 
-Two families share one scan-safe interface:
-
-* **Packing policies** -- every name in ``jaxpack.ALL_ALGORITHM_NAMES``.
-  Each step repacks the current write speeds with the previous assignment
-  as ``prev`` (sticky naming), exactly like the controller's REASSIGN
-  state; the bin names are the consumer ids.
-
-* **Optimizer policies** -- the batched simulated annealer
-  (``repro.opt.anneal``) run once per simulated step, best-of-chains:
-
-  - ``ANNEAL``: minimizes the consumer count alone (lambda = 0) -- a
-    near-optimal but rebalance-oblivious upper baseline that shows what
-    pure bin minimization costs in migration churn;
-  - ``ANNEAL_STICKY``: minimizes ``bins + lambda * Rscore`` (lambda =
-    ``ANNEAL_STICKY_LAMBDA``), trading a consumer or two for stability
-    like the paper's Modified Any Fit family does.
-
-  Both carry their PRNG key in the policy state, so trajectories are
-  deterministic per stream and the whole sweep stays scan-safe.
-
-* **Reactive baselines** -- the industry-standard scalers the paper is
-  implicitly compared against (KEDA Kafka scaler / Cloud Run Kafka
-  autoscaler, see SNIPPETS.md):
-
-  - ``KEDA_LAG``: desired consumers = ceil(total_lag / lag_threshold),
-    KEDA's ``lagThreshold`` rule, clamped to [1, max_consumers].
-  - ``RATE_THRESHOLD``: desired consumers = ceil(total_write_rate /
-    (target_utilization * capacity)) -- a consumption-rate target with no
-    notion of per-partition fit.
-
-  Both assign partitions eagerly by ``partition % n`` (Kafka's eager
-  round-robin rebalance): whenever ``n`` changes, most partitions migrate
-  and eat downtime -- the rebalancing cost the R-score is designed to
-  avoid.  Scale-down waits for ``scale_down_patience`` consecutive
-  under-target steps (KEDA's stabilization window); scale-up is immediate.
-
-A policy is ``(init, step)``:
+Since the ``repro.registry`` redesign every policy -- the paper's 12
+packers, the ``ANNEAL``/``ANNEAL_STICKY`` optimizers and the
+``KEDA_LAG``/``RATE_THRESHOLD`` reactive baselines -- is registered in
+one place (``repro.registry.builtin``) behind the scan-safe protocol::
 
   init(n) -> state0                                  (pytree carried by scan)
   step(speeds, lag, prev_assign, state)
@@ -45,110 +12,54 @@ A policy is ``(init, step)``:
 ``speeds`` are the step's true per-partition write rates (the twin's
 monitor is an oracle); ``lag`` is the backlog *including* this step's
 production, which is what a lag-reactive scaler observes.
+
+This module remains as the lagsim-facing view of the registry: the
+family name tables below are derived from it, and the old
+``make_policy`` entry point forwards to ``repro.registry.make_policy``
+(which is what ``engine.py`` now calls directly).
+``ALL_POLICY_NAMES`` is deprecated -- use
+``repro.registry.list_policies(backend="jax")``.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
+from repro.registry import PACKER_FAMILIES, list_policies
+from repro.registry import make_policy as _registry_make_policy
+from repro.registry.builtin import (  # noqa: F401  (re-exported constants)
+    ANNEAL_CHAINS,
+    ANNEAL_STEPS,
+    ANNEAL_STICKY_LAMBDA,
+)
 
-from repro.core.jaxpack import ALL_ALGORITHM_NAMES, packer_for
-
-REACTIVE_BASELINE_NAMES: Tuple[str, ...] = ("KEDA_LAG", "RATE_THRESHOLD")
-OPTIMIZER_POLICY_NAMES: Tuple[str, ...] = ("ANNEAL", "ANNEAL_STICKY")
-ALL_POLICY_NAMES: Tuple[str, ...] = (
-    ALL_ALGORITHM_NAMES + REACTIVE_BASELINE_NAMES + OPTIMIZER_POLICY_NAMES)
-
-ANNEAL_STICKY_LAMBDA = 4.0      # R-score weight of ANNEAL_STICKY
-ANNEAL_CHAINS = 6               # chains per decision step
-ANNEAL_STEPS = 48               # anneal steps per decision step
-
-
-def _make_packing_policy(name: str, n: int, capacity):
-    packer = packer_for(name)
-
-    def init(n_partitions: int):
-        return jnp.int32(0)            # stateless; prev_assign is the memory
-
-    def step(speeds, lag, prev_assign, state):
-        res = packer(speeds, prev_assign, capacity)
-        return res.bin_of, res.n_bins, state
-
-    return init, step
+PACKING_POLICY_NAMES: Tuple[str, ...] = list_policies(
+    family=PACKER_FAMILIES, backend="jax")
+REACTIVE_BASELINE_NAMES: Tuple[str, ...] = list_policies(family="reactive")
+OPTIMIZER_POLICY_NAMES: Tuple[str, ...] = list_policies(family="optimizer")
 
 
-def _make_anneal_policy(name: str, n: int, capacity, *, lam: float,
-                        chains: int = ANNEAL_CHAINS,
-                        steps: int = ANNEAL_STEPS):
-    from repro.opt.anneal import anneal_assign
+def __getattr__(name: str):
+    # deprecation shim: the concatenated name table is now the registry's
+    # jax-backend listing (tests/test_registry.py pins the warning)
+    if name == "ALL_POLICY_NAMES":
+        from repro.registry.compat import warn_deprecated
 
-    def init(n_partitions: int):
-        # per-policy deterministic key; split every step so consecutive
-        # decisions explore independently while staying scan-safe
-        return jax.random.key(0x0A11EA1)
-
-    def step(speeds, lag, prev_assign, key):
-        key, sub = jax.random.split(key)
-        assign, n_bins = anneal_assign(speeds, prev_assign, capacity, sub,
-                                       lam=lam, chains=chains, steps=steps)
-        return assign, n_bins, key
-
-    return init, step
-
-
-def _make_reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
-                          target_utilization, max_consumers,
-                          scale_down_patience):
-    pid = jnp.arange(n, dtype=jnp.int32)
-    max_c = jnp.int32(max_consumers)
-    patience = jnp.int32(scale_down_patience)
-
-    def init(n_partitions: int):
-        return (jnp.int32(1), jnp.int32(0))     # (n_current, under_count)
-
-    def step(speeds, lag, prev_assign, state):
-        n_cur, under = state
-        if kind == "lag":
-            want = jnp.ceil(jnp.sum(lag) / lag_threshold)
-        else:
-            want = jnp.ceil(jnp.sum(speeds) / (target_utilization * capacity))
-        want = jnp.clip(want.astype(jnp.int32), 1, max_c)
-        under = jnp.where(want < n_cur, under + 1, jnp.int32(0))
-        go_down = under >= patience
-        n_new = jnp.where(want > n_cur, want,
-                          jnp.where(go_down, want, n_cur))
-        under = jnp.where(go_down, jnp.int32(0), under)
-        assign = pid % n_new
-        return assign, n_new, (n_new, under)
-
-    return init, step
+        warn_deprecated(__name__, "ALL_POLICY_NAMES",
+                        "repro.registry.list_policies(backend='jax')")
+        return list_policies(backend="jax")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def make_policy(name: str, n: int, capacity, *, lag_threshold,
                 target_utilization, max_consumers, scale_down_patience):
     """Build ``(init, step)`` for ``name`` over ``n`` partitions.
 
+    Compatibility wrapper over ``repro.registry.make_policy``:
     ``capacity``/``lag_threshold`` are in bytes *per step* (the engine
     pre-multiplies by dt).  Unknown names raise ValueError.
     """
-    key = name.upper()
-    if key in ALL_ALGORITHM_NAMES:
-        return _make_packing_policy(key, n, capacity)
-    if key == "ANNEAL":
-        return _make_anneal_policy(key, n, capacity, lam=0.0)
-    if key == "ANNEAL_STICKY":
-        return _make_anneal_policy(key, n, capacity,
-                                   lam=ANNEAL_STICKY_LAMBDA)
-    if key == "KEDA_LAG":
-        return _make_reactive_policy(
-            "lag", n, capacity, lag_threshold=lag_threshold,
-            target_utilization=target_utilization, max_consumers=max_consumers,
-            scale_down_patience=scale_down_patience)
-    if key == "RATE_THRESHOLD":
-        return _make_reactive_policy(
-            "rate", n, capacity, lag_threshold=lag_threshold,
-            target_utilization=target_utilization, max_consumers=max_consumers,
-            scale_down_patience=scale_down_patience)
-    raise ValueError(
-        f"unknown policy {name!r}; have {sorted(ALL_POLICY_NAMES)}")
+    policy = _registry_make_policy(
+        name, n, capacity, backend="jax", strict=False,
+        lag_threshold=lag_threshold, target_utilization=target_utilization,
+        max_consumers=max_consumers, scale_down_patience=scale_down_patience)
+    return policy.init, policy.step

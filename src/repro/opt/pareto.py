@@ -29,15 +29,17 @@ Point = Tuple[float, float]
 
 def heuristic_point(name: str, speeds, prev, capacity) -> Point:
     """One heuristic's (bins, rscore) position on an instance: repack
-    ``speeds`` with ``prev`` via ``jaxpack.packer_for(name)`` and price
-    the moved set by Eq. 10.  The shared convention for scoring
-    heuristics against frontiers (benchmarks and examples alike)."""
-    from repro.core.jaxpack import packer_for
+    ``speeds`` with ``prev`` via the registered jax packer
+    (``repro.registry.packer_for``) and price the moved set by Eq. 10.
+    The shared convention for scoring heuristics against frontiers
+    (benchmarks and examples alike)."""
+    from repro.registry import packer_for
 
     speeds = np.asarray(speeds, np.float64)
     prev = np.asarray(prev)
-    res = packer_for(name)(jnp.asarray(speeds, jnp.float32),
-                           jnp.asarray(prev, jnp.int32), capacity)
+    res = packer_for(name, backend="jax")(jnp.asarray(speeds, jnp.float32),
+                                          jnp.asarray(prev, jnp.int32),
+                                          capacity)
     bin_of = np.asarray(res.bin_of)
     moved = (prev >= 0) & (bin_of != prev)
     return (float(int(res.n_bins)),
@@ -49,10 +51,10 @@ def incumbent_assignment(trace, capacity, t: int,
     """Sticky assignment after iterations ``[0, t)`` of one stream
     ``[T, N]`` under ``algorithm`` -- the canonical ``prev`` for
     mid-trace frontier instances."""
-    from repro.core.jaxpack import packer_for
+    from repro.registry import packer_for
 
     trace = np.asarray(trace)
-    packer = packer_for(algorithm)
+    packer = packer_for(algorithm, backend="jax")
     prev = jnp.full(trace.shape[1], -1, jnp.int32)
     for s in range(t):
         prev = packer(jnp.asarray(trace[s], jnp.float32), prev,

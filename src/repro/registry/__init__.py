@@ -1,0 +1,248 @@
+"""One policy registry for every assignment policy in the repo.
+
+The paper's whole argument is a race between assignment policies: the
+Sec. II-B classical heuristics, the Sec. IV-B/IV-C sticky Modified Any
+Fit family, the global optimizers of the 2024 follow-up, and the
+reactive scalers (KEDA-style) they displace.  Historically each family
+shipped its own interface; this package is the single extension point
+they all register through:
+
+* ``PolicySpec``   -- name, family (``heuristic|sticky|optimizer|
+  reactive``), backend (``py|jax``), hyperparams, and pointers to the
+  builder / raw packer, plus the paper section it reproduces.
+* ``Policy``       -- the scan-safe protocol every policy satisfies::
+
+      init(n) -> state                                (pytree)
+      step(speeds, lag, prev, state)
+          -> (assign i32[N], n_consumers i32, state')
+
+  ``jax``-backend policies are pure ``jax.lax`` control flow, so a
+  ``Policy`` can run inside the lag twin's jitted scan; ``py``-backend
+  policies satisfy the same signature on numpy arrays (reference
+  semantics, used by the controller and the parity tests).
+* ``register``     -- decorator that publishes a builder
+  ``(n, capacity, **hyperparams) -> (init, step)`` under a spec.
+* ``make_policy``  -- ``name -> Policy`` with hyperparameter overrides.
+* ``list_policies`` / ``get_spec`` -- discovery, filterable by family
+  and backend, in registration order (which benchmarks rely on).
+* ``packer_for``   -- the raw one-shot packer of a heuristic/sticky
+  policy (``py``: dict-based ``PackResult``; ``jax``: ``PackedJax``).
+
+Built-in policies live in ``repro.registry.builtin`` and are loaded
+lazily on first lookup, so importing this module is cheap and free of
+import cycles.  Adding a policy is one decorated builder::
+
+    from repro.registry import register
+
+    @register("MY_POLICY", family="reactive", backend="jax",
+              hyperparams={"gain": 2.0}, paper_section="--",
+              summary="toy proportional scaler")
+    def _build(n, capacity, *, gain=2.0):
+        def init(n): ...
+        def step(speeds, lag, prev, state): ...
+        return init, step
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import (Any, Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
+
+FAMILIES: Tuple[str, ...] = ("heuristic", "sticky", "optimizer", "reactive")
+BACKENDS: Tuple[str, ...] = ("py", "jax")
+#: the families whose members are one-shot bin packers (have a ``packer``)
+PACKER_FAMILIES: Tuple[str, ...] = ("heuristic", "sticky")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Registered metadata of one (name, backend) policy variant."""
+
+    name: str                      # canonical upper-case name
+    family: str                    # heuristic | sticky | optimizer | reactive
+    backend: str                   # py | jax
+    hyperparams: Mapping[str, Any]  # default knobs, overridable in make_policy
+    builder: Callable              # (n, capacity, **hyperparams) -> (init, step)
+    packer: Optional[Callable] = None   # raw one-shot packer (packer families)
+    paper_section: str = ""        # e.g. "II-B", "IV-C", "2024 follow-up"
+    summary: str = ""              # one-line description
+
+
+class Policy(NamedTuple):
+    """A built policy: the scan-safe (init, step) pair plus its spec."""
+
+    init: Callable[[int], Any]
+    step: Callable[[Any, Any, Any, Any], Tuple[Any, Any, Any]]
+    spec: PolicySpec
+
+
+_REGISTRY: Dict[Tuple[str, str], PolicySpec] = {}
+_ORDER: List[str] = []          # canonical names in first-registration order
+_BUILTINS_LOADED = False
+_BUILTINS_LOADING = False       # reentrancy guard: builtin.py calls register()
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED, _BUILTINS_LOADING
+    if _BUILTINS_LOADED or _BUILTINS_LOADING:
+        return
+    _BUILTINS_LOADING = True
+    try:
+        from . import builtin  # noqa: F401  (registers on import)
+    except BaseException:
+        # a failed builtin import must stay loud on retry, never leave a
+        # silently empty/partial registry behind
+        _REGISTRY.clear()
+        _ORDER.clear()
+        raise
+    finally:
+        _BUILTINS_LOADING = False
+    _BUILTINS_LOADED = True
+
+
+def register(name: str, *, family: str, backend: str,
+             hyperparams: Optional[dict] = None,
+             packer: Optional[Callable] = None,
+             paper_section: str = "", summary: str = "") -> Callable:
+    """Decorator: publish ``builder(n, capacity, **hyperparams)`` as policy
+    ``name`` on ``backend``.  Duplicate (name, backend) pairs are an error:
+    the registry is the single source of truth for what a name means."""
+    # load builtins first so user registrations collide loudly (and land
+    # after the builtins in registration order, which list_policies reports)
+    _ensure_builtins()
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; have {FAMILIES}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    canonical = name.upper()
+
+    def deco(builder: Callable) -> Callable:
+        key = (canonical, backend)
+        if key in _REGISTRY:
+            raise ValueError(
+                f"policy {canonical!r} already registered for backend "
+                f"{backend!r}")
+        _REGISTRY[key] = PolicySpec(
+            name=canonical, family=family, backend=backend,
+            hyperparams=types.MappingProxyType(dict(hyperparams or {})),
+            builder=builder, packer=packer, paper_section=paper_section,
+            summary=summary)
+        if canonical not in _ORDER:
+            _ORDER.append(canonical)
+        return builder
+
+    return deco
+
+
+def _family_tuple(family: Union[None, str, Sequence[str]]) -> Optional[Tuple[str, ...]]:
+    if family is None:
+        return None
+    fams = (family,) if isinstance(family, str) else tuple(family)
+    for f in fams:
+        if f not in FAMILIES:
+            raise ValueError(f"unknown family {f!r}; have {FAMILIES}")
+    return fams
+
+
+def list_policies(family: Union[None, str, Sequence[str]] = None,
+                  backend: Optional[str] = None) -> Tuple[str, ...]:
+    """Registered policy names, in registration order, optionally filtered
+    by ``family`` (a name or a tuple of names) and/or ``backend``."""
+    _ensure_builtins()
+    fams = _family_tuple(family)
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    out = []
+    for name in _ORDER:
+        for bk in BACKENDS:
+            spec = _REGISTRY.get((name, bk))
+            if spec is None:
+                continue
+            if fams is not None and spec.family not in fams:
+                continue
+            if backend is not None and spec.backend != backend:
+                continue
+            out.append(name)
+            break
+    return tuple(out)
+
+
+def get_spec(name: str, backend: Optional[str] = None) -> PolicySpec:
+    """The ``PolicySpec`` of ``name``; with ``backend=None`` the ``jax``
+    variant is preferred (it is the scan-safe one) and ``py`` is the
+    fallback."""
+    _ensure_builtins()
+    canonical = name.upper()
+    backends = (backend,) if backend is not None else ("jax", "py")
+    for bk in backends:
+        spec = _REGISTRY.get((canonical, bk))
+        if spec is not None:
+            return spec
+    registered_on = tuple(bk for bk in BACKENDS
+                          if (canonical, bk) in _REGISTRY)
+    if registered_on:
+        raise ValueError(
+            f"policy {canonical!r} is not registered for backend "
+            f"{backend!r} (available backends: {registered_on})")
+    raise ValueError(
+        f"unknown policy {name!r}; have {sorted(set(_ORDER))}")
+
+
+def make_policy(name: str, n: int, capacity: float = 1.0, *,
+                backend: Optional[str] = None, strict: bool = True,
+                **overrides) -> Policy:
+    """Build the ``Policy`` (init/step pair) for ``name`` over ``n``
+    partitions of consumer capacity ``capacity``.
+
+    ``overrides`` update the spec's default hyperparams.  With
+    ``strict=True`` (default) an override the spec does not declare raises
+    ``ValueError`` -- typos must not silently vanish; ``strict=False``
+    ignores extras, so a caller may pass one uniform knob set to every
+    policy (the lag twin does exactly that).
+    """
+    spec = get_spec(name, backend=backend)
+    hyper = dict(spec.hyperparams)
+    unknown = set(overrides) - set(hyper)
+    if unknown and strict:
+        raise ValueError(
+            f"policy {spec.name!r} does not take hyperparams "
+            f"{sorted(unknown)}; declared: {sorted(hyper)}")
+    hyper.update({k: v for k, v in overrides.items() if k in hyper})
+    init, step = spec.builder(n, capacity, **hyper)
+    return Policy(init=init, step=step, spec=spec)
+
+
+def packer_for(name: str, backend: str = "jax") -> Callable:
+    """The raw one-shot packer registered for ``name`` on ``backend``.
+
+    ``jax``: ``fn(speeds f32[n], prev i32[n], capacity) -> PackedJax``,
+    scan-safe.  ``py``: ``fn(speeds, capacity, prev=None, ...) ->
+    PackResult`` on dicts (reference semantics).  Policies outside the
+    packer families (optimizers, reactive scalers) have no one-shot
+    packer and raise ``ValueError``.
+    """
+    _ensure_builtins()
+    spec = _REGISTRY.get((name.upper(), backend))
+    if spec is None:
+        raise ValueError(
+            f"unknown algorithm {name!r} for backend {backend!r}; have "
+            f"{sorted(list_policies(family=PACKER_FAMILIES, backend=backend))}")
+    if spec.packer is None:
+        raise ValueError(
+            f"policy {spec.name!r} ({spec.family}) has no one-shot packer")
+    return spec.packer
+
+
+__all__ = [
+    "BACKENDS",
+    "FAMILIES",
+    "PACKER_FAMILIES",
+    "Policy",
+    "PolicySpec",
+    "get_spec",
+    "list_policies",
+    "make_policy",
+    "packer_for",
+    "register",
+]

@@ -1,0 +1,280 @@
+"""Built-in policy registrations: the paper's 12 packers (both backends),
+the annealing optimizers, and the reactive baselines.
+
+Registration order is load-bearing -- ``list_policies`` reports it and the
+benchmarks key their row order off it:
+
+  NF NFD FF FFD BF BFD WF WFD        (Sec. II-B classical, heuristic)
+  MWF MBF MWFP MBFP                  (Sec. IV-B Algorithm 1, sticky)
+  KEDA_LAG RATE_THRESHOLD            (reactive baselines)
+  ANNEAL ANNEAL_STICKY               (2024 follow-up optimizers)
+
+Every packer name is registered twice -- backend ``py`` wraps the
+reference implementation (``binpack.py`` / ``modified.py``), backend
+``jax`` the jitted ``lax.scan`` port (``jaxpack.py``) -- and the
+cross-backend parity tests in ``tests/test_jaxpack.py`` iterate exactly
+this both-backends set.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binpack, modified
+from repro.core.assignment import group_view
+from repro.core.jaxpack import modified_any_fit_jax, pack_jax
+
+from . import register
+
+# ---------------------------------------------------------------------------
+# optimizer-policy constants (shared with the lagsim shim)
+# ---------------------------------------------------------------------------
+ANNEAL_STICKY_LAMBDA = 4.0      # R-score weight of ANNEAL_STICKY
+ANNEAL_CHAINS = 6               # chains per decision step
+ANNEAL_STEPS = 48               # anneal steps per decision step
+
+# identity of each classical member: name -> (fit strategy, decreasing)
+CLASSICAL_SPECS = (
+    ("NF", "next", False), ("NFD", "next", True),
+    ("FF", "first", False), ("FFD", "first", True),
+    ("BF", "best", False), ("BFD", "best", True),
+    ("WF", "worst", False), ("WFD", "worst", True),
+)
+# identity of each Modified Any Fit member: name -> (fit, consumer sort key)
+MODIFIED_SPECS = (
+    ("MWF", "worst", "cumulative"), ("MBF", "best", "cumulative"),
+    ("MWFP", "worst", "max_partition"), ("MBFP", "best", "max_partition"),
+)
+
+
+# ---------------------------------------------------------------------------
+# packer -> Policy adapters
+# ---------------------------------------------------------------------------
+
+def _jax_packing_policy(packer, capacity):
+    """Scan-safe Policy over a jax one-shot packer: each step repacks the
+    current speeds with the previous assignment as ``prev`` (sticky
+    naming), exactly like the controller's REASSIGN state."""
+
+    def init(n_partitions: int):
+        return jnp.int32(0)            # stateless; prev_assign is the memory
+
+    def step(speeds, lag, prev_assign, state):
+        res = packer(speeds, prev_assign, capacity)
+        return res.bin_of, res.n_bins, state
+
+    return init, step
+
+
+def _py_packing_policy(packer, capacity, **kwargs):
+    """Reference-backend Policy: same protocol on numpy arrays, delegating
+    to the dict-based reference packer."""
+
+    def init(n_partitions: int):
+        return None
+
+    def step(speeds, lag, prev_assign, state):
+        speeds = np.asarray(speeds)
+        prev = np.asarray(prev_assign)
+        sp = {j: float(w) for j, w in enumerate(speeds)}
+        prev_map = {j: int(c) for j, c in enumerate(prev) if int(c) >= 0}
+        res = packer(sp, float(capacity), prev=prev_map, **kwargs)
+        assign = np.full(speeds.shape[0], -1, np.int32)
+        for pid, cid in res.pid_to_bin.items():
+            assign[pid] = cid
+        return assign, np.int32(res.n_bins), state
+
+    return init, step
+
+
+# ---------------------------------------------------------------------------
+# Sec. II-B classical heuristics (family "heuristic", both backends)
+# ---------------------------------------------------------------------------
+
+def _register_classical(name: str, strategy: str, decreasing: bool) -> None:
+    hyper = {"strategy": strategy, "decreasing": decreasing, "sticky": True}
+    summary = (f"{'offline decreasing ' if decreasing else 'online '}"
+               f"{strategy}-fit any-fit heuristic")
+
+    def jax_packer(speeds, prev, capacity):
+        return pack_jax(speeds, prev, capacity, strategy=strategy,
+                        decreasing=decreasing)
+
+    # the one-shot py packer IS the reference entry (no re-wrapping: fixes
+    # to binpack propagate to every registry consumer)
+    @register(name, family="heuristic", backend="py", hyperparams=hyper,
+              packer=binpack.CLASSICAL[name], paper_section="II-B",
+              summary=summary)
+    def _build_py(n, capacity, *, strategy=strategy, decreasing=decreasing,
+                  sticky=True):
+        def packer(speeds, cap, prev=None, **_):
+            return binpack.pack(speeds, cap, strategy=strategy,
+                                decreasing=decreasing, prev=prev,
+                                sticky=sticky)
+        return _py_packing_policy(packer, capacity)
+
+    @register(name, family="heuristic", backend="jax", hyperparams=hyper,
+              packer=jax_packer, paper_section="II-B", summary=summary)
+    def _build_jax(n, capacity, *, strategy=strategy, decreasing=decreasing,
+                   sticky=True):
+        def packer(speeds, prev, cap):
+            return pack_jax(speeds, prev, cap, strategy=strategy,
+                            decreasing=decreasing, sticky=sticky)
+        return _jax_packing_policy(packer, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Sec. IV-B Algorithm 1 / IV-C sticky naming (family "sticky", both backends)
+# ---------------------------------------------------------------------------
+
+def _register_modified(name: str, fit: str, sort_key: str) -> None:
+    hyper = {"fit": fit, "sort_key": sort_key}
+    summary = (f"Modified Any Fit: {fit}-fit insert, consumers sorted by "
+               f"{sort_key.replace('_', ' ')}")
+
+    def jax_packer(speeds, prev, capacity):
+        return modified_any_fit_jax(speeds, prev, capacity, fit=fit,
+                                    sort_key=sort_key)
+
+    # the one-shot py packer IS the reference entry (no re-wrapping)
+    @register(name, family="sticky", backend="py", hyperparams=hyper,
+              packer=modified.MODIFIED[name], paper_section="IV-B/IV-C",
+              summary=summary)
+    def _build_py(n, capacity, *, fit=fit, sort_key=sort_key):
+        def packer(speeds, cap, prev=None, **_):
+            group = group_view(prev) if prev is not None else None
+            return modified.modified_any_fit(speeds, cap, group, fit=fit,
+                                             sort_key=sort_key)
+        return _py_packing_policy(packer, capacity)
+
+    @register(name, family="sticky", backend="jax", hyperparams=hyper,
+              packer=jax_packer, paper_section="IV-B/IV-C", summary=summary)
+    def _build_jax(n, capacity, *, fit=fit, sort_key=sort_key):
+        def packer(speeds, prev, cap):
+            return modified_any_fit_jax(speeds, prev, cap, fit=fit,
+                                        sort_key=sort_key)
+        return _jax_packing_policy(packer, capacity)
+
+
+for _name, _strategy, _dec in CLASSICAL_SPECS:
+    _register_classical(_name, _strategy, _dec)
+for _name, _fit, _key in MODIFIED_SPECS:
+    _register_modified(_name, _fit, _key)
+
+
+# ---------------------------------------------------------------------------
+# reactive baselines (family "reactive", jax backend)
+# ---------------------------------------------------------------------------
+
+def _reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
+                     target_utilization, max_consumers, scale_down_patience):
+    """KEDA-style reactive scaler: desired consumer count from a lag or
+    rate threshold, eager ``partition % n`` assignment (Kafka's eager
+    round-robin rebalance), immediate scale-up, patience-gated
+    scale-down."""
+    pid = jnp.arange(n, dtype=jnp.int32)
+    if max_consumers is None:
+        max_consumers = n
+    if lag_threshold is None:
+        lag_threshold = 2.0 * capacity
+    max_c = jnp.int32(max_consumers)
+    patience = jnp.int32(scale_down_patience)
+
+    def init(n_partitions: int):
+        return (jnp.int32(1), jnp.int32(0))     # (n_current, under_count)
+
+    def step(speeds, lag, prev_assign, state):
+        n_cur, under = state
+        if kind == "lag":
+            want = jnp.ceil(jnp.sum(lag) / lag_threshold)
+        else:
+            want = jnp.ceil(jnp.sum(speeds) / (target_utilization * capacity))
+        want = jnp.clip(want.astype(jnp.int32), 1, max_c)
+        under = jnp.where(want < n_cur, under + 1, jnp.int32(0))
+        go_down = under >= patience
+        n_new = jnp.where(want > n_cur, want,
+                          jnp.where(go_down, want, n_cur))
+        under = jnp.where(go_down, jnp.int32(0), under)
+        assign = pid % n_new
+        return assign, n_new, (n_new, under)
+
+    return init, step
+
+
+@register("KEDA_LAG", family="reactive", backend="jax",
+          hyperparams={"lag_threshold": None, "target_utilization": 0.75,
+                       "max_consumers": None, "scale_down_patience": 3},
+          paper_section="reactive baseline",
+          summary="KEDA lagThreshold rule: consumers = "
+                  "ceil(total_lag / lag_threshold)")
+def _build_keda_lag(n, capacity, *, lag_threshold=None,
+                    target_utilization=0.75, max_consumers=None,
+                    scale_down_patience=3):
+    return _reactive_policy(
+        "lag", n, capacity, lag_threshold=lag_threshold,
+        target_utilization=target_utilization, max_consumers=max_consumers,
+        scale_down_patience=scale_down_patience)
+
+
+@register("RATE_THRESHOLD", family="reactive", backend="jax",
+          hyperparams={"lag_threshold": None, "target_utilization": 0.75,
+                       "max_consumers": None, "scale_down_patience": 3},
+          paper_section="reactive baseline",
+          summary="consumption-rate target: consumers = "
+                  "ceil(total_rate / (target_utilization * C))")
+def _build_rate_threshold(n, capacity, *, lag_threshold=None,
+                          target_utilization=0.75, max_consumers=None,
+                          scale_down_patience=3):
+    return _reactive_policy(
+        "rate", n, capacity, lag_threshold=lag_threshold,
+        target_utilization=target_utilization, max_consumers=max_consumers,
+        scale_down_patience=scale_down_patience)
+
+
+# ---------------------------------------------------------------------------
+# global optimizers (family "optimizer", jax backend)
+# ---------------------------------------------------------------------------
+
+def _anneal_policy(capacity, *, lam, chains, steps):
+    """Best-of-chains simulated-annealing repack once per decision step.
+    The PRNG key rides in the policy state (split every step), so
+    trajectories are deterministic per stream and the whole sweep stays
+    scan-safe."""
+    from repro.opt.anneal import anneal_assign
+
+    def init(n_partitions: int):
+        # per-policy deterministic key; split every step so consecutive
+        # decisions explore independently while staying scan-safe
+        return jax.random.key(0x0A11EA1)
+
+    def step(speeds, lag, prev_assign, key):
+        key, sub = jax.random.split(key)
+        assign, n_bins = anneal_assign(speeds, prev_assign, capacity, sub,
+                                       lam=lam, chains=chains, steps=steps)
+        return assign, n_bins, key
+
+    return init, step
+
+
+@register("ANNEAL", family="optimizer", backend="jax",
+          hyperparams={"lam": 0.0, "chains": ANNEAL_CHAINS,
+                       "steps": ANNEAL_STEPS},
+          paper_section="2024 follow-up",
+          summary="batched SA minimizing consumer count alone "
+                  "(rebalance-oblivious upper baseline)")
+def _build_anneal(n, capacity, *, lam=0.0, chains=ANNEAL_CHAINS,
+                  steps=ANNEAL_STEPS):
+    return _anneal_policy(capacity, lam=lam, chains=chains, steps=steps)
+
+
+@register("ANNEAL_STICKY", family="optimizer", backend="jax",
+          hyperparams={"lam": ANNEAL_STICKY_LAMBDA, "chains": ANNEAL_CHAINS,
+                       "steps": ANNEAL_STEPS},
+          paper_section="2024 follow-up",
+          summary="batched SA over bins + lambda*Rscore "
+                  "(stability-priced optimizer)")
+def _build_anneal_sticky(n, capacity, *, lam=ANNEAL_STICKY_LAMBDA,
+                         chains=ANNEAL_CHAINS, steps=ANNEAL_STEPS):
+    return _anneal_policy(capacity, lam=lam, chains=chains, steps=steps)

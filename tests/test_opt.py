@@ -251,10 +251,11 @@ def test_anneal_frontier_contains_oracle_floor():
 # closed-loop policies
 # ---------------------------------------------------------------------------
 def test_policy_catalogue_includes_optimizers():
-    from repro.lagsim import ALL_POLICY_NAMES, OPTIMIZER_POLICY_NAMES
+    from repro.lagsim import OPTIMIZER_POLICY_NAMES
+    from repro.registry import list_policies
 
     assert set(OPTIMIZER_POLICY_NAMES) == {"ANNEAL", "ANNEAL_STICKY"}
-    assert set(OPTIMIZER_POLICY_NAMES) < set(ALL_POLICY_NAMES)
+    assert set(OPTIMIZER_POLICY_NAMES) < set(list_policies(backend="jax"))
 
 
 def test_anneal_sticky_policy_drains_in_closed_loop():

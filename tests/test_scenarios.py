@@ -11,10 +11,12 @@ import numpy as np
 import pytest
 
 from repro.core.jaxpack import (
-    ALL_ALGORITHM_NAMES,
     evaluate_stream_jax,
     sweep_streams,
 )
+from repro.registry import PACKER_FAMILIES, list_policies
+
+ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 from repro.core.scenarios import (
     SCENARIO_FAMILIES,
     generate_scenario,
@@ -107,7 +109,7 @@ def test_sweep_shapes_and_dtypes():
     assert float(np.asarray(res.rscores)[:, :, 0].sum()) == 0.0
 
 
-@pytest.mark.parametrize("algo", sorted(ALL_ALGORITHM_NAMES))
+@pytest.mark.parametrize("algo", sorted(ALGORITHMS))
 def test_sweep_batch1_bit_identical_to_single_stream(algo):
     batch = _trace_batch(batch=1, iters=30, n=10)
     res = sweep_streams((algo,), batch, 1.0)
