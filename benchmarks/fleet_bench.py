@@ -1,0 +1,189 @@
+"""Fleet-execution benchmark: steady-state throughput per shape bucket,
+plus the sharded-equals-single-device correctness smoke.
+
+A mixed fleet of masked scenarios (always-on families plus the true-mask
+``churn`` / ``topic_lifecycle`` ones) runs through ``repro.fleet`` at
+several padded ``(T, N)`` buckets.  Per bucket the benchmark reports
+*steady-state* fleet throughput in scenarios*steps/s -- first-call
+(compile) time is measured separately, never folded in -- for both verbs
+(packing sweep and the closed-loop lag twin), and writes everything to
+``BENCH_fleet.json`` under the shared ``BenchReport`` envelope together
+with the runner's cache statistics.
+
+``--smoke`` (CI) additionally asserts, exactly:
+
+* an all-active fleet sweep equals the direct ``sweep_streams`` result;
+* a fleet sharded over *all* host devices equals the same fleet pinned
+  to a single device, for both verbs, masks included.  Run it under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to make the
+  check non-trivial on CPU hosts.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py          (fleet_* rows)
+or    PYTHONPATH=src:. python benchmarks/fleet_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.api import BenchReport
+from repro.core.scenarios import generate_masked_scenario
+from repro.fleet import FleetConfig, FleetRunner
+from repro.lagsim import LagSimConfig
+
+from benchmarks.sections import section
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+
+ALGORITHMS = ("BFD", "MBFP")
+POLICIES = ("BFD", "MBFP", "KEDA_LAG")
+FAMILIES = ("bursty", "churn", "topic_lifecycle")
+
+#: benchmarked buckets: (T, N, scenarios per family)
+BUCKETS: Tuple[Tuple[int, int, int], ...] = ((32, 8, 2), (64, 12, 2))
+SMOKE_BUCKETS: Tuple[Tuple[int, int, int], ...] = ((16, 5, 1),)
+
+
+def _fleet_for(t: int, n: int, per_family: int, seed: int
+               ) -> List[Tuple[jax.Array, jax.Array]]:
+    """``per_family`` masked scenarios of every family at shape (t, n)."""
+    out = []
+    for i, fam in enumerate(FAMILIES):
+        speeds, active = generate_masked_scenario(
+            fam, jax.random.key(seed + i), per_family, t, n)
+        out.extend((speeds[b], active[b]) for b in range(per_family))
+    return out
+
+
+def _throughput(fn, scenarios_steps: int, reps: int = 3
+                ) -> Tuple[float, float]:
+    """-> (first_call_us, steady scenarios*steps/s)."""
+    t0 = time.perf_counter()
+    fn()
+    first_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    steady_s = (time.perf_counter() - t0) / reps
+    return first_us, scenarios_steps / steady_s if steady_s > 0 else 0.0
+
+
+def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
+        seed: int = 0) -> Dict:
+    """Per-bucket steady-state fleet throughput -> BENCH_fleet.json."""
+    cfg = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+    runner = FleetRunner(FleetConfig(
+        t_buckets=tuple(sorted({t for t, _, _ in buckets})),
+        n_buckets=tuple(sorted({n for _, n, _ in buckets}))))
+    per_bucket: Dict[str, Dict[str, float]] = {}
+    for t, n, per_family in buckets:
+        scen = _fleet_for(t, n, per_family, seed)
+        steps = len(scen) * t
+        sweep_first, sweep_tp = _throughput(
+            lambda: runner.sweep(ALGORITHMS, scen, 1.0), steps)
+        sim_first, sim_tp = _throughput(
+            lambda: runner.simulate(POLICIES, scen, cfg), steps)
+        per_bucket[f"{t}x{n}"] = {
+            "scenarios": len(scen),
+            "steps_per_scenario": t,
+            "sweep_scenario_steps_per_s": sweep_tp,
+            "sweep_first_call_us": sweep_first,
+            "simulate_scenario_steps_per_s": sim_tp,
+            "simulate_first_call_us": sim_first,
+        }
+    report = BenchReport(
+        kind="fleet",
+        config={
+            "algorithms": list(ALGORITHMS), "policies": list(POLICIES),
+            "families": list(FAMILIES), "seed": seed,
+            "devices": len(jax.devices()),
+            "buckets": [list(b) for b in buckets],
+        },
+        families=per_bucket,
+        extra={"runner_stats": runner.stats()},
+    )
+    return report.write(BENCH_PATH)
+
+
+# ---------------------------------------------------------------------------
+# correctness smoke (CI: sharded == single-device, fleet == direct)
+# ---------------------------------------------------------------------------
+
+def smoke(seed: int = 0) -> None:
+    from repro.core.jaxpack import sweep_streams
+
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(seed)
+    traces = np.asarray(rng.uniform(0, 1, (6, 20, 7)), np.float32)
+    masks = rng.integers(0, 2, traces.shape).astype(bool)
+
+    sharded = FleetRunner(FleetConfig(shard=True))
+    single = FleetRunner(FleetConfig(devices=(jax.devices()[0],)))
+
+    # 1) all-active fleet sweep == direct sweep_streams, exactly
+    res = sharded.sweep(ALGORITHMS, traces, 1.0)
+    direct = sweep_streams(ALGORITHMS, traces, 1.0)
+    bins, rscores, migs = res.stacked()
+    assert np.array_equal(bins, np.asarray(direct.bins))
+    assert rscores.tobytes() == np.asarray(direct.rscores).tobytes()
+    assert np.array_equal(migs, np.asarray(direct.migrations))
+
+    # 2) sharded == single-device for both verbs, masked and unmasked
+    cfg = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+    for active in (None, masks):
+        a = sharded.sweep(ALGORITHMS, traces, 1.0, active=active)
+        b = single.sweep(ALGORITHMS, traces, 1.0, active=active)
+        for i in range(traces.shape[0]):
+            assert np.array_equal(a.bins[i], b.bins[i]), i
+            assert a.rscores[i].tobytes() == b.rscores[i].tobytes(), i
+        c = sharded.simulate(POLICIES, traces, cfg, active=active)
+        d = single.simulate(POLICIES, traces, cfg, active=active)
+        for i in range(traces.shape[0]):
+            assert c.lag_total[i].tobytes() == d.lag_total[i].tobytes(), i
+            assert np.array_equal(c.consumers[i], d.consumers[i]), i
+            assert np.array_equal(c.migrations[i], d.migrations[i]), i
+
+    out = run(buckets=SMOKE_BUCKETS, seed=seed)
+    assert os.path.exists(BENCH_PATH)
+    print(f"fleet smoke OK on {n_dev} device(s): sharded == single-device, "
+          f"fleet == direct; wrote {BENCH_PATH} "
+          f"({sorted(out['families'])} buckets)")
+
+
+@section("fleet", prefixes=("fleet_",), bench_json="BENCH_fleet.json")
+def _rows():
+    out = run()                       # also writes BENCH_fleet.json
+    for bucket, vals in sorted(out["families"].items()):
+        for verb in ("sweep", "simulate"):
+            yield (f"fleet_{verb}_{bucket},"
+                   f"{vals[f'{verb}_first_call_us']:.1f},"
+                   f"{vals[f'{verb}_scenario_steps_per_s']:.1f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert sharded == single-device (+ direct-engine "
+                         "parity) on tiny sizes, then write BENCH_fleet.json")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    out = run()
+    print(f"wrote {BENCH_PATH}")
+    for bucket, vals in sorted(out["families"].items()):
+        print(f"  {bucket}: sweep {vals['sweep_scenario_steps_per_s']:.0f} "
+              f"scen*steps/s, simulate "
+              f"{vals['simulate_scenario_steps_per_s']:.0f} scen*steps/s "
+              f"({vals['scenarios']} scenarios)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
 """Lag-SLO sweep: every packing algorithm + both reactive baselines x all
-six scenario families, through the closed-loop twin (``repro.lagsim``).
+scenario families, through the closed-loop twin (``repro.lagsim``)
+executed on the fleet layer (``repro.api.default_fleet``).
 
 For each family a batch of traces runs under every policy in one vmapped
-XLA program; the per-(policy, stream) SLO metrics (peak lag, violation
-fraction, time-to-drain, consumer-seconds, migrations) are averaged over
-the batch and written to ``BENCH_lagsim.json`` at the repo root -- the
-start of the perf/SLO trajectory the ROADMAP asks for.
+XLA program (compiled once across families via the fleet's bounded
+bucket cache, sharded over available devices); the per-(policy, stream)
+SLO metrics (peak lag, violation fraction, time-to-drain,
+consumer-seconds, migrations) are averaged over the batch and written to
+``BENCH_lagsim.json`` at the repo root -- the start of the perf/SLO
+trajectory the ROADMAP asks for.
 
 The file also records the speed claim behind the subsystem: wall time per
 simulated (stream, step) for the batched twin vs the Python object loop
@@ -24,9 +27,9 @@ from typing import Dict, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.api import BenchReport
+from repro.api import BenchReport, default_fleet
 from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
-from repro.lagsim import LagSimConfig, summarize_sweep, sweep_lag
+from repro.lagsim import LagSimConfig
 from repro.registry import list_policies
 from repro.serving import AutoscaleSimulation
 
@@ -72,12 +75,13 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
 
     per_family: Dict[str, Dict[str, Dict[str, float]]] = {}
     seconds: Dict[str, float] = {}
+    fleet = default_fleet()
     for fam, traces in suite.items():
-        res = jax.block_until_ready(sweep_lag(policies, traces, cfg))  # compile
+        fleet.simulate(policies, traces, cfg)                # compile / warm
         t0 = time.perf_counter()
-        res = jax.block_until_ready(sweep_lag(policies, traces, cfg))
+        res = fleet.simulate(policies, traces, cfg)          # numpy out: synced
         seconds[fam] = time.perf_counter() - t0
-        summary = summarize_sweep(res, cfg)                  # {metric: [P, B]}
+        summary = res.summarize(cfg)                         # {metric: [P, B]}
         per_family[fam] = {
             pol: {metric: float(np.mean(vals[p]))
                   for metric, vals in summary.items()}

@@ -12,12 +12,20 @@ Measures three tiers of the packing hot path:
   ``ops.select_slot_batched``), one launch over a ``(B, N, M)`` grid,
   interpreter mode on CPU (``pallas_select_*`` rows).
 
+Every measurement separates *first-call* time (tracing + XLA compile +
+run; for the python reference just a cold call) from *steady-state* time
+(mean over ``reps`` warm calls): a jitted packer's first call is
+typically thousands of times slower than its steady state, and folding
+it in used to dominate the throughput rows.  The CSV reports steady-state
+microseconds in the ``us_per_call`` column and first-call microseconds
+in the ``derived`` column.
+
 Run:  PYTHONPATH=src:. python benchmarks/run.py      (packer_latency_* rows)
 """
 from __future__ import annotations
 
 import time
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,15 +39,19 @@ from repro.registry import packer_for
 from benchmarks.sections import section
 
 
-def _time(fn, reps=5) -> float:
-    fn()  # warmup / compile
+def _time(fn, reps=5) -> Tuple[float, float]:
+    """-> (first_call_us, steady_us): compile/trace time vs warm mean."""
+    t0 = time.perf_counter()
+    fn()                               # first call: trace + compile + run
+    first = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(reps):
         fn()
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+    return first, (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def run(sizes=(50, 200, 500)) -> Dict[str, float]:
+def run(sizes=(50, 200, 500)) -> Dict[str, Tuple[float, float]]:
+    """-> {row_name: (first_call_us, steady_state_us)}."""
     out = {}
     rng = np.random.default_rng(0)
     for n in sizes:
@@ -68,10 +80,10 @@ def run(sizes=(50, 200, 500)) -> Dict[str, float]:
     batch, iters, n = 8, 50, 20
     traces = generate_scenario("bursty", jax.random.key(0), batch, iters, n)
     for algo in ("BFD", "MBFP"):
-        us = _time(lambda: jax.block_until_ready(
+        first, us = _time(lambda: jax.block_until_ready(
             sweep_streams((algo,), traces, 1.0)), reps=3)
         out[f"sweep_{algo}_b{batch}xt{iters}_us_per_iter"] = (
-            us / (batch * iters))
+            first / (batch * iters), us / (batch * iters))
 
     # Pallas batched fit-select: one launch over the (B, N, M) grid
     b, ninst, m = 8, 512, 64
@@ -89,5 +101,6 @@ def run(sizes=(50, 200, 500)) -> Dict[str, float]:
 
 @section("packer_latency", prefixes=("packer_latency_",))
 def _rows():
-    for name, us in run().items():
-        yield f"packer_latency_{name},{us:.1f},0"
+    # us_per_call = steady state; derived = first call (compile+run)
+    for name, (first_us, steady_us) in run().items():
+        yield f"packer_latency_{name},{steady_us:.1f},{first_us:.1f}"

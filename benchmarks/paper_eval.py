@@ -3,10 +3,11 @@ Score (Eq. 12), average Rscore (Eq. 13) and the Pareto fronts for all 12
 algorithms over the six delta-streams (Eq. 11).
 
 The six streams are stacked into one ``f32[6, N, P]`` batch and evaluated
-through the vmapped sweep driver (``repro.core.jaxpack.sweep_streams``), so
-each algorithm's whole six-delta evaluation is a single XLA program; the
-recorded per-(delta, algorithm) seconds are the batched wall time amortized
-over the six streams.
+through the fleet execution layer (``repro.api.default_fleet`` ->
+``repro.fleet.FleetRunner`` -> the vmapped sweep driver), so each
+algorithm's whole six-delta evaluation is a single XLA program, sharded
+over available devices; the recorded per-(delta, algorithm) seconds are
+the batched wall time amortized over the six streams.
 
 Run:  PYTHONPATH=src:. python benchmarks/run.py      (fig6_/fig8_/fig9_ rows)
 """
@@ -19,7 +20,7 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jaxpack import sweep_streams
+from repro.api import default_fleet
 from repro.core.metrics import cbs_from_bins, pareto_front
 from repro.core.streams import PAPER_DELTAS, generate_stream
 from repro.registry import PACKER_FAMILIES, list_policies
@@ -41,11 +42,13 @@ def sweep(n_partitions: int = N_PARTITIONS, n_measurements: int = 500,
                         seed=seed + i)
         for i, delta in enumerate(PAPER_DELTAS)
     ]), jnp.float32)
+    fleet = default_fleet()
     for algo in ALGORITHMS:
         t0 = time.perf_counter()
-        res = sweep_streams((algo,), batch, CAPACITY)
-        bins = np.asarray(res.bins[0])      # (6, N)
-        rs = np.asarray(res.rscores[0])     # (6, N)
+        res = fleet.sweep((algo,), batch, CAPACITY)
+        bins_all, rs_all, _ = res.stacked()
+        bins = bins_all[0]                  # (6, N)
+        rs = rs_all[0]                      # (6, N)
         per_stream = (time.perf_counter() - t0) / len(PAPER_DELTAS)
         for i, delta in enumerate(PAPER_DELTAS):
             out["seconds"][(delta, algo)] = per_stream

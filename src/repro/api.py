@@ -15,6 +15,14 @@ versioned result dataclasses (``schema_version`` = ``API_VERSION``):
 * ``evaluate``  -- the paper's Figs. 6-9 tables (CBS / avg R-score /
                    Pareto membership) on Eq. 11 streams -> ``EvaluateOutcome``.
 
+``sweep`` and ``simulate`` execute through the fleet layer
+(``repro.fleet``): a shared ``default_fleet()`` runner buckets scenarios
+by padded shape under a bounded compile cache and shards the batch axis
+across available devices; both verbs take an optional ``active``
+bool[B, T, N] partition mask (the variable-N contract) and an optional
+``fleet=`` runner override.  ``FleetRunner`` / ``FleetConfig`` are
+re-exported for callers that manage their own fleet.
+
 Policy discovery re-exports the registry: ``list_policies``,
 ``make_policy``, ``get_spec``, ``packer_for``, ``PolicySpec``, ``Policy``.
 
@@ -50,9 +58,12 @@ __all__ = [
     "API_VERSION",
     "BACKENDS",
     "BenchReport",
+    "default_fleet",
     "evaluate",
     "EvaluateOutcome",
     "FAMILIES",
+    "FleetConfig",
+    "FleetRunner",
     "get_spec",
     "list_policies",
     "make_policy",
@@ -70,6 +81,35 @@ __all__ = [
     "sweep",
     "SweepOutcome",
 ]
+
+#: fleet re-exports resolve lazily (keeps ``import repro.api`` jax-free)
+_FLEET_EXPORTS = ("FleetRunner", "FleetConfig")
+
+
+def __getattr__(name: str):
+    if name in _FLEET_EXPORTS:
+        from repro import fleet as _fleet
+
+        return getattr(_fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+_DEFAULT_FLEET = None
+
+
+def default_fleet():
+    """The module-level ``FleetRunner`` every api verb routes through.
+
+    One shared runner means one bounded compile cache across ``sweep`` /
+    ``simulate`` calls, so repeated bucket shapes hit warm executables.
+    Pass ``fleet=`` to a verb to use a differently-configured runner.
+    """
+    global _DEFAULT_FLEET
+    if _DEFAULT_FLEET is None:
+        from repro.fleet import FleetRunner
+
+        _DEFAULT_FLEET = FleetRunner()
+    return _DEFAULT_FLEET
 
 
 # ---------------------------------------------------------------------------
@@ -224,41 +264,48 @@ def pack(speeds, capacity: float, *, algorithm: str = "BFD",
 
 
 def sweep(traces, capacity: float = 1.0, *,
-          algorithms: Optional[Sequence[str]] = None) -> SweepOutcome:
-    """Every algorithm x a batch of streams ``f32[B, T, N]`` in one
-    vmapped XLA program per algorithm (``jaxpack.sweep_streams``)."""
-    from repro.core.jaxpack import sweep_streams
-
+          algorithms: Optional[Sequence[str]] = None, active=None,
+          fleet=None) -> SweepOutcome:
+    """Every algorithm x a batch of streams ``f32[B, T, N]``, executed
+    through the fleet layer (bucketed compile cache + batch-axis device
+    sharding).  ``active`` (bool[B, T, N], optional) masks partitions
+    that do not exist at a step (they pack to ``-1``)."""
     if algorithms is None:
         algorithms = list_policies(family=PACKER_FAMILIES, backend="jax")
-    res = sweep_streams(tuple(algorithms), traces, capacity)
-    return SweepOutcome(algorithms=res.algorithms,
-                        bins=np.asarray(res.bins),
-                        rscores=np.asarray(res.rscores),
-                        migrations=np.asarray(res.migrations))
+    runner = fleet if fleet is not None else default_fleet()
+    res = runner.sweep(tuple(algorithms), traces, capacity, active=active)
+    bins, rscores, migrations = res.stacked()
+    return SweepOutcome(algorithms=res.algorithms, bins=bins,
+                        rscores=rscores, migrations=migrations)
 
 
 def simulate(traces, *, policies: Optional[Sequence[str]] = None,
-             config=None, **cfg_overrides) -> SimulateOutcome:
+             config=None, active=None, fleet=None,
+             **cfg_overrides) -> SimulateOutcome:
     """Closed-loop lag twin over ``traces`` f32[B, T, N]: backlog, shared
     drain budgets and migration downtime per policy, reduced to SLO
     metrics (violation fraction, peak lag, time-to-drain,
-    consumer-seconds, migrations)."""
+    consumer-seconds, migrations).  Executes through the fleet layer;
+    ``active`` (bool[B, T, N], optional) marks masked partitions as
+    unreadable-and-empty."""
     import dataclasses as _dc
 
-    from repro.lagsim import LagSimConfig, summarize_sweep, sweep_lag
+    from repro.lagsim import LagSimConfig
 
     if policies is None:
         policies = list_policies(backend="jax")
     cfg = config if config is not None else LagSimConfig()
     if cfg_overrides:
         cfg = _dc.replace(cfg, **cfg_overrides)
-    res = sweep_lag(tuple(policies), traces, cfg)
-    metrics = {k: np.asarray(v) for k, v in summarize_sweep(res, cfg).items()}
+    runner = fleet if fleet is not None else default_fleet()
+    res = runner.simulate(tuple(policies), traces, cfg, active=active)
+    st = res.stacked()
+    metrics = {k: np.asarray(v)
+               for k, v in res.summarize(cfg, stacked=st).items()}
     return SimulateOutcome(policies=res.policies, metrics=metrics,
-                           lag_total=np.asarray(res.lag_total),
-                           consumers=np.asarray(res.consumers),
-                           migrations=np.asarray(res.migrations))
+                           lag_total=st["lag_total"],
+                           consumers=st["consumers"],
+                           migrations=st["migrations"])
 
 
 def optimize(speeds, prev=None, capacity: float = 1.0, *,
@@ -336,8 +383,12 @@ def selfcheck() -> None:
     import os
     import re
 
-    mod = globals()
-    missing = [name for name in __all__ if name not in mod]
+    import sys
+
+    mod = sys.modules[__name__]
+    # hasattr, not a globals() lookup: the fleet re-exports resolve through
+    # the module-level __getattr__ to stay lazy
+    missing = [name for name in __all__ if not hasattr(mod, name)]
     assert not missing, f"__all__ exports missing objects: {missing}"
     assert __all__ == sorted(__all__, key=str.lower), (
         "__all__ must stay sorted (case-insensitive) so the documented "

@@ -11,6 +11,12 @@ Conventions
 -----------
 * ``speeds``: f32[n] item sizes.
 * ``prev``:   i32[n] previous bin name per item, ``-1`` = unassigned.
+* ``active``: optional bool[n] partition mask.  An inactive item -- a
+  partition that does not currently exist (topic deleted, not yet
+  created, or fleet padding) -- packs to ``NEG``, contributes no load,
+  claims no bin name and never creates a bin.  ``active=None`` keeps
+  the exact unmasked program, and an all-``True`` mask reproduces the
+  unmasked pack bit-for-bit (tests/test_masking.py).
 * bin *names* are ints in ``[0, 2n+1)``; ``-1`` never names a bin.
 * returns ``PackedJax(bin_of: i32[n], loads: f32[M], names: i32[M], n_bins)``
   where slot ``s < n_bins`` holds ``loads[s]`` and is named ``names[s]``.
@@ -94,6 +100,7 @@ def pack_jax(
     strategy: str = "first",
     decreasing: bool = False,
     sticky: bool = True,
+    active: jax.Array | None = None,
 ) -> PackedJax:
     n = speeds.shape[0]
     m = n + 1
@@ -101,6 +108,8 @@ def pack_jax(
     speeds = speeds.astype(jnp.float32)
     prev = prev.astype(jnp.int32)
     capacity = jnp.float32(capacity)
+    if active is not None:
+        active = active.astype(bool)
 
     if decreasing:
         # stable non-increasing sort: (-speed, original index)
@@ -110,8 +119,12 @@ def pack_jax(
 
     def body(state, j):
         w = speeds[j]
-        state = _place_or_create(state, j, w, prev[j], capacity, strategy, sticky)
-        return state, None
+        new = _place_or_create(state, j, w, prev[j], capacity, strategy, sticky)
+        if active is not None:
+            # an inactive item leaves every piece of packing state untouched
+            new = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(active[j], a, b), new, state)
+        return new, None
 
     init = (
         jnp.zeros(m, jnp.float32),
@@ -136,6 +149,7 @@ def modified_any_fit_jax(
     *,
     fit: str = "best",
     sort_key: str = "cumulative",
+    active: jax.Array | None = None,
 ) -> PackedJax:
     """Algorithm 1 as a single lax.scan over a 2n-entry flattened schedule.
 
@@ -145,6 +159,11 @@ def modified_any_fit_jax(
     their two phases are contiguous, reproducing the per-consumer interleave
     of the pseudocode.  Leftovers are packed by a final decreasing any-fit
     scan with sticky bin naming.
+
+    With an ``active`` mask, an inactive item counts as *absent*: it is
+    treated as neither assigned nor pending (so it enters no phase and
+    never reaches the final any-fit stage), matching the reference
+    semantics of simply dropping the partition from the ``speeds`` map.
     """
     if fit not in ("best", "worst"):
         raise ValueError(fit)
@@ -157,6 +176,11 @@ def modified_any_fit_jax(
     capacity = jnp.float32(capacity)
     pid = jnp.arange(n)
     assigned = prev >= 0
+    pending0 = ~assigned
+    if active is not None:
+        active = active.astype(bool)
+        assigned = assigned & active
+        pending0 = ~assigned & active
     cseg = jnp.where(assigned, prev, s - 1)   # s-1 = dummy for unassigned
 
     # consumer sort keys (non-increasing; tie -> lower consumer id first)
@@ -249,7 +273,7 @@ def modified_any_fit_jax(
         jnp.int32(0),                         # k
         jnp.full(n, NEG, jnp.int32),          # bin_of
         jnp.zeros(n, bool),                   # placed
-        ~assigned,                            # to_u (initially: unassigned items)
+        pending0,                             # to_u (initially: unassigned items)
         jnp.where(assigned, 3 * n, pid).astype(jnp.int32),  # u_order (pid for initial U)
         jnp.zeros(s, bool),                   # fail1 per consumer
         jnp.full(s, NEG, jnp.int32),          # own_slot per consumer
@@ -264,12 +288,12 @@ def modified_any_fit_jax(
 
     def fbody(state, j):
         loads, names, used, k, bin_of = state
-        active = to_u[j]
+        pending = to_u[j]
 
         def do(args):
             return _place_or_create(args, j, speeds[j], prev[j], capacity, fit, True)
 
-        state = lax.cond(active, do, lambda a: a, (loads, names, used, k, bin_of))
+        state = lax.cond(pending, do, lambda a: a, (loads, names, used, k, bin_of))
         return state, None
 
     (loads, names, used, k, bin_of), _ = lax.scan(
@@ -296,36 +320,51 @@ def packer_for(name: str):
     return _registry_packer_for(name, backend="jax")
 
 
-def _stream_scan(stream: jax.Array, capacity, algorithm: str
+def _stream_scan(stream: jax.Array, capacity, algorithm: str,
+                 active: jax.Array | None = None
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Shared scan over an (N, P) stream: the previous iteration's assignment
-    feeds the next, as in the controller loop.  Returns per-iteration
-    (bins i32[N], rscore f32[N], migrations i32[N])."""
+    feeds the next, as in the controller loop.  ``active`` (bool[N, P],
+    optional) masks partitions per iteration: a dead partition packs to
+    ``NEG``, so a *death* costs no migration and a *rebirth* restarts with
+    no sticky memory.  Returns per-iteration (bins i32[N], rscore f32[N],
+    migrations i32[N])."""
     packer = packer_for(algorithm)
     n = stream.shape[1]
     capacity = jnp.float32(capacity)
 
-    def step(prev, speeds):
-        res = packer(speeds, prev, capacity)
-        moved = (prev >= 0) & (res.bin_of != prev)
+    def step(prev, xs):
+        if active is None:
+            speeds = xs
+            res = packer(speeds, prev, capacity)
+        else:
+            speeds, act = xs
+            res = packer(speeds, prev, capacity, active=act)
+        # NEG never counts as a move: a newly-dead partition hands off
+        # nothing (its consumer just stops reading), and res.bin_of >= 0
+        # always holds in the unmasked path
+        moved = (prev >= 0) & (res.bin_of >= 0) & (res.bin_of != prev)
         r = jnp.sum(jnp.where(moved, speeds, 0.0)) / capacity
         migs = jnp.sum(moved.astype(jnp.int32))
         return res.bin_of, (res.n_bins, r, migs)
 
-    _, (bins, rs, migs) = lax.scan(step, jnp.full(n, NEG, jnp.int32),
-                                   stream.astype(jnp.float32))
+    xs = (stream.astype(jnp.float32) if active is None
+          else (stream.astype(jnp.float32), active.astype(bool)))
+    _, (bins, rs, migs) = lax.scan(step, jnp.full(n, NEG, jnp.int32), xs)
     return bins, rs, migs
 
 
 @functools.partial(jax.jit, static_argnames=("algorithm",))
-def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str
+def evaluate_stream_jax(stream: jax.Array, capacity, *, algorithm: str,
+                        active: jax.Array | None = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Run one algorithm over an (N, P) stream.
 
     Returns (bins_per_iter i32[N], rscore_per_iter f32[N]).  The previous
     iteration's assignment feeds the next, as in the controller loop.
+    ``active`` (bool[N, P]) masks partitions per iteration.
     """
-    bins, rs, _ = _stream_scan(stream, capacity, algorithm)
+    bins, rs, _ = _stream_scan(stream, capacity, algorithm, active)
     return bins, rs
 
 
@@ -366,13 +405,23 @@ class SweepResult:
         return self.bins[a], self.rscores[a], self.migrations[a]
 
 
-@functools.partial(jax.jit, static_argnames=("algorithms",))
-def _sweep_streams_jit(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
-                       capacity) -> SweepResult:
-    per_algo = [
-        jax.vmap(lambda s, a=a: _stream_scan(s, capacity, a))(speeds_batch)
-        for a in algorithms
-    ]
+def _sweep_streams_impl(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
+                        capacity, active: jax.Array | None = None
+                        ) -> SweepResult:
+    """Unjitted sweep core, shared by the module-level jit below and the
+    fleet execution layer (``repro.fleet``), which jits it under its own
+    bounded per-bucket cache."""
+    if active is None:
+        per_algo = [
+            jax.vmap(lambda s, a=a: _stream_scan(s, capacity, a))(speeds_batch)
+            for a in algorithms
+        ]
+    else:
+        per_algo = [
+            jax.vmap(lambda s, m, a=a: _stream_scan(s, capacity, a, m))(
+                speeds_batch, active)
+            for a in algorithms
+        ]
     bins = jnp.stack([p[0] for p in per_algo])
     rs = jnp.stack([p[1] for p in per_algo])
     migs = jnp.stack([p[2] for p in per_algo])
@@ -380,12 +429,22 @@ def _sweep_streams_jit(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
                        algorithms=algorithms)
 
 
+@functools.partial(jax.jit, static_argnames=("algorithms",))
+def _sweep_streams_jit(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
+                       capacity, active: jax.Array | None = None
+                       ) -> SweepResult:
+    return _sweep_streams_impl(algorithms, speeds_batch, capacity, active)
+
+
 def sweep_streams(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
-                  capacity) -> SweepResult:
+                  capacity, active: jax.Array | None = None) -> SweepResult:
     """Evaluate ``algorithms`` over a whole batch of streams in one program.
 
     ``speeds_batch``: f32[B, T, N] -- B streams of T measurements over N
     partitions (e.g. from ``scenarios.scenario_suite`` / ``stack_suite``).
+    ``active``: optional bool[B, T, N] partition mask (see
+    ``scenarios.masked_scenario_suite``); inactive partitions pack to
+    ``NEG`` and contribute no bins, load, or R-score.
     Each algorithm's scan is vmapped over the batch axis; with batch size 1
     the result is bit-identical to ``evaluate_stream_jax`` on the single
     stream (enforced by tests/test_scenarios.py).
@@ -394,4 +453,4 @@ def sweep_streams(algorithms: Tuple[str, ...], speeds_batch: jax.Array,
     spellings share one compile-cache entry.
     """
     return _sweep_streams_jit(tuple(a.upper() for a in algorithms),
-                              speeds_batch, capacity)
+                              speeds_batch, capacity, active)

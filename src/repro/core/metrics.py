@@ -36,23 +36,40 @@ def run_stream(
     stream: np.ndarray,
     capacity: float,
     partition_ids: Sequence | None = None,
+    active: np.ndarray | None = None,
 ) -> Dict[str, StreamRun]:
     """Evolve every algorithm independently over a (N, P) stream.
 
     Each algorithm sees its *own* previous assignment when packing iteration
     i (the controller keeps one group per algorithm in the paper's tests).
+
+    ``active`` (bool (N, P), optional) is the partition-existence mask:
+    a dead partition is dropped from the iteration's speed map entirely
+    (the reference packers' native notion of a partition that does not
+    exist), its hand-off is never priced by the R-score, and on rebirth
+    it re-enters with no sticky memory -- the same semantics as the
+    masked array path in ``jaxpack`` (tests/test_masking.py pins the
+    cross-backend agreement).
     """
     n_iter, n_parts = stream.shape
     pids = list(partition_ids) if partition_ids is not None else list(range(n_parts))
     assert len(pids) == n_parts
+    if active is not None:
+        active = np.asarray(active, bool)
+        assert active.shape == stream.shape, (active.shape, stream.shape)
     runs = {name: StreamRun(name) for name in algorithms}
     prev: Dict[str, Dict] = {name: {} for name in algorithms}
     for i in range(n_iter):
-        speeds = {pid: float(stream[i, j]) for j, pid in enumerate(pids)}
+        live = (range(n_parts) if active is None
+                else [j for j in range(n_parts) if active[i, j]])
+        speeds = {pids[j]: float(stream[i, j]) for j in live}
         for name, algo in algorithms.items():
-            res: PackResult = algo(speeds, capacity, prev=prev[name])
+            prev_live = {p: c for p, c in prev[name].items() if p in speeds}
+            res: PackResult = algo(speeds, capacity, prev=prev_live)
             runs[name].bins.append(res.n_bins)
-            runs[name].rscores.append(rscore(prev[name], res.pid_to_bin, speeds, capacity))
+            runs[name].rscores.append(
+                rscore(prev[name], res.pid_to_bin, speeds, capacity,
+                       active=None if active is None else set(speeds)))
             prev[name] = res.pid_to_bin
     return runs
 

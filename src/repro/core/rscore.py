@@ -10,7 +10,7 @@ iterations needed to drain the backlog (paper Sec. IV-A).
 """
 from __future__ import annotations
 
-from typing import Mapping, Set
+from typing import Container, Mapping, Optional, Set
 
 from .assignment import ConsumerId, PartitionId, rebalanced_partitions
 
@@ -22,8 +22,18 @@ def rscore(
     capacity: float,
     *,
     missing: str = "zero",
+    active: Optional[Container[PartitionId]] = None,
 ) -> float:
+    """Eq. 10 between two assignments.
+
+    ``active`` (optional): the set of partitions that currently exist.
+    A partition outside it never counts as rebalanced -- a deleted topic's
+    hand-off stalls nothing (its consumer simply stops reading), matching
+    the masked array contract where dead partitions assign to ``-1``.
+    """
     moved = rebalanced_partitions(prev, new)
+    if active is not None:
+        moved = {p for p in moved if p in active}
     return rscore_of_set(moved, speeds, capacity, missing=missing)
 
 

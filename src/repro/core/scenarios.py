@@ -21,6 +21,21 @@ Families (see docs/paper_map.md for the full catalogue):
                      switch times (topics created/abandoned mid-stream).
 * ``heavy_tail``  -- log-normal per-partition base rates (a few whales, many
                      minnows) with multiplicative noise.
+* ``topic_lifecycle`` -- partitions are *born* and *die* at random times:
+                     before birth and after death a partition does not
+                     exist at all (speed 0 and, through the masked API,
+                     ``active == False``).
+
+Masked scenarios (variable-N fleets): ``generate_masked_scenario`` /
+``masked_scenario_suite`` return ``(speeds f32[B, T, N], active
+bool[B, T, N])`` pairs.  ``churn`` and ``topic_lifecycle`` emit *true*
+masks -- a dead partition is absent, not "near idle" -- while the
+always-on families carry an all-``True`` mask, so one downstream
+contract (``sweep_streams(..., active=...)``, ``sweep_lag(...,
+active=...)``, ``repro.fleet``) covers every family.  The legacy
+unmasked API is unchanged: ``generate_scenario("churn")`` still fakes
+dead topics as near-idle speeds for callers that cannot represent
+absence.
 
 Everything is pure ``jax.random`` -- a fixed key gives a bit-identical
 batch on every call -- and every generator clips speeds to ``>= 0``.
@@ -122,23 +137,51 @@ def bursty(key: jax.Array, batch: int, iters: int, n: int, *,
     return floor + levels.transpose(1, 0, 2)
 
 
-def churn(key: jax.Array, batch: int, iters: int, n: int, *,
-          capacity: float = 1.0, p_flip: float = 0.02, hot: float = 0.5,
-          idle: float = 0.01, noise: float = 0.05) -> jax.Array:
-    """Consumer churn: partitions toggle between a hot rate and near-idle at
-    random flip times (topics created / abandoned mid-stream)."""
+def _churn_state(key: jax.Array, batch: int, iters: int, n: int, *,
+                 capacity: float, p_flip: float, hot: float, noise: float
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared churn machinery: (on bool[B, T, N], level f32[B, 1, N],
+    jitter f32[B, T, N]).  Both the legacy near-idle trace and the true
+    masked variant derive from exactly this state, so the same key gives
+    the same on/off timeline either way."""
     k_state, k_flip, k_hot, k_noise = jax.random.split(key, 4)
     state0 = jax.random.bernoulli(k_state, 0.5, (batch, n))
     flips = jax.random.bernoulli(k_flip, p_flip, (iters, batch, n))
     # parity of the running flip count toggles the initial state
     parity = jnp.cumsum(flips.astype(jnp.int32), axis=0) % 2
-    on = state0[None] ^ (parity == 1)
+    on = (state0[None] ^ (parity == 1)).transpose(1, 0, 2)
     level = jax.random.uniform(k_hot, (batch, 1, n), minval=0.5,
                                maxval=1.5) * hot * capacity
     jitter = 1.0 + jax.random.uniform(k_noise, (batch, iters, n),
                                       minval=-1.0, maxval=1.0) * noise
-    on = on.transpose(1, 0, 2)
+    return on, level, jitter
+
+
+def churn(key: jax.Array, batch: int, iters: int, n: int, *,
+          capacity: float = 1.0, p_flip: float = 0.02, hot: float = 0.5,
+          idle: float = 0.01, noise: float = 0.05) -> jax.Array:
+    """Consumer churn: partitions toggle between a hot rate and near-idle at
+    random flip times (topics created / abandoned mid-stream).
+
+    This is the legacy unmasked degradation: a dead topic is faked as a
+    near-idle speed ``idle * capacity`` because a plain speed array cannot
+    say "absent".  ``churn_masked`` emits the honest form."""
+    on, level, jitter = _churn_state(key, batch, iters, n, capacity=capacity,
+                                     p_flip=p_flip, hot=hot, noise=noise)
     return jnp.maximum(jnp.where(on, level, idle * capacity) * jitter, 0.0)
+
+
+def churn_masked(key: jax.Array, batch: int, iters: int, n: int, *,
+                 capacity: float = 1.0, p_flip: float = 0.02,
+                 hot: float = 0.5, noise: float = 0.05
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """True-mask churn: the same on/off timeline as ``churn`` (same key =>
+    same flips), but an off partition is *absent* -- speed exactly 0 and
+    ``active False`` -- instead of near-idle."""
+    on, level, jitter = _churn_state(key, batch, iters, n, capacity=capacity,
+                                     p_flip=p_flip, hot=hot, noise=noise)
+    speeds = jnp.maximum(jnp.where(on, level * jitter, 0.0), 0.0)
+    return speeds, on
 
 
 def heavy_tail(key: jax.Array, batch: int, iters: int, n: int, *,
@@ -154,7 +197,56 @@ def heavy_tail(key: jax.Array, batch: int, iters: int, n: int, *,
     return base * jnp.exp(wob)
 
 
+def topic_lifecycle_masked(key: jax.Array, batch: int, iters: int, n: int, *,
+                           capacity: float = 1.0, p_alive0: float = 0.5,
+                           min_life_frac: float = 0.15, hot: float = 0.5,
+                           noise: float = 0.1
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Partition births and deaths at random times (true masks).
+
+    Each partition gets one lifetime window ``[birth, death)``: with
+    probability ``p_alive0`` it exists from iteration 0, otherwise it is
+    born at a uniform random step (possibly past the end of the trace --
+    a topic that never appears).  Lifetimes are uniform in
+    ``[min_life_frac, 1] * iters``, so early-born partitions tend to die
+    mid-stream and late births survive to the end.  While alive, a
+    partition produces at a random hot level with walk noise; outside its
+    window it is absent (speed 0, ``active False``).
+    """
+    k_alive0, k_birth, k_life, k_level, k_noise = jax.random.split(key, 5)
+    alive0 = jax.random.bernoulli(k_alive0, p_alive0, (batch, n))
+    birth = jax.random.uniform(k_birth, (batch, n), maxval=float(iters))
+    birth = jnp.where(alive0, 0.0, birth)
+    life = jax.random.uniform(k_life, (batch, n),
+                              minval=min_life_frac * iters,
+                              maxval=float(iters))
+    death = birth + life
+    t = jnp.arange(iters, dtype=jnp.float32)[None, :, None]
+    active = (t >= birth[:, None, :]) & (t < death[:, None, :])
+    level = jax.random.uniform(k_level, (batch, 1, n), minval=0.3,
+                               maxval=1.5) * hot * capacity
+    drift = _walk(k_noise, batch, iters, n, noise * capacity,
+                  jnp.zeros((batch, n)))
+    speeds = jnp.where(active, jnp.maximum(level + drift, 0.0), 0.0)
+    return speeds, active
+
+
+def topic_lifecycle(key: jax.Array, batch: int, iters: int, n: int, *,
+                    capacity: float = 1.0, p_alive0: float = 0.5,
+                    min_life_frac: float = 0.15, hot: float = 0.5,
+                    noise: float = 0.1) -> jax.Array:
+    """Legacy unmasked view of ``topic_lifecycle_masked``: a partition
+    outside its lifetime window shows speed 0 (absence degraded to
+    idleness, like ``churn``'s near-idle fake)."""
+    speeds, _ = topic_lifecycle_masked(
+        key, batch, iters, n, capacity=capacity, p_alive0=p_alive0,
+        min_life_frac=min_life_frac, hot=hot, noise=noise)
+    return speeds
+
+
 ScenarioFn = Callable[..., jax.Array]
+#: masked generators return (speeds f32[B, T, N], active bool[B, T, N])
+MaskedScenarioFn = Callable[..., Tuple[jax.Array, jax.Array]]
 
 SCENARIO_FAMILIES: Dict[str, ScenarioFn] = {
     "random_walk": random_walk,
@@ -163,6 +255,28 @@ SCENARIO_FAMILIES: Dict[str, ScenarioFn] = {
     "bursty": bursty,
     "churn": churn,
     "heavy_tail": heavy_tail,
+    "topic_lifecycle": topic_lifecycle,
+}
+
+
+def _all_active(fn: ScenarioFn) -> MaskedScenarioFn:
+    """Lift an always-on family into the masked contract."""
+    def gen(key, batch, iters, n, **kw):
+        speeds = fn(key, batch, iters, n, **kw)
+        return speeds, jnp.ones(speeds.shape, bool)
+    return gen
+
+
+#: every family under the masked contract; ``churn`` / ``topic_lifecycle``
+#: emit true masks, the always-on families an all-``True`` one
+MASKED_SCENARIO_FAMILIES: Dict[str, MaskedScenarioFn] = {
+    "random_walk": _all_active(random_walk),
+    "diurnal": _all_active(diurnal),
+    "ramp": _all_active(ramp),
+    "bursty": _all_active(bursty),
+    "churn": churn_masked,
+    "heavy_tail": _all_active(heavy_tail),
+    "topic_lifecycle": topic_lifecycle_masked,
 }
 
 
@@ -193,6 +307,25 @@ def generate_scenario(family: str, key: jax.Array, batch: int, iters: int,
     return out.astype(jnp.float32)
 
 
+def generate_masked_scenario(family: str, key: jax.Array, batch: int,
+                             iters: int, n: int, *, capacity: float = 1.0,
+                             **knobs) -> Tuple[jax.Array, jax.Array]:
+    """Generate one family's batch under the masked contract:
+    ``(speeds f32[B, T, N], active bool[B, T, N])``.
+
+    Deterministic under a fixed key like ``generate_scenario``; for the
+    true-mask families (``churn``, ``topic_lifecycle``) the same key
+    yields the same on/off timeline as the legacy unmasked generator.
+    """
+    if family not in MASKED_SCENARIO_FAMILIES:
+        raise ValueError(
+            f"unknown scenario family {family!r}; "
+            f"have {sorted(MASKED_SCENARIO_FAMILIES)}")
+    speeds, active = MASKED_SCENARIO_FAMILIES[family](
+        key, batch, iters, n, capacity=capacity, **knobs)
+    return speeds.astype(jnp.float32), active.astype(bool)
+
+
 def scenario_suite(key: jax.Array, batch: int, iters: int, n: int, *,
                    capacity: float = 1.0,
                    families: Sequence[str] = tuple(SCENARIO_FAMILIES),
@@ -203,9 +336,37 @@ def scenario_suite(key: jax.Array, batch: int, iters: int, n: int, *,
             for f, k in zip(families, keys)}
 
 
+def masked_scenario_suite(key: jax.Array, batch: int, iters: int, n: int, *,
+                          capacity: float = 1.0,
+                          families: Sequence[str] = tuple(
+                              MASKED_SCENARIO_FAMILIES),
+                          ) -> Dict[str, Tuple[jax.Array, jax.Array]]:
+    """Masked twin of ``scenario_suite``: {family: (speeds, active)}.
+
+    Keyed exactly like ``scenario_suite`` (same split per family
+    position), so a family's speeds match between the two suites wherever
+    the legacy generator and the masked one share their randomness.
+    """
+    keys = jax.random.split(key, len(families))
+    return {f: generate_masked_scenario(f, k, batch, iters, n,
+                                        capacity=capacity)
+            for f, k in zip(families, keys)}
+
+
 def stack_suite(suite: Dict[str, jax.Array]
                 ) -> Tuple[Tuple[str, ...], jax.Array]:
     """Flatten a suite into (labels[B_total], f32[B_total, T, N]) for one
     sweep_streams call; labels[i] names trace i's family."""
     labels = tuple(f for f, v in suite.items() for _ in range(v.shape[0]))
     return labels, jnp.concatenate(list(suite.values()), axis=0)
+
+
+def stack_masked_suite(suite: Dict[str, Tuple[jax.Array, jax.Array]]
+                       ) -> Tuple[Tuple[str, ...], jax.Array, jax.Array]:
+    """Flatten a masked suite into (labels[B_total], speeds f32[B_total,
+    T, N], active bool[B_total, T, N]) for one masked sweep call."""
+    labels = tuple(f for f, (v, _) in suite.items()
+                   for _ in range(v.shape[0]))
+    speeds = jnp.concatenate([v for v, _ in suite.values()], axis=0)
+    active = jnp.concatenate([a for _, a in suite.values()], axis=0)
+    return labels, speeds, active

@@ -1,0 +1,22 @@
+"""Fleet execution layer: bucketed, sharded scenario runs.
+
+See ``repro.fleet.runner`` for the design.  Public surface:
+
+* ``FleetRunner``  -- the executor (``sweep`` / ``simulate`` verbs).
+* ``FleetConfig``  -- bucket sizes, compile-cache bound, sharding knobs.
+* ``FleetSweepResult`` / ``FleetLagResult`` -- per-scenario results in
+  input order, sliced back to true shapes.
+"""
+from .runner import (
+    FleetConfig,
+    FleetLagResult,
+    FleetRunner,
+    FleetSweepResult,
+)
+
+__all__ = [
+    "FleetConfig",
+    "FleetLagResult",
+    "FleetRunner",
+    "FleetSweepResult",
+]

@@ -1,0 +1,400 @@
+"""Sharded fleet execution: shape-bucketed, device-parallel scenario runs.
+
+The mask contract (``active: bool[T, N]``, see ``core/jaxpack.py`` and
+``lagsim/engine.py``) makes *padding exact*: a padded partition is just an
+inactive one (packs to ``NEG``, produces no backlog, opens no bin) and a
+padded timestep is sliced off the trailing end of every trajectory.  This
+module turns that into a production execution layer:
+
+* **Bucketing** -- scenarios of heterogeneous shape ``(T_i, N_i)`` are
+  padded up to the next configured bucket ``(T_b, N_b)`` and grouped, so
+  a fleet of thousands of ragged scenarios compiles a handful of XLA
+  programs instead of one per shape.
+* **Bounded jit cache** -- one compiled executable per (verb, policy
+  tuple, bucket, config) key, kept in an LRU of ``max_compile_cache``
+  entries.  Churning shapes can never grow the cache without bound; the
+  eviction/hit/miss counters are exported via ``FleetRunner.stats()``.
+* **Batch sharding** -- the scenario (batch) axis is sharded across
+  devices with ``jax.sharding.NamedSharding`` over a 1-D mesh; every
+  per-scenario scan is independent, so the sharded result equals the
+  single-device result exactly.  Works on CPU hosts via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI smoke
+  asserts the equality) and on real multi-device backends unchanged.
+
+``FleetRunner`` is the single execution path of the repo's drivers:
+``repro.api.sweep`` / ``repro.api.simulate``, the lag-SLO benchmark and
+``benchmarks/paper_eval.py`` all route through it.
+
+Caveat: the stochastic ANNEAL policies draw their Gumbel noise over a
+``(chains, N * M)`` plane, so *padding* N changes the PRNG stream and
+therefore the (still valid) trajectories; padding is bit-exact for every
+deterministic policy (all 12 packers and both reactive baselines), and
+*sharding* is bit-exact for every policy, stochastic or not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.jaxpack import _sweep_streams_impl
+from repro.lagsim.engine import LagSimConfig, _sweep_impl
+from repro.lagsim.metrics import slo_summary
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Static knobs of a ``FleetRunner``.
+
+    ``t_buckets`` / ``n_buckets``: ascending padded sizes; a scenario's
+    ``T`` (``N``) is rounded up to the smallest bucket that holds it, or
+    left exact when it exceeds every bucket (or when the tuple is empty
+    -- the default, which never pads and buckets by exact shape).
+    ``max_compile_cache``: LRU bound on live compiled executables.
+    ``shard``: shard the batch axis across ``devices`` (default: all of
+    ``jax.devices()``); the batch is padded with all-inactive dummy
+    scenarios up to a device multiple, then sliced back.
+    """
+
+    t_buckets: Tuple[int, ...] = ()
+    n_buckets: Tuple[int, ...] = ()
+    max_compile_cache: int = 16
+    shard: bool = True
+    devices: Optional[Tuple[Any, ...]] = None
+
+    def __post_init__(self):
+        if self.max_compile_cache < 1:
+            raise ValueError(
+                f"max_compile_cache must be >= 1, got {self.max_compile_cache}")
+        for name in ("t_buckets", "n_buckets"):
+            b = getattr(self, name)
+            if tuple(sorted(b)) != tuple(b):
+                raise ValueError(f"{name} must be ascending, got {b}")
+
+
+@dataclasses.dataclass
+class FleetSweepResult:
+    """Per-scenario packing traces, in input order (arrays ``[A, T_i]``)."""
+
+    algorithms: Tuple[str, ...]
+    bins: List[np.ndarray]          # i32[A, T_i]
+    rscores: List[np.ndarray]       # f32[A, T_i]
+    migrations: List[np.ndarray]    # i32[A, T_i]
+
+    def stacked(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stack a uniform-``T`` fleet into ``[A, B, T]`` arrays."""
+        return (np.stack(self.bins, axis=1), np.stack(self.rscores, axis=1),
+                np.stack(self.migrations, axis=1))
+
+
+@dataclasses.dataclass
+class FleetLagResult:
+    """Per-scenario closed-loop trajectories, in input order ([P, T_i])."""
+
+    policies: Tuple[str, ...]
+    lag_total: List[np.ndarray]     # f32[P, T_i]
+    lag_max: List[np.ndarray]       # f32[P, T_i]
+    consumers: List[np.ndarray]     # i32[P, T_i]
+    migrations: List[np.ndarray]    # i32[P, T_i]
+    unreadable: List[np.ndarray]    # i32[P, T_i]
+
+    def stacked(self) -> Dict[str, np.ndarray]:
+        """Stack a uniform-``T`` fleet into ``[P, B, T]`` arrays."""
+        return {f.name: np.stack(getattr(self, f.name), axis=1)
+                for f in dataclasses.fields(self) if f.name != "policies"}
+
+    def summarize(self, cfg: LagSimConfig,
+                  stacked: Optional[Dict[str, np.ndarray]] = None
+                  ) -> Dict[str, np.ndarray]:
+        """SLO summary of a uniform-``T`` fleet under ``cfg`` (the single
+        reduction ``lagsim.metrics`` defines; arrays ``[P, B]``).  Pass a
+        precomputed ``stacked()`` dict to avoid re-stacking."""
+        st = self.stacked() if stacked is None else stacked
+        return slo_summary(st["lag_total"], st["consumers"],
+                           st["migrations"],
+                           slo_lag=cfg.slo_lag_or_default, dt=cfg.dt)
+
+
+def _round_up(x: int, buckets: Tuple[int, ...]) -> int:
+    for b in buckets:
+        if b >= x:
+            return b
+    return x
+
+
+class FleetRunner:
+    """Bucketed, sharded executor for scenario fleets.
+
+    One runner owns one bounded compile cache; share it across calls (the
+    benchmarks keep a module-level runner) so repeated bucket shapes hit
+    warm executables.
+    """
+
+    def __init__(self, config: FleetConfig = FleetConfig()):
+        self.config = config
+        self._cache: "OrderedDict[Any, Callable]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._bucket_counts: Dict[Tuple[int, int], int] = {}
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Snapshot: cache behaviour and scenarios executed per bucket."""
+        return {
+            "cache_entries": len(self._cache),
+            "cache_hits": self._hits,
+            "cache_misses": self._misses,
+            "cache_evictions": self._evictions,
+            "buckets": {f"{t}x{n}": c
+                        for (t, n), c in sorted(self._bucket_counts.items())},
+            "devices": len(self._devices()),
+        }
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+    # -- internals ----------------------------------------------------------
+
+    def _devices(self) -> Tuple[Any, ...]:
+        return (self.config.devices if self.config.devices is not None
+                else tuple(jax.devices()))
+
+    def _compiled(self, key: Any, build: Callable[[], Callable]) -> Callable:
+        fn = self._cache.get(key)
+        if fn is not None:
+            self._hits += 1
+            self._cache.move_to_end(key)
+            return fn
+        self._misses += 1
+        fn = build()
+        while len(self._cache) >= self.config.max_compile_cache:
+            self._cache.popitem(last=False)
+            self._evictions += 1
+        self._cache[key] = fn
+        return fn
+
+    def _normalize(self, scenarios, active) -> List[Tuple[jax.Array,
+                                                          Optional[jax.Array]]]:
+        """-> list of (speeds f32[T, N], active bool[T, N] | None)."""
+        if hasattr(scenarios, "ndim") and getattr(scenarios, "ndim") == 3:
+            sp = jnp.asarray(scenarios, jnp.float32)
+            if active is not None:
+                ac = jnp.asarray(active, bool)
+                if ac.shape != sp.shape:
+                    raise ValueError(
+                        f"active mask has shape {ac.shape} but the scenario "
+                        f"batch has shape {sp.shape}")
+                return [(sp[b], ac[b]) for b in range(sp.shape[0])]
+            return [(sp[b], None) for b in range(sp.shape[0])]
+        if active is not None:
+            raise ValueError(
+                "pass per-scenario masks as (speeds, active) pairs when "
+                "scenarios is a sequence")
+        items: List[Tuple[jax.Array, Optional[jax.Array]]] = []
+        for s in scenarios:
+            if isinstance(s, tuple):
+                sp, ac = s
+                sp = jnp.asarray(sp, jnp.float32)
+                ac = None if ac is None else jnp.asarray(ac, bool)
+                if ac is not None and ac.shape != sp.shape:
+                    raise ValueError(
+                        f"scenario mask shape {ac.shape} != speeds shape "
+                        f"{sp.shape}")
+            else:
+                sp, ac = jnp.asarray(s, jnp.float32), None
+            if sp.ndim != 2:
+                raise ValueError(
+                    f"each scenario must be f32[T, N]; got shape {sp.shape}")
+            items.append((sp, ac))
+        return items
+
+    def _group(self, items, extra_key=lambda sp, ac: ()):
+        """Bucket scenarios: {(Tb, Nb, use_mask, *extra): [(idx, sp, ac)]}.
+
+        ``use_mask`` is True as soon as any member needs padding or
+        carries an explicit mask -- then every member gets one (all-True
+        where absent), keeping the whole group under a single jaxpr.
+        """
+        groups: Dict[Any, List[Tuple[int, jax.Array, Optional[jax.Array]]]] = {}
+        metas = []
+        for idx, (sp, ac) in enumerate(items):
+            t, n = sp.shape
+            tb = _round_up(t, self.config.t_buckets)
+            nb = _round_up(n, self.config.n_buckets)
+            metas.append((idx, sp, ac, tb, nb))
+        masked_buckets = {
+            (tb, nb) for (_, sp, ac, tb, nb) in metas
+            if ac is not None or (tb, nb) != sp.shape
+        }
+        for idx, sp, ac, tb, nb in metas:
+            use_mask = (tb, nb) in masked_buckets
+            key = (tb, nb, use_mask) + tuple(extra_key(sp, ac))
+            groups.setdefault(key, []).append((idx, sp, ac))
+            self._bucket_counts[(tb, nb)] = (
+                self._bucket_counts.get((tb, nb), 0) + 1)
+        return groups
+
+    def _pad_and_stack(self, members, tb: int, nb: int, use_mask: bool,
+                       n_dev: int):
+        """-> (speeds [Bp, tb, nb], active [Bp, tb, nb] | None)."""
+        sps, acs = [], []
+        for _, sp, ac in members:
+            t, n = sp.shape
+            pad = ((0, tb - t), (0, nb - n))
+            sps.append(jnp.pad(sp, pad))
+            if use_mask:
+                ac = jnp.ones((t, n), bool) if ac is None else ac
+                acs.append(jnp.pad(ac, pad))        # pads with False
+        n_pad = (-len(sps)) % n_dev
+        for _ in range(n_pad):          # dummy scenarios for the shard grid
+            sps.append(jnp.zeros((tb, nb), jnp.float32))
+            if use_mask:
+                acs.append(jnp.zeros((tb, nb), bool))
+        speeds = jnp.stack(sps)
+        active = jnp.stack(acs) if use_mask else None
+        return speeds, active
+
+    def _uniform_batch(self, scenarios, active, n_dev: int):
+        """Fast-path probe: an already-stacked ``f32[B, T, N]`` batch that
+        needs no bucket padding and no batch padding (B a device multiple)
+        passes straight through, skipping the per-scenario unbatch /
+        re-pad / re-stack round trip of the ragged path -- this is the
+        common case of ``repro.api`` and the benchmark drivers."""
+        if not (hasattr(scenarios, "ndim") and getattr(scenarios, "ndim") == 3):
+            return None
+        b, t, n = scenarios.shape
+        if (_round_up(t, self.config.t_buckets) != t
+                or _round_up(n, self.config.n_buckets) != n
+                or b % n_dev):
+            return None
+        sp = jnp.asarray(scenarios, jnp.float32)
+        ac = None
+        if active is not None:
+            ac = jnp.asarray(active, bool)
+            if ac.shape != sp.shape:
+                raise ValueError(
+                    f"active mask has shape {ac.shape} but the scenario "
+                    f"batch has shape {sp.shape}")
+        self._bucket_counts[(t, n)] = self._bucket_counts.get((t, n), 0) + b
+        return sp, ac
+
+    def _device_put(self, speeds, active):
+        devices = self._devices()
+        if not self.config.shard or len(devices) <= 1:
+            return speeds, active
+        mesh = Mesh(np.asarray(devices), ("batch",))
+        sharding = NamedSharding(mesh, PartitionSpec("batch"))
+        speeds = jax.device_put(speeds, sharding)
+        if active is not None:
+            active = jax.device_put(active, sharding)
+        return speeds, active
+
+    def _n_dev(self) -> int:
+        devices = self._devices()
+        return len(devices) if self.config.shard else 1
+
+    # -- verbs --------------------------------------------------------------
+
+    def _run_sweep(self, algorithms, speeds, act, capacity, tb: int, nb: int):
+        speeds, act = self._device_put(speeds, act)
+        key = ("sweep", algorithms, tb, nb, act is not None, speeds.shape[0])
+        fn = self._compiled(key, lambda: jax.jit(functools.partial(
+            _sweep_streams_impl, algorithms)))
+        res = fn(speeds, capacity, act)
+        return (np.asarray(res.bins), np.asarray(res.rscores),
+                np.asarray(res.migrations))
+
+    def sweep(self, algorithms: Sequence[str], scenarios, capacity: float = 1.0,
+              *, active=None) -> FleetSweepResult:
+        """Run every algorithm over a fleet of scenarios.
+
+        ``scenarios``: f32[B, T, N] (optionally with ``active`` bool
+        [B, T, N]) or a sequence of ``f32[T_i, N_i]`` / ``(speeds,
+        active)`` entries of heterogeneous shape.  Results come back
+        sliced to each scenario's true ``(T_i,)`` length, in input order.
+        """
+        algorithms = tuple(a.upper() for a in algorithms)
+        n_dev = self._n_dev()
+        fast = self._uniform_batch(scenarios, active, n_dev)
+        if fast is not None:
+            speeds, act = fast
+            b, t, n = speeds.shape
+            bins, rs, migs = self._run_sweep(algorithms, speeds, act,
+                                             capacity, t, n)
+            return FleetSweepResult(
+                algorithms=algorithms,
+                bins=[bins[:, i] for i in range(b)],
+                rscores=[rs[:, i] for i in range(b)],
+                migrations=[migs[:, i] for i in range(b)])
+        items = self._normalize(scenarios, active)
+        out_bins: List[Optional[np.ndarray]] = [None] * len(items)
+        out_rs: List[Optional[np.ndarray]] = [None] * len(items)
+        out_migs: List[Optional[np.ndarray]] = [None] * len(items)
+        for (tb, nb, use_mask), members in self._group(items).items():
+            speeds, act = self._pad_and_stack(members, tb, nb, use_mask,
+                                              n_dev)
+            bins, rs, migs = self._run_sweep(algorithms, speeds, act,
+                                             capacity, tb, nb)
+            for slot, (idx, sp, _) in enumerate(members):
+                t = sp.shape[0]
+                out_bins[idx] = bins[:, slot, :t]
+                out_rs[idx] = rs[:, slot, :t]
+                out_migs[idx] = migs[:, slot, :t]
+        return FleetSweepResult(algorithms=algorithms, bins=out_bins,
+                                rscores=out_rs, migrations=out_migs)
+
+    _SIM_FIELDS = ("lag_total", "lag_max", "consumers", "migrations",
+                   "unreadable")
+
+    def _run_sim(self, policies, speeds, act, rcfg, tb: int, nb: int):
+        speeds, act = self._device_put(speeds, act)
+        key = ("simulate", policies, tb, nb, act is not None, rcfg,
+               speeds.shape[0])
+        fn = self._compiled(key, lambda: jax.jit(
+            lambda tr, ac: _sweep_impl(policies, tr, rcfg, ac)))
+        res = fn(speeds, act)
+        return {f: np.asarray(getattr(res, f)) for f in self._SIM_FIELDS}
+
+    def simulate(self, policies: Sequence[str], scenarios,
+                 cfg: LagSimConfig = LagSimConfig(), *,
+                 active=None) -> FleetLagResult:
+        """Closed-loop lag twin over a fleet of scenarios.
+
+        The config is resolved at each scenario's *true* partition count
+        (so e.g. the reactive ``max_consumers`` default clamps at the
+        real N, not the padded bucket), which keeps padded runs exact.
+        """
+        policies = tuple(p.upper() for p in policies)
+        n_dev = self._n_dev()
+        fast = self._uniform_batch(scenarios, active, n_dev)
+        if fast is not None:
+            speeds, act = fast
+            b, t, n = speeds.shape
+            arrays = self._run_sim(policies, speeds, act, cfg.resolve(n),
+                                   t, n)
+            return FleetLagResult(policies=policies, **{
+                f: [arrays[f][:, i] for i in range(b)]
+                for f in self._SIM_FIELDS})
+        items = self._normalize(scenarios, active)
+        outs: Dict[str, List[Optional[np.ndarray]]] = {
+            f: [None] * len(items) for f in self._SIM_FIELDS}
+        groups = self._group(items,
+                             extra_key=lambda sp, ac: (cfg.resolve(sp.shape[1]),))
+        for (tb, nb, use_mask, rcfg), members in groups.items():
+            speeds, act = self._pad_and_stack(members, tb, nb, use_mask,
+                                              n_dev)
+            arrays = self._run_sim(policies, speeds, act, rcfg, tb, nb)
+            for slot, (idx, sp, _) in enumerate(members):
+                t = sp.shape[0]
+                for f in self._SIM_FIELDS:
+                    outs[f][idx] = arrays[f][:, slot, :t]
+        return FleetLagResult(policies=policies, **outs)

@@ -14,6 +14,11 @@ Semantics match ``repro.core.jaxpack._select_slot``: ties break to the
 lowest slot, an item "fits" iff load + w <= capacity and slot < k.
 Returns slot = M (out of range) when nothing fits.
 
+Masking (variable-N fleets): pass ``active`` (i32/bool per instance) and
+inactive instances -- partitions that do not currently exist -- return
+slot = ``NEG`` (-1): they select no bin at all, distinct from "exists but
+nothing fits" (= M).  ``active=None`` keeps the exact unmasked program.
+
 On hosts without a TPU the wrappers fall back to Pallas interpreter mode
 automatically, so the same call sites work in CI and on device.
 """
@@ -32,11 +37,16 @@ from ._compat import default_interpret as _default_interpret
 _BIG = 3.4e38  # python literal: jnp scalars would be captured as consts
 
 DEFAULT_ROW_TILE = 256
+NEG = -1       # "inactive instance": the item does not exist, no slot at all
 
 
-def _select_tile_kernel(loads_ref, w_ref, k_ref, cap_ref, slot_ref, *,
-                        strategy: str, m: int, rows: int):
+def _select_tile_kernel(loads_ref, w_ref, k_ref, cap_ref, *rest, strategy: str,
+                        m: int, rows: int, masked: bool):
     """One (rows, M) tile: row-wise masked argmin/argmax along the M axis."""
+    if masked:
+        active_ref, slot_ref = rest
+    else:
+        (slot_ref,) = rest
     loads = loads_ref[0]                              # (rows, M)
     w = w_ref[0][:, None]                             # (rows, 1)
     k = k_ref[0][:, None]                             # (rows, 1)
@@ -55,20 +65,27 @@ def _select_tile_kernel(loads_ref, w_ref, k_ref, cap_ref, slot_ref, *,
     else:
         raise ValueError(strategy)
     found = jnp.any(fits, axis=1)
-    slot_ref[0] = jnp.where(found, best.astype(jnp.int32), jnp.int32(m))
+    slot = jnp.where(found, best.astype(jnp.int32), jnp.int32(m))
+    if masked:
+        slot = jnp.where(active_ref[0] > 0, slot, jnp.int32(NEG))
+    slot_ref[0] = slot
 
 
-def select_slot_grid(loads, w, k, capacity, *, strategy: str = "best",
+def select_slot_grid(loads, w, k, capacity, *, active=None,
+                     strategy: str = "best",
                      row_tile: int = DEFAULT_ROW_TILE,
                      interpret: bool | None = None):
     """Batched fit-selection over a grid of streams.
 
     loads: (B, N, M) f32 bin loads; w, capacity: (B, N) f32; k: (B, N) i32
-    (bins created).  Returns (B, N) i32 chosen slot per instance (M when
-    nothing fits).  One kernel launch; ``grid = (B, ceil(N / row_tile))``.
+    (bins created); active: optional (B, N) i32/bool -- 0 marks an
+    instance whose item does not exist.  Returns (B, N) i32 chosen slot
+    per instance (M when nothing fits, ``NEG`` when inactive).  One kernel
+    launch; ``grid = (B, ceil(N / row_tile))``.
     """
     if interpret is None:
         interpret = _default_interpret()
+    masked = active is not None
     b, n, m = loads.shape
     rows = min(row_tile, n)
     pad = (-n) % rows
@@ -78,34 +95,44 @@ def select_slot_grid(loads, w, k, capacity, *, strategy: str = "best",
         w = jnp.pad(w, ((0, 0), (0, pad)))
         k = jnp.pad(k, ((0, 0), (0, pad)))
         capacity = jnp.pad(capacity, ((0, 0), (0, pad)))
+        if masked:
+            active = jnp.pad(active.astype(jnp.int32), ((0, 0), (0, pad)))
     n_pad = n + pad
     kernel = functools.partial(_select_tile_kernel, strategy=strategy, m=m,
-                               rows=rows)
+                               rows=rows, masked=masked)
+    row_spec = pl.BlockSpec((1, rows), lambda i, j: (i, j))
+    in_specs = [
+        pl.BlockSpec((1, rows, m), lambda i, j: (i, j, 0)),
+        row_spec, row_spec, row_spec,
+    ]
+    args = [loads.astype(jnp.float32), w.astype(jnp.float32),
+            k.astype(jnp.int32), capacity.astype(jnp.float32)]
+    if masked:
+        in_specs.append(row_spec)
+        args.append(active.astype(jnp.int32))
     out = pl.pallas_call(
         kernel,
         grid=(b, n_pad // rows),
-        in_specs=[
-            pl.BlockSpec((1, rows, m), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
-            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
-            pl.BlockSpec((1, rows), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, rows), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.int32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(loads.astype(jnp.float32), w.astype(jnp.float32),
-      k.astype(jnp.int32), capacity.astype(jnp.float32))
+    )(*args)
     return out[:, :n]
 
 
-def select_slot_batch(loads, w, k, capacity, *, strategy: str = "best",
+def select_slot_batch(loads, w, k, capacity, *, active=None,
+                      strategy: str = "best",
                       interpret: bool | None = None):
-    """loads: (N, M) f32; w, capacity: (N,) f32; k: (N,) i32 (bins created).
+    """loads: (N, M) f32; w, capacity: (N,) f32; k: (N,) i32 (bins created);
+    active: optional (N,) i32/bool instance mask.
 
-    Returns (N,) i32 chosen slot per instance (M = nothing fits).  Thin
-    wrapper over ``select_slot_grid`` with a singleton batch dimension.
+    Returns (N,) i32 chosen slot per instance (M = nothing fits, ``NEG`` =
+    inactive).  Thin wrapper over ``select_slot_grid`` with a singleton
+    batch dimension.
     """
     return select_slot_grid(loads[None], w[None], k[None], capacity[None],
+                            active=None if active is None else active[None],
                             strategy=strategy, interpret=interpret)[0]

@@ -17,6 +17,12 @@ one-hot plane in registers.  Partitions that are unreadable (mid-migration
 downtime, ``readable == 0``) or unassigned (``assign < 0``) keep their
 backlog untouched.
 
+Masking (variable-N fleets): pass ``active`` and partitions with
+``active == 0`` -- topics that do not currently exist -- produce no
+backlog, join no per-bin sum (they drain no budget), and end the step
+with exactly zero lag ("unreadable and empty").  ``active=None`` keeps
+the exact unmasked program, so all-active runs stay bit-identical.
+
 Semantics are pinned to the pure-jnp oracle ``lag_update_reference`` below
 (tests/test_lagsim.py); on hosts without a TPU the wrapper falls back to
 Pallas interpreter mode automatically, like ``binpack_select``.
@@ -35,16 +41,23 @@ from ._compat import default_interpret as _default_interpret
 _TINY = 1e-30   # python literal so it is not captured as a traced const
 
 
-def lag_update_reference(lag, produced, assign, readable, cap, *, m: int):
+def lag_update_reference(lag, produced, assign, readable, cap, *, m: int,
+                         active=None):
     """Pure-jnp oracle over ``(..., N)`` state arrays.
 
     lag, produced: f32[..., N] backlog and this step's production (bytes);
     assign: i32[..., N] bin name per partition (< ``m``; -1 = unassigned);
     readable: bool/i32[..., N] -- 0 while a partition is in migration
     downtime; cap: per-consumer drain budget for the step, a scalar or any
-    shape broadcastable to the per-bin sums f32[..., M].  Returns the
+    shape broadcastable to the per-bin sums f32[..., M]; active: optional
+    bool/i32[..., N] -- 0 marks a partition that does not exist this step
+    (no production, no drain, post-step lag exactly 0).  Returns the
     post-drain backlog f32[..., N].
     """
+    if active is not None:
+        act = active.astype(bool)
+        produced = jnp.where(act, produced, 0.0)
+        readable = readable.astype(bool) & act
     avail = lag + produced
     names = jnp.arange(m, dtype=jnp.int32)
     live = (readable.astype(bool)) & (assign >= 0)
@@ -52,52 +65,70 @@ def lag_update_reference(lag, produced, assign, readable, cap, *, m: int):
     per_bin = jnp.sum(jnp.where(onehot, avail[..., :, None], 0.0), axis=-2)
     ratio = jnp.minimum(1.0, cap / jnp.maximum(per_bin, _TINY))
     frac = jnp.sum(jnp.where(onehot, ratio[..., None, :], 0.0), axis=-1)
-    return jnp.maximum(avail * (1.0 - frac), 0.0)
+    out = jnp.maximum(avail * (1.0 - frac), 0.0)
+    if active is not None:
+        out = jnp.where(act, out, 0.0)
+    return out
 
 
 def _lag_update_kernel(lag_ref, prod_ref, assign_ref, readable_ref, cap_ref,
-                       out_ref, *, n: int, m: int):
+                       *rest, n: int, m: int, masked: bool):
     """One stream: fused produce + one-hot segment drain over (N, M)."""
-    avail = lag_ref[0] + prod_ref[0]                       # (N,)
+    if masked:
+        active_ref, out_ref = rest
+        act = active_ref[0] > 0
+        avail = lag_ref[0] + jnp.where(act, prod_ref[0], 0.0)   # (N,)
+        live = (readable_ref[0] > 0) & act
+    else:
+        (out_ref,) = rest
+        avail = lag_ref[0] + prod_ref[0]                       # (N,)
+        live = readable_ref[0] > 0
     assign = assign_ref[0]
-    live = (readable_ref[0] > 0) & (assign >= 0)
+    live = live & (assign >= 0)
     names = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
     onehot = (assign[:, None] == names) & live[:, None]    # (N, M)
     per_bin = jnp.sum(jnp.where(onehot, avail[:, None], 0.0), axis=0)  # (M,)
     ratio = jnp.minimum(1.0, cap_ref[0] / jnp.maximum(per_bin, _TINY))
     frac = jnp.sum(jnp.where(onehot, ratio[None, :], 0.0), axis=1)     # (N,)
-    out_ref[0] = jnp.maximum(avail * (1.0 - frac), 0.0)
+    out = jnp.maximum(avail * (1.0 - frac), 0.0)
+    if masked:
+        out = jnp.where(act, out, 0.0)
+    out_ref[0] = out
 
 
-def lag_update_batch(lag, produced, assign, readable, cap, *,
+def lag_update_batch(lag, produced, assign, readable, cap, *, active=None,
                      interpret: bool | None = None):
     """Fused lag update over a batch of streams in one kernel launch.
 
     lag, produced: f32[B, N]; assign: i32[B, N] (-1 = unassigned);
     readable: i32[B, N] (0 = migration downtime); cap: f32[B, M] per-bin
-    drain budget for the step.  Returns f32[B, N] post-drain backlog.
+    drain budget for the step; active: optional i32/bool[B, N] partition
+    mask (0 = the partition does not exist: no production, no drain, lag
+    forced to 0).  Returns f32[B, N] post-drain backlog.
     ``grid = (B,)``; each instance holds one stream's (N,) state plus the
     (N, M) one-hot plane in VMEM.
     """
     if interpret is None:
         interpret = _default_interpret()
+    masked = active is not None
     b, n = lag.shape
     m = cap.shape[1]
-    kernel = functools.partial(_lag_update_kernel, n=n, m=m)
+    kernel = functools.partial(_lag_update_kernel, n=n, m=m, masked=masked)
+    n_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    in_specs = [n_spec, n_spec, n_spec, n_spec,
+                pl.BlockSpec((1, m), lambda i: (i, 0))]
+    args = [lag.astype(jnp.float32), produced.astype(jnp.float32),
+            assign.astype(jnp.int32), readable.astype(jnp.int32),
+            cap.astype(jnp.float32)]
+    if masked:
+        in_specs.append(n_spec)
+        args.append(active.astype(jnp.int32))
     return pl.pallas_call(
         kernel,
         grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(lag.astype(jnp.float32), produced.astype(jnp.float32),
-      assign.astype(jnp.int32), readable.astype(jnp.int32),
-      cap.astype(jnp.float32))
+    )(*args)

@@ -22,6 +22,13 @@ masked to ``MOVE_BLOCKED`` (a large finite sentinel); a move is allowed iff
 -- the same oversized-item exception as ``binpack.py`` (an item wider than
 a bin may sit alone in a dedicated overflow bin, nothing ever joins it).
 
+Masking (variable-N fleets): pass ``active`` and every move of an
+inactive item is additionally masked to ``MOVE_BLOCKED`` -- a partition
+that does not exist can never be relocated.  Callers are responsible for
+excluding inactive items from ``counts`` (the annealer does), so bins
+holding only inactive items already read as empty here.  ``active=None``
+keeps the exact unmasked program.
+
 Semantics are pinned to the pure-jnp oracle ``move_delta_reference`` below
 (tests/test_kernels.py); on hosts without a TPU the wrapper falls back to
 Pallas interpreter mode automatically, like ``binpack_select`` and
@@ -44,7 +51,8 @@ from ._compat import default_interpret as _default_interpret
 MOVE_BLOCKED = 1e30
 
 
-def move_delta_reference(loads, counts, assign, speeds, prev, lam, capacity):
+def move_delta_reference(loads, counts, assign, speeds, prev, lam, capacity,
+                         *, active=None):
     """Pure-jnp oracle over ``(..., M)`` bin state and ``(..., N)`` items.
 
     loads:  f32[..., M] current load per bin name slot;
@@ -55,7 +63,9 @@ def move_delta_reference(loads, counts, assign, speeds, prev, lam, capacity):
     prev:   i32[..., N] previous bin name per item, -1 = unassigned
             (the R-score only prices moves of previously-assigned items);
     lam:    f32[...] R-score weight, broadcast over the (N, M) plane;
-    capacity: f32[...] bin size C, broadcast likewise.
+    capacity: f32[...] bin size C, broadcast likewise;
+    active: optional bool/i32[..., N] item mask -- every move of an item
+            with ``active == 0`` is masked to ``MOVE_BLOCKED``.
 
     Returns f32[..., N, M]: ``delta[..., p, b]`` is the cost change of
     relocating item ``p`` to bin ``b``, or ``MOVE_BLOCKED`` when the move
@@ -83,12 +93,19 @@ def move_delta_reference(loads, counts, assign, speeds, prev, lam, capacity):
     allowed = ((assign[..., :, None] != names)
                & ((loads[..., None, :] + w <= cap)
                   | ((counts[..., None, :] == 0) & (w > cap))))
+    if active is not None:
+        allowed = allowed & active.astype(bool)[..., :, None]
     return jnp.where(allowed, d_bins + d_r, MOVE_BLOCKED)
 
 
 def _move_eval_kernel(loads_ref, counts_ref, assign_ref, speeds_ref,
-                      prev_ref, lam_ref, cap_ref, out_ref, *, n: int, m: int):
+                      prev_ref, lam_ref, cap_ref, *rest, n: int, m: int,
+                      masked: bool):
     """One chain: the full (N, M) delta plane in a single VMEM pass."""
+    if masked:
+        active_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
     loads = loads_ref[0]                                  # (M,)
     counts = counts_ref[0]                                # (M,)
     assign = assign_ref[0]                                # (N,)
@@ -108,41 +125,46 @@ def _move_eval_kernel(loads_ref, counts_ref, assign_ref, speeds_ref,
     d_r = (now_moved - was_moved[:, None]) * w * (lam / cap)
     allowed = (~cur) & ((loads[None, :] + w <= cap)
                         | ((counts[None, :] == 0) & (w > cap)))
+    if masked:
+        allowed = allowed & (active_ref[0] > 0)[:, None]
     out_ref[0] = jnp.where(allowed, d_bins + d_r, MOVE_BLOCKED)
 
 
 def move_delta_batch(loads, counts, assign, speeds, prev, lam, cap, *,
-                     interpret: bool | None = None):
+                     active=None, interpret: bool | None = None):
     """Fused move evaluation over a batch of chains in one kernel launch.
 
     loads: f32[K, M]; counts: i32[K, M]; assign: i32[K, N];
-    speeds: f32[K, N]; prev: i32[K, N]; lam, cap: f32[K].
+    speeds: f32[K, N]; prev: i32[K, N]; lam, cap: f32[K]; active:
+    optional i32/bool[K, N] item mask (0 = item does not exist, all of
+    its moves are blocked).
     Returns f32[K, N, M] move deltas (``MOVE_BLOCKED`` where masked).
     ``grid = (K,)``; each program instance owns one chain's bin state and
     its (N, M) delta tile.
     """
     if interpret is None:
         interpret = _default_interpret()
+    masked = active is not None
     k, m = loads.shape
     n = assign.shape[1]
-    kernel = functools.partial(_move_eval_kernel, n=n, m=m)
+    kernel = functools.partial(_move_eval_kernel, n=n, m=m, masked=masked)
+    m_spec = pl.BlockSpec((1, m), lambda i: (i, 0))
+    n_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    in_specs = [m_spec, m_spec, n_spec, n_spec, n_spec, s_spec, s_spec]
+    args = [loads.astype(jnp.float32), counts.astype(jnp.int32),
+            assign.astype(jnp.int32), speeds.astype(jnp.float32),
+            prev.astype(jnp.int32), lam.astype(jnp.float32).reshape(k, 1),
+            cap.astype(jnp.float32).reshape(k, 1)]
+    if masked:
+        in_specs.append(n_spec)
+        args.append(active.astype(jnp.int32))
     return pl.pallas_call(
         kernel,
         grid=(k,),
-        in_specs=[
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((k, n, m), jnp.float32),
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(loads.astype(jnp.float32), counts.astype(jnp.int32),
-      assign.astype(jnp.int32), speeds.astype(jnp.float32),
-      prev.astype(jnp.int32), lam.astype(jnp.float32).reshape(k, 1),
-      cap.astype(jnp.float32).reshape(k, 1))
+    )(*args)

@@ -31,6 +31,8 @@ import dataclasses
 import functools
 from typing import Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -109,9 +111,28 @@ class LagSweepResult:
                         self.migrations[p], self.unreadable[p])
 
 
+def _check_rates_shape(rates, n: int, what: str, array_name: str) -> None:
+    """Satellite fix: a partition-count mismatch used to surface as an
+    opaque broadcast error deep inside ``lax.scan``; fail fast instead,
+    naming both shapes."""
+    got = tuple(getattr(rates, "shape", np.shape(rates)))
+    if got[-1:] != (n,):
+        raise ValueError(
+            f"{array_name} has shape {got}, but rates.shape[-1] gives the "
+            f"policy n = {n} partitions to pack; {what}")
+
+
 def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
-              cfg: LagSimConfig) -> LagTrace:
-    """Unjitted core: ``trace`` f32[T, N] -> LagTrace of f32/i32[T]."""
+              cfg: LagSimConfig, active: Optional[jax.Array] = None
+              ) -> LagTrace:
+    """Unjitted core: ``trace`` f32[T, N] -> LagTrace of f32/i32[T].
+
+    ``active`` (bool[T, N], optional) marks which partitions exist at each
+    step.  A masked partition is *unreadable and empty*: it produces no
+    backlog, is assigned to no consumer (``NEG``), drains no budget, and
+    its recorded lag is exactly zero.  Deaths cost no migration (the
+    consumer just stops reading); rebirths start with no sticky memory.
+    """
     n = trace.shape[1]
     m = 2 * n + 2                       # packer bin-name universe
     cfg = cfg.resolve(n)
@@ -126,69 +147,112 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
         scale_down_patience=cfg.scale_down_patience)
     init, policy_step = pol.init, pol.step
 
-    def drain(lag, produced, assign, readable):
+    def drain(lag, produced, assign, readable, act_t):
         if cfg.use_kernel:
             out = lag_update_batch(
                 lag[None], produced[None], assign[None],
                 readable.astype(jnp.int32)[None],
-                jnp.full((1, m), cap_step, jnp.float32))
+                jnp.full((1, m), cap_step, jnp.float32),
+                active=None if act_t is None else act_t[None])
             return out[0]
         return lag_update_reference(lag, produced, assign, readable,
-                                    cap_step, m=m)
+                                    cap_step, m=m, active=act_t)
 
-    def step(carry, rate_t):
+    def step(carry, xs):
         lag, assign, down, pstate = carry
-        produced = rate_t * jnp.float32(cfg.dt)
+        if active is None:
+            rate_t, act_t = xs, None
+            produced = rate_t * jnp.float32(cfg.dt)
+        else:
+            rate_t, act_t = xs
+            produced = jnp.where(act_t, rate_t * jnp.float32(cfg.dt), 0.0)
         observed = lag + produced       # backlog a lag-reactive scaler sees
-        new_assign, n_active, pstate = policy_step(
-            rate_t, observed, assign, pstate)
-        moved = (assign >= 0) & (new_assign != assign)
+        if active is None:
+            new_assign, n_active, pstate = policy_step(
+                rate_t, observed, assign, pstate)
+        else:
+            new_assign, n_active, pstate = policy_step(
+                rate_t, observed, assign, pstate, act_t)
+        # NEG never counts as a move: a dying partition hands off nothing
+        moved = (assign >= 0) & (new_assign >= 0) & (new_assign != assign)
         down = jnp.where(moved, jnp.int32(cfg.migration_steps),
                          jnp.maximum(down - 1, 0))
         readable = (down == 0) & (new_assign >= 0)
-        new_lag = drain(lag, produced, new_assign, readable)
+        new_lag = drain(lag, produced, new_assign, readable, act_t)
+        unreadable = (down > 0) if act_t is None else ((down > 0) & act_t)
         ys = (jnp.sum(new_lag), jnp.max(new_lag),
               n_active.astype(jnp.int32),
               jnp.sum(moved.astype(jnp.int32)),
-              jnp.sum((down > 0).astype(jnp.int32)))
+              jnp.sum(unreadable.astype(jnp.int32)))
         return (new_lag, new_assign, down, pstate), ys
 
+    xs = (trace.astype(jnp.float32) if active is None
+          else (trace.astype(jnp.float32), active.astype(bool)))
     carry0 = (initial_lag.astype(jnp.float32), jnp.full(n, NEG, jnp.int32),
               jnp.zeros(n, jnp.int32), init(n))
-    _, (tot, mx, cons, migs, unread) = lax.scan(
-        step, carry0, trace.astype(jnp.float32))
+    _, (tot, mx, cons, migs, unread) = lax.scan(step, carry0, xs)
     return LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
                     migrations=migs, unreadable=unread)
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "cfg"))
-def _simulate_jit(trace, initial_lag, policy: str, cfg: LagSimConfig):
-    return _simulate(trace, initial_lag, policy, cfg)
+def _simulate_jit(trace, initial_lag, policy: str, cfg: LagSimConfig,
+                  active=None):
+    return _simulate(trace, initial_lag, policy, cfg, active)
 
 
 def simulate_lag(trace: jax.Array, *, policy: str,
                  cfg: LagSimConfig = LagSimConfig(),
-                 initial_lag: Optional[jax.Array] = None) -> LagTrace:
+                 initial_lag: Optional[jax.Array] = None,
+                 active: Optional[jax.Array] = None) -> LagTrace:
     """Run one policy over one stream ``f32[T, N]`` -> ``LagTrace`` of [T].
 
     ``initial_lag`` (f32[N], default zeros) seeds the per-partition backlog
     -- e.g. to resume from a measured system state or to study spike
-    recovery from a known excursion.
+    recovery from a known excursion.  ``active`` (bool[T, N], optional)
+    masks partitions that do not exist at a step: unreadable and empty
+    (see ``_simulate``).
     """
+    trace = jnp.asarray(trace)
+    if trace.ndim != 2:
+        raise ValueError(
+            f"trace must be f32[T, N] (one stream); got shape {trace.shape}")
+    n = trace.shape[1]
     if initial_lag is None:
-        initial_lag = jnp.zeros(trace.shape[1], jnp.float32)
+        initial_lag = jnp.zeros(n, jnp.float32)
+    else:
+        _check_rates_shape(
+            initial_lag, n, "initial_lag must seed every partition's "
+            f"backlog, shape ({n},)", "initial_lag")
+    if active is not None:
+        active = jnp.asarray(active)
+        if active.shape != trace.shape:
+            raise ValueError(
+                f"active mask has shape {active.shape} but the rates trace "
+                f"has shape {trace.shape}; the mask must name every "
+                f"(step, partition) cell")
     return _simulate_jit(trace, jnp.asarray(initial_lag, jnp.float32),
-                         policy.upper(), cfg)
+                         policy.upper(), cfg, active)
 
 
-@functools.partial(jax.jit, static_argnames=("policies", "cfg"))
-def _sweep_jit(policies: Tuple[str, ...], traces: jax.Array,
-               cfg: LagSimConfig) -> LagSweepResult:
+def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,
+                cfg: LagSimConfig, active: Optional[jax.Array] = None
+                ) -> LagSweepResult:
+    """Unjitted sweep core, shared by the module-level jit below and the
+    fleet execution layer (``repro.fleet``), which jits it under its own
+    bounded per-bucket cache."""
     zero0 = jnp.zeros(traces.shape[2], jnp.float32)
-    per_policy = [
-        jax.vmap(lambda tr, p=p: _simulate(tr, zero0, p, cfg))(traces)
-        for p in policies
-    ]
+    if active is None:
+        per_policy = [
+            jax.vmap(lambda tr, p=p: _simulate(tr, zero0, p, cfg))(traces)
+            for p in policies
+        ]
+    else:
+        per_policy = [
+            jax.vmap(lambda tr, ac, p=p: _simulate(tr, zero0, p, cfg, ac))(
+                traces, active)
+            for p in policies
+        ]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_policy)
     return LagSweepResult(
         lag_total=stacked.lag_total, lag_max=stacked.lag_max,
@@ -196,13 +260,34 @@ def _sweep_jit(policies: Tuple[str, ...], traces: jax.Array,
         unreadable=stacked.unreadable, policies=policies)
 
 
+@functools.partial(jax.jit, static_argnames=("policies", "cfg"))
+def _sweep_jit(policies: Tuple[str, ...], traces: jax.Array,
+               cfg: LagSimConfig, active=None) -> LagSweepResult:
+    return _sweep_impl(policies, traces, cfg, active)
+
+
 def sweep_lag(policies: Tuple[str, ...], traces: jax.Array,
-              cfg: LagSimConfig = LagSimConfig()) -> LagSweepResult:
+              cfg: LagSimConfig = LagSimConfig(),
+              active: Optional[jax.Array] = None) -> LagSweepResult:
     """Closed-loop sweep: every policy over a batch of streams f32[B, T, N].
 
-    Each policy's scan is vmapped over the batch axis; with batch size 1 a
-    row is bit-identical to ``simulate_lag`` on the single stream
-    (tests/test_lagsim.py).  Names are case-normalized before the jit
-    boundary so equivalent spellings share one compile-cache entry.
+    ``active`` (bool[B, T, N], optional) is the per-stream partition
+    existence mask.  Each policy's scan is vmapped over the batch axis;
+    with batch size 1 a row is bit-identical to ``simulate_lag`` on the
+    single stream (tests/test_lagsim.py).  Names are case-normalized
+    before the jit boundary so equivalent spellings share one
+    compile-cache entry.
     """
-    return _sweep_jit(tuple(p.upper() for p in policies), traces, cfg)
+    traces = jnp.asarray(traces)
+    if traces.ndim != 3:
+        raise ValueError(
+            f"traces must be f32[B, T, N]; got shape {traces.shape}")
+    if active is not None:
+        active = jnp.asarray(active)
+        if active.shape != traces.shape:
+            raise ValueError(
+                f"active mask has shape {active.shape} but the rates "
+                f"traces have shape {traces.shape}; the mask must name "
+                f"every (stream, step, partition) cell")
+    return _sweep_jit(tuple(p.upper() for p in policies), traces, cfg,
+                      active)

@@ -45,6 +45,8 @@ from repro.kernels.move_eval import (
     move_delta_reference,
 )
 
+NEG = -1    # masked-out items report this bin name (matches jaxpack.NEG)
+
 
 def name_universe(n: int) -> int:
     """Bin-name universe size, matching ``jaxpack`` (names < 2n+2)."""
@@ -63,18 +65,26 @@ class AnnealResult:
     lam: jax.Array      # f32[K]    the chain's lambda (echoed for sweeps)
 
 
-def assignment_cost(assign, speeds, prev, capacity, lam, *, m: int):
+def assignment_cost(assign, speeds, prev, capacity, lam, *, m: int,
+                    active=None):
     """Exact objective of assignments ``i32[..., N]`` (names in [0, m)).
 
     Returns ``(cost, bins, rscore)`` with shapes ``[...]``: open-bin count
     (bins holding at least one partition, zero-speed partitions included),
     Eq. 10 R-score against ``prev`` (-1 entries never count as moved), and
-    ``bins + lam * rscore``.
+    ``bins + lam * rscore``.  ``active`` (bool[..., N], optional) masks
+    partitions that do not exist: they open no bin and price no move
+    (``assign`` entries of ``-1`` -- the masked convention -- likewise
+    one-hot to nothing).
     """
     onehot = jax.nn.one_hot(assign, m, dtype=jnp.float32)        # (..., N, M)
+    moved = (prev >= 0) & (assign != prev)
+    if active is not None:
+        act = active.astype(bool)
+        onehot = onehot * act[..., :, None]
+        moved = moved & act
     counts = jnp.sum(onehot, axis=-2)
     bins = jnp.sum((counts > 0).astype(jnp.int32), axis=-1)
-    moved = (prev >= 0) & (assign != prev)
     r = jnp.sum(jnp.where(moved, speeds, 0.0), axis=-1) / capacity
     return bins.astype(jnp.float32) + lam * r, bins, r
 
@@ -87,11 +97,15 @@ def _temperature_schedule(steps: int, t0: float, t1: float) -> jax.Array:
 def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
                   lam: jax.Array, key: jax.Array, *, steps: int = 200,
                   t0: float = 1.0, t1: float = 0.02,
-                  use_kernel: bool = False) -> AnnealResult:
+                  use_kernel: bool = False,
+                  active: jax.Array | None = None) -> AnnealResult:
     """Run ``K = lam.shape[0]`` annealing chains over one instance.
 
     speeds: f32[N]; prev: i32[N] (-1 = unassigned); lam: f32[K] per-chain
-    R-score weight; capacity may be a traced scalar.  Scan-safe: pure
+    R-score weight; capacity may be a traced scalar; active: optional
+    bool[N] partition mask -- an inactive item is frozen out of the
+    anneal (no chain may relocate it, it loads no bin and opens no bin)
+    and is reported as ``NEG`` in the best assignment.  Scan-safe: pure
     ``lax`` control flow, so callers may jit/vmap freely (``steps``,
     ``t0``, ``t1``, ``use_kernel`` must be static).
     """
@@ -102,6 +116,18 @@ def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
     prev = prev.astype(jnp.int32)
     lam = lam.astype(jnp.float32)
     cap = jnp.asarray(capacity, jnp.float32)
+    if active is not None:
+        act = active.astype(bool)
+        # an inactive item carries no weight and prices no move; it keeps
+        # its identity-bin seat, but the seat reads as empty (count 0)
+        speeds = jnp.where(act, speeds, 0.0)
+        prev = jnp.where(act, prev, jnp.int32(NEG))
+        item_count0 = act.astype(jnp.int32)
+        active_k = jnp.broadcast_to(act, (k, n))
+    else:
+        act = None
+        item_count0 = jnp.ones(n, jnp.int32)
+        active_k = None
 
     speeds_k = jnp.broadcast_to(speeds, (k, n))
     prev_k = jnp.broadcast_to(prev, (k, n))
@@ -112,9 +138,9 @@ def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
     loads0 = jnp.broadcast_to(
         jnp.concatenate([speeds, jnp.zeros(m - n, jnp.float32)]), (k, m))
     counts0 = jnp.broadcast_to(jnp.concatenate(
-        [jnp.ones(n, jnp.int32), jnp.zeros(m - n, jnp.int32)]), (k, m))
+        [item_count0, jnp.zeros(m - n, jnp.int32)]), (k, m))
     cost0, _, _ = assignment_cost(assign0, speeds_k, prev_k, cap, lam,
-                                  m=m)
+                                  m=m, active=active_k)
 
     nm = n * m
 
@@ -146,10 +172,10 @@ def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
         temp, key_t = xs
         if use_kernel:
             delta = move_delta_batch(loads, counts, assign, speeds_k,
-                                     prev_k, lam, cap_k)
+                                     prev_k, lam, cap_k, active=active_k)
         else:
             delta = move_delta_reference(loads, counts, assign, speeds_k,
-                                         prev_k, lam, cap_k)
+                                         prev_k, lam, cap_k, active=active_k)
         logits = jnp.concatenate(
             [-delta.reshape(k, nm) / temp, jnp.zeros((k, 1), jnp.float32)],
             axis=1)
@@ -164,10 +190,15 @@ def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
     keys = jax.random.split(key, steps)
     carry, _ = lax.scan(body, init, (ts, keys))
     best_assign = carry[5]
+    if act is not None:
+        # inactive items were frozen in their identity seat; report them
+        # as unassigned (one_hot(-1) is all-zeros, so the cost below is
+        # unaffected either way)
+        best_assign = jnp.where(active_k, best_assign, jnp.int32(NEG))
     # the scan tracks cost incrementally (float drift over many deltas);
     # re-derive the best state's exact cost from scratch
     cost, bins, r = assignment_cost(best_assign, speeds_k, prev_k, cap, lam,
-                                    m=m)
+                                    m=m, active=active_k)
     return AnnealResult(assign=best_assign, bins=bins, rscore=r, cost=cost,
                         lam=lam)
 
@@ -175,16 +206,18 @@ def anneal_chains(speeds: jax.Array, prev: jax.Array, capacity,
 def anneal_assign(speeds: jax.Array, prev: jax.Array, capacity,
                   key: jax.Array, *, lam: float = 0.0, chains: int = 8,
                   steps: int = 64, t0: float = 1.0, t1: float = 0.02,
-                  use_kernel: bool = False
+                  use_kernel: bool = False,
+                  active: jax.Array | None = None
                   ) -> Tuple[jax.Array, jax.Array]:
     """Single-lambda convenience: best chain's ``(assign i32[N], bins i32)``.
 
     This is the entry point the ``ANNEAL``/``ANNEAL_STICKY`` closed-loop
-    policies call once per simulated step.
+    policies call once per simulated step.  Inactive items (``active``
+    mask 0) come back as ``NEG``.
     """
     lam_vec = jnp.full((chains,), lam, jnp.float32)
     res = anneal_chains(speeds, prev, capacity, lam_vec, key, steps=steps,
-                        t0=t0, t1=t1, use_kernel=use_kernel)
+                        t0=t0, t1=t1, use_kernel=use_kernel, active=active)
     i = jnp.argmin(res.cost)
     return res.assign[i], res.bins[i]
 
@@ -194,7 +227,8 @@ def anneal_assign(speeds: jax.Array, prev: jax.Array, capacity,
 def anneal_pack(speeds: jax.Array, prev: jax.Array, capacity,
                 lam: jax.Array, key: jax.Array, *, steps: int = 200,
                 t0: float = 1.0, t1: float = 0.02,
-                use_kernel: bool = False) -> AnnealResult:
+                use_kernel: bool = False,
+                active: jax.Array | None = None) -> AnnealResult:
     """Jitted ``anneal_chains`` for standalone (non-nested) callers."""
     return anneal_chains(speeds, prev, capacity, lam, key, steps=steps,
-                         t0=t0, t1=t1, use_kernel=use_kernel)
+                         t0=t0, t1=t1, use_kernel=use_kernel, active=active)

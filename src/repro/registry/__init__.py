@@ -13,13 +13,18 @@ they all register through:
 * ``Policy``       -- the scan-safe protocol every policy satisfies::
 
       init(n) -> state                                (pytree)
-      step(speeds, lag, prev, state)
+      step(speeds, lag, prev, state, active=None)
           -> (assign i32[N], n_consumers i32, state')
 
-  ``jax``-backend policies are pure ``jax.lax`` control flow, so a
-  ``Policy`` can run inside the lag twin's jitted scan; ``py``-backend
-  policies satisfy the same signature on numpy arrays (reference
-  semantics, used by the controller and the parity tests).
+  ``active`` (bool[N], optional) is the partition-existence mask of the
+  variable-N fleet contract: an inactive partition must come back
+  assigned ``-1``, contribute to no consumer's load, and never raise the
+  consumer count; ``active=None`` means all partitions exist and must
+  reproduce the pre-mask behaviour bit-for-bit.  ``jax``-backend
+  policies are pure ``jax.lax`` control flow, so a ``Policy`` can run
+  inside the lag twin's jitted scan; ``py``-backend policies satisfy the
+  same signature on numpy arrays (reference semantics, used by the
+  controller and the parity tests).
 * ``register``     -- decorator that publishes a builder
   ``(n, capacity, **hyperparams) -> (init, step)`` under a spec.
 * ``make_policy``  -- ``name -> Policy`` with hyperparameter overrides.
@@ -70,10 +75,15 @@ class PolicySpec:
 
 
 class Policy(NamedTuple):
-    """A built policy: the scan-safe (init, step) pair plus its spec."""
+    """A built policy: the scan-safe (init, step) pair plus its spec.
+
+    ``step(speeds, lag, prev, state, active=None)`` -- the trailing
+    ``active`` mask is optional (all-active when omitted); builders must
+    accept it even if they ignore partitions' existence.
+    """
 
     init: Callable[[int], Any]
-    step: Callable[[Any, Any, Any, Any], Tuple[Any, Any, Any]]
+    step: Callable[..., Tuple[Any, Any, Any]]
     spec: PolicySpec
 
 
@@ -216,11 +226,13 @@ def make_policy(name: str, n: int, capacity: float = 1.0, *,
 def packer_for(name: str, backend: str = "jax") -> Callable:
     """The raw one-shot packer registered for ``name`` on ``backend``.
 
-    ``jax``: ``fn(speeds f32[n], prev i32[n], capacity) -> PackedJax``,
-    scan-safe.  ``py``: ``fn(speeds, capacity, prev=None, ...) ->
-    PackResult`` on dicts (reference semantics).  Policies outside the
-    packer families (optimizers, reactive scalers) have no one-shot
-    packer and raise ``ValueError``.
+    ``jax``: ``fn(speeds f32[n], prev i32[n], capacity, active=None) ->
+    PackedJax``, scan-safe; ``active`` (bool[n]) masks partitions that do
+    not exist (they pack to ``-1``).  ``py``: ``fn(speeds, capacity,
+    prev=None, ...) -> PackResult`` on dicts (reference semantics; a
+    masked partition is simply absent from the ``speeds`` map).  Policies
+    outside the packer families (optimizers, reactive scalers) have no
+    one-shot packer and raise ``ValueError``.
     """
     _ensure_builtins()
     spec = _REGISTRY.get((name.upper(), backend))

@@ -56,13 +56,14 @@ MODIFIED_SPECS = (
 def _jax_packing_policy(packer, capacity):
     """Scan-safe Policy over a jax one-shot packer: each step repacks the
     current speeds with the previous assignment as ``prev`` (sticky
-    naming), exactly like the controller's REASSIGN state."""
+    naming), exactly like the controller's REASSIGN state.  ``active``
+    masks partitions that do not currently exist (they pack to ``NEG``)."""
 
     def init(n_partitions: int):
         return jnp.int32(0)            # stateless; prev_assign is the memory
 
-    def step(speeds, lag, prev_assign, state):
-        res = packer(speeds, prev_assign, capacity)
+    def step(speeds, lag, prev_assign, state, active=None):
+        res = packer(speeds, prev_assign, capacity, active=active)
         return res.bin_of, res.n_bins, state
 
     return init, step
@@ -70,16 +71,21 @@ def _jax_packing_policy(packer, capacity):
 
 def _py_packing_policy(packer, capacity, **kwargs):
     """Reference-backend Policy: same protocol on numpy arrays, delegating
-    to the dict-based reference packer."""
+    to the dict-based reference packer.  Masked partitions are simply
+    dropped from the speed map -- the reference packers' native notion of
+    a partition that does not exist."""
 
     def init(n_partitions: int):
         return None
 
-    def step(speeds, lag, prev_assign, state):
+    def step(speeds, lag, prev_assign, state, active=None):
         speeds = np.asarray(speeds)
         prev = np.asarray(prev_assign)
-        sp = {j: float(w) for j, w in enumerate(speeds)}
-        prev_map = {j: int(c) for j, c in enumerate(prev) if int(c) >= 0}
+        act = (np.ones(speeds.shape[0], bool) if active is None
+               else np.asarray(active, bool))
+        sp = {j: float(w) for j, w in enumerate(speeds) if act[j]}
+        prev_map = {j: int(c) for j, c in enumerate(prev)
+                    if int(c) >= 0 and act[j]}
         res = packer(sp, float(capacity), prev=prev_map, **kwargs)
         assign = np.full(speeds.shape[0], -1, np.int32)
         for pid, cid in res.pid_to_bin.items():
@@ -98,9 +104,9 @@ def _register_classical(name: str, strategy: str, decreasing: bool) -> None:
     summary = (f"{'offline decreasing ' if decreasing else 'online '}"
                f"{strategy}-fit any-fit heuristic")
 
-    def jax_packer(speeds, prev, capacity):
+    def jax_packer(speeds, prev, capacity, active=None):
         return pack_jax(speeds, prev, capacity, strategy=strategy,
-                        decreasing=decreasing)
+                        decreasing=decreasing, active=active)
 
     # the one-shot py packer IS the reference entry (no re-wrapping: fixes
     # to binpack propagate to every registry consumer)
@@ -119,9 +125,10 @@ def _register_classical(name: str, strategy: str, decreasing: bool) -> None:
               packer=jax_packer, paper_section="II-B", summary=summary)
     def _build_jax(n, capacity, *, strategy=strategy, decreasing=decreasing,
                    sticky=True):
-        def packer(speeds, prev, cap):
+        def packer(speeds, prev, cap, active=None):
             return pack_jax(speeds, prev, cap, strategy=strategy,
-                            decreasing=decreasing, sticky=sticky)
+                            decreasing=decreasing, sticky=sticky,
+                            active=active)
         return _jax_packing_policy(packer, capacity)
 
 
@@ -134,9 +141,9 @@ def _register_modified(name: str, fit: str, sort_key: str) -> None:
     summary = (f"Modified Any Fit: {fit}-fit insert, consumers sorted by "
                f"{sort_key.replace('_', ' ')}")
 
-    def jax_packer(speeds, prev, capacity):
+    def jax_packer(speeds, prev, capacity, active=None):
         return modified_any_fit_jax(speeds, prev, capacity, fit=fit,
-                                    sort_key=sort_key)
+                                    sort_key=sort_key, active=active)
 
     # the one-shot py packer IS the reference entry (no re-wrapping)
     @register(name, family="sticky", backend="py", hyperparams=hyper,
@@ -152,9 +159,9 @@ def _register_modified(name: str, fit: str, sort_key: str) -> None:
     @register(name, family="sticky", backend="jax", hyperparams=hyper,
               packer=jax_packer, paper_section="IV-B/IV-C", summary=summary)
     def _build_jax(n, capacity, *, fit=fit, sort_key=sort_key):
-        def packer(speeds, prev, cap):
+        def packer(speeds, prev, cap, active=None):
             return modified_any_fit_jax(speeds, prev, cap, fit=fit,
-                                        sort_key=sort_key)
+                                        sort_key=sort_key, active=active)
         return _jax_packing_policy(packer, capacity)
 
 
@@ -173,7 +180,10 @@ def _reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
     """KEDA-style reactive scaler: desired consumer count from a lag or
     rate threshold, eager ``partition % n`` assignment (Kafka's eager
     round-robin rebalance), immediate scale-up, patience-gated
-    scale-down."""
+    scale-down.  With an ``active`` mask, dead partitions contribute no
+    lag/rate signal and take no round-robin seat (live partitions are
+    ranked by position among the live set, so an all-active mask
+    reproduces the unmasked ``pid % n`` assignment exactly)."""
     pid = jnp.arange(n, dtype=jnp.int32)
     if max_consumers is None:
         max_consumers = n
@@ -185,8 +195,12 @@ def _reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
     def init(n_partitions: int):
         return (jnp.int32(1), jnp.int32(0))     # (n_current, under_count)
 
-    def step(speeds, lag, prev_assign, state):
+    def step(speeds, lag, prev_assign, state, active=None):
         n_cur, under = state
+        if active is not None:
+            act = active.astype(bool)
+            speeds = jnp.where(act, speeds, 0.0)
+            lag = None if lag is None else jnp.where(act, lag, 0.0)
         if kind == "lag":
             want = jnp.ceil(jnp.sum(lag) / lag_threshold)
         else:
@@ -197,7 +211,11 @@ def _reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
         n_new = jnp.where(want > n_cur, want,
                           jnp.where(go_down, want, n_cur))
         under = jnp.where(go_down, jnp.int32(0), under)
-        assign = pid % n_new
+        if active is None:
+            assign = pid % n_new
+        else:
+            rank = jnp.cumsum(act.astype(jnp.int32)) - 1   # pid among live
+            assign = jnp.where(act, rank % n_new, jnp.int32(-1))
         return assign, n_new, (n_new, under)
 
     return init, step
@@ -241,7 +259,8 @@ def _anneal_policy(capacity, *, lam, chains, steps):
     """Best-of-chains simulated-annealing repack once per decision step.
     The PRNG key rides in the policy state (split every step), so
     trajectories are deterministic per stream and the whole sweep stays
-    scan-safe."""
+    scan-safe.  ``active`` masks items out of the anneal: no chain may
+    move them, they count toward no bin, and they come back as ``NEG``."""
     from repro.opt.anneal import anneal_assign
 
     def init(n_partitions: int):
@@ -249,10 +268,11 @@ def _anneal_policy(capacity, *, lam, chains, steps):
         # decisions explore independently while staying scan-safe
         return jax.random.key(0x0A11EA1)
 
-    def step(speeds, lag, prev_assign, key):
+    def step(speeds, lag, prev_assign, key, active=None):
         key, sub = jax.random.split(key)
         assign, n_bins = anneal_assign(speeds, prev_assign, capacity, sub,
-                                       lam=lam, chains=chains, steps=steps)
+                                       lam=lam, chains=chains, steps=steps,
+                                       active=active)
         return assign, n_bins, key
 
     return init, step

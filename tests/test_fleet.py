@@ -1,0 +1,186 @@
+"""Fleet execution layer tests.
+
+Load-bearing properties (ISSUE acceptance criteria):
+
+* a uniform all-active fleet run equals the direct engines
+  (``sweep_streams`` / ``sweep_lag``) exactly -- the fleet is a pure
+  execution layer, not a different simulator;
+* ragged scenarios padded into shape buckets equal their solo runs --
+  padding-by-masking is exact (deterministic policies);
+* the compile cache is bounded (LRU eviction) and observable;
+* the ``repro.api`` verbs route through the fleet, masks included.
+
+(The multi-device sharded-equality assertion lives in
+``benchmarks/fleet_bench.py --smoke``, which CI runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` -- the device
+count is fixed at process start, so it cannot be a same-process test.)
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.jaxpack import sweep_streams
+from repro.core.scenarios import generate_masked_scenario
+from repro.fleet import FleetConfig, FleetRunner
+from repro.lagsim import LagSimConfig, sweep_lag
+
+CFG = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+
+
+def _traces(b=3, t=12, n=6, seed=0):
+    return jax.random.uniform(jax.random.key(seed), (b, t, n), maxval=0.9)
+
+
+# ---------------------------------------------------------------------------
+# uniform fleets == direct engines
+# ---------------------------------------------------------------------------
+def test_uniform_sweep_equals_direct():
+    tr = _traces()
+    res = FleetRunner().sweep(("BFD", "MBFP"), tr, 1.0)
+    direct = sweep_streams(("BFD", "MBFP"), tr, 1.0)
+    bins, rscores, migs = res.stacked()
+    np.testing.assert_array_equal(bins, np.asarray(direct.bins))
+    assert rscores.tobytes() == np.asarray(direct.rscores).tobytes()
+    np.testing.assert_array_equal(migs, np.asarray(direct.migrations))
+
+
+def test_uniform_simulate_equals_direct():
+    tr = _traces(seed=1)
+    res = FleetRunner().simulate(("BFD", "KEDA_LAG"), tr, CFG)
+    direct = sweep_lag(("BFD", "KEDA_LAG"), tr, CFG)
+    st = res.stacked()
+    assert st["lag_total"].tobytes() == \
+        np.asarray(direct.lag_total).tobytes()
+    np.testing.assert_array_equal(st["consumers"],
+                                  np.asarray(direct.consumers))
+    np.testing.assert_array_equal(st["migrations"],
+                                  np.asarray(direct.migrations))
+
+
+def test_masked_sweep_equals_direct():
+    sp, ac = generate_masked_scenario("topic_lifecycle", jax.random.key(2),
+                                      2, 16, 5)
+    res = FleetRunner().sweep(("BFD",), sp, 1.0, active=ac)
+    direct = sweep_streams(("BFD",), sp, 1.0, ac)
+    bins, rscores, _ = res.stacked()
+    np.testing.assert_array_equal(bins, np.asarray(direct.bins))
+    assert rscores.tobytes() == np.asarray(direct.rscores).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# ragged fleets: bucket padding is exact
+# ---------------------------------------------------------------------------
+def test_ragged_sweep_equals_solo_runs():
+    rng = np.random.default_rng(3)
+    runner = FleetRunner(FleetConfig(t_buckets=(16,), n_buckets=(8,)))
+    shapes = ((10, 5), (16, 8), (7, 3), (12, 8))
+    scen = [jnp.asarray(rng.uniform(0, 1, s), jnp.float32) for s in shapes]
+    res = runner.sweep(("BFD", "MWF"), scen, 1.0)
+    for i, s in enumerate(scen):
+        solo = sweep_streams(("BFD", "MWF"), s[None], 1.0)
+        assert res.bins[i].shape == (2, s.shape[0])
+        np.testing.assert_array_equal(res.bins[i],
+                                      np.asarray(solo.bins)[:, 0, :])
+        np.testing.assert_array_equal(res.rscores[i],
+                                      np.asarray(solo.rscores)[:, 0, :])
+    # every scenario landed in the single 16x8 bucket => one compile
+    stats = runner.stats()
+    assert stats["buckets"] == {"16x8": 4}
+    assert stats["cache_misses"] == 1
+
+
+def test_ragged_simulate_equals_solo_runs():
+    """Padded partitions are dead (inactive) partitions, so the twin's
+    trajectories are unchanged; the config resolves at each scenario's
+    true N (reactive clamps must not widen to the bucket)."""
+    rng = np.random.default_rng(4)
+    runner = FleetRunner(FleetConfig(t_buckets=(20,), n_buckets=(8,)))
+    shapes = ((14, 4), (20, 8), (9, 6))
+    scen = [jnp.asarray(rng.uniform(0, 1.2, s), jnp.float32)
+            for s in shapes]
+    res = runner.simulate(("BFD", "KEDA_LAG"), scen, CFG)
+    for i, s in enumerate(scen):
+        solo = sweep_lag(("BFD", "KEDA_LAG"), s[None], CFG)
+        np.testing.assert_allclose(res.lag_total[i],
+                                   np.asarray(solo.lag_total)[:, 0, :],
+                                   atol=1e-6)
+        np.testing.assert_array_equal(res.consumers[i],
+                                      np.asarray(solo.consumers)[:, 0, :])
+        np.testing.assert_array_equal(res.migrations[i],
+                                      np.asarray(solo.migrations)[:, 0, :])
+
+
+def test_ragged_masked_scenarios_as_pairs():
+    sp1, ac1 = generate_masked_scenario("churn", jax.random.key(5), 1, 12, 4)
+    sp2, ac2 = generate_masked_scenario("topic_lifecycle",
+                                        jax.random.key(6), 1, 18, 7)
+    runner = FleetRunner(FleetConfig(t_buckets=(18,), n_buckets=(8,)))
+    res = runner.sweep(("MBFP",), [(sp1[0], ac1[0]), (sp2[0], ac2[0])], 1.0)
+    for i, (sp, ac) in enumerate(((sp1, ac1), (sp2, ac2))):
+        solo = sweep_streams(("MBFP",), sp, 1.0, ac)
+        np.testing.assert_array_equal(res.bins[i],
+                                      np.asarray(solo.bins)[:, 0, :])
+
+
+# ---------------------------------------------------------------------------
+# bounded compile cache
+# ---------------------------------------------------------------------------
+def test_compile_cache_is_bounded_lru():
+    runner = FleetRunner(FleetConfig(max_compile_cache=2))
+    for t in (8, 9, 10):
+        runner.sweep(("BFD",), _traces(1, t, 4), 1.0)
+    s = runner.stats()
+    assert s["cache_entries"] <= 2
+    assert s["cache_misses"] == 3 and s["cache_evictions"] >= 1
+    # the warm entry still answers correctly after evictions
+    tr = _traces(1, 10, 4)
+    res = runner.sweep(("BFD",), tr, 1.0)
+    direct = sweep_streams(("BFD",), tr, 1.0)
+    np.testing.assert_array_equal(res.stacked()[0], np.asarray(direct.bins))
+    assert runner.stats()["cache_hits"] >= 1
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="max_compile_cache"):
+        FleetConfig(max_compile_cache=0)
+    with pytest.raises(ValueError, match="ascending"):
+        FleetConfig(t_buckets=(32, 16))
+
+
+def test_scenario_shape_validation():
+    runner = FleetRunner()
+    with pytest.raises(ValueError, match="f32\\[T, N\\]"):
+        runner.sweep(("BFD",), [jnp.zeros((4,))], 1.0)
+    with pytest.raises(ValueError, match="active mask has shape"):
+        runner.sweep(("BFD",), _traces(2, 8, 4), 1.0,
+                     active=jnp.ones((2, 8, 3), bool))
+
+
+# ---------------------------------------------------------------------------
+# repro.api routes through the fleet
+# ---------------------------------------------------------------------------
+def test_api_sweep_routes_through_fleet():
+    tr = _traces(seed=7)
+    runner = FleetRunner()
+    out = api.sweep(tr, 1.0, algorithms=("BFD", "MBFP"), fleet=runner)
+    direct = sweep_streams(("BFD", "MBFP"), tr, 1.0)
+    np.testing.assert_array_equal(out.bins, np.asarray(direct.bins))
+    assert runner.stats()["cache_misses"] == 1   # the call used THIS runner
+
+
+def test_api_simulate_accepts_mask():
+    sp, ac = generate_masked_scenario("topic_lifecycle", jax.random.key(8),
+                                      2, 10, 4)
+    out = api.simulate(sp, policies=("BFD",), active=ac)
+    assert out.lag_total.shape == (1, 2, 10)
+    direct = sweep_lag(("BFD",), sp, LagSimConfig(), active=ac)
+    np.testing.assert_allclose(out.lag_total,
+                               np.asarray(direct.lag_total), atol=1e-6)
+
+
+def test_default_fleet_is_shared():
+    assert api.default_fleet() is api.default_fleet()
+    assert isinstance(api.default_fleet(), api.FleetRunner)

@@ -110,6 +110,64 @@ def test_unknown_policy_raises():
         simulate_lag(_constant(4, [0.1]), policy="PID", cfg=CFG)
 
 
+def test_partition_count_mismatch_raises_clear_error():
+    """Satellite fix: a wrong-length initial_lag used to blow up as an
+    opaque broadcast error deep inside the scan; now it is a ValueError
+    naming both shapes up front."""
+    trace = _constant(6, [0.3, 0.4, 0.2])          # n = 3
+    with pytest.raises(ValueError, match=r"initial_lag has shape \(2,\)"):
+        simulate_lag(trace, policy="BFD", cfg=CFG,
+                     initial_lag=jnp.zeros(2, jnp.float32))
+    with pytest.raises(ValueError, match="rates.shape\\[-1\\]"):
+        simulate_lag(trace, policy="BFD", cfg=CFG,
+                     initial_lag=jnp.zeros(5, jnp.float32))
+    with pytest.raises(ValueError, match="active mask has shape"):
+        simulate_lag(trace, policy="BFD", cfg=CFG,
+                     active=jnp.ones((6, 4), bool))
+    with pytest.raises(ValueError, match=r"must be f32\[T, N\]"):
+        simulate_lag(jnp.zeros((4, 3, 2)), policy="BFD", cfg=CFG)
+    with pytest.raises(ValueError, match=r"must be f32\[B, T, N\]"):
+        sweep_lag(("BFD",), jnp.zeros((4, 3)), CFG)
+    with pytest.raises(ValueError, match="active mask has shape"):
+        sweep_lag(("BFD",), jnp.zeros((1, 4, 3)), CFG,
+                  active=jnp.ones((1, 4, 2), bool))
+
+
+# ---------------------------------------------------------------------------
+# masked partitions: unreadable and empty
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ("BFD", "KEDA_LAG"))
+def test_all_active_mask_reproduces_unmasked_trajectories(policy):
+    trace = jax.random.uniform(jax.random.key(3), (16, 5), maxval=0.8)
+    a = simulate_lag(trace, policy=policy, cfg=CFG)
+    b = simulate_lag(trace, policy=policy, cfg=CFG,
+                     active=jnp.ones((16, 5), bool))
+    np.testing.assert_array_equal(np.asarray(a.lag_total),
+                                  np.asarray(b.lag_total))
+    np.testing.assert_array_equal(np.asarray(a.consumers),
+                                  np.asarray(b.consumers))
+    np.testing.assert_array_equal(np.asarray(a.migrations),
+                                  np.asarray(b.migrations))
+
+
+def test_masked_partition_is_unreadable_and_empty():
+    """A partition that dies keeps zero recorded lag while dead -- it
+    produces nothing and its stale backlog is dropped with the topic --
+    and the consumer count shrinks to the live load."""
+    rates = jnp.full((12, 2), 0.9, jnp.float32)
+    active = jnp.stack([jnp.ones(12, bool),
+                        jnp.arange(12) < 6], axis=1)   # p1 dies at t=6
+    r = simulate_lag(rates, policy="BFD", cfg=CFG, active=active)
+    lt = np.asarray(r.lag_total)
+    cons = np.asarray(r.consumers)
+    assert (cons[:6] == 2).all() and (cons[6:] == 1).all()
+    # both partitions fit capacity exactly => no backlog while both live,
+    # and p1's disappearance leaves p0's zero backlog untouched
+    assert (lt == 0.0).all()
+    r2 = simulate_lag(rates, policy="BFD", cfg=CFG)
+    assert (np.asarray(r2.consumers) == 2).all()
+
+
 def test_policy_name_catalogue():
     policy_names = list_policies(backend="jax")
     assert set(REACTIVE_BASELINE_NAMES) == {"KEDA_LAG", "RATE_THRESHOLD"}

@@ -18,9 +18,13 @@ from repro.registry import PACKER_FAMILIES, list_policies
 
 ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 from repro.core.scenarios import (
+    MASKED_SCENARIO_FAMILIES,
     SCENARIO_FAMILIES,
+    generate_masked_scenario,
     generate_scenario,
+    masked_scenario_suite,
     scenario_suite,
+    stack_masked_suite,
     stack_suite,
 )
 
@@ -87,6 +91,71 @@ def test_suite_and_stack():
     assert batch.shape == (6, 8, 4)
     assert labels == ("diurnal", "diurnal", "bursty", "bursty",
                       "churn", "churn")
+
+
+# ---------------------------------------------------------------------------
+# masked scenarios (variable-N fleets)
+# ---------------------------------------------------------------------------
+def test_masked_families_cover_all_families():
+    assert sorted(MASKED_SCENARIO_FAMILIES) == sorted(SCENARIO_FAMILIES)
+
+
+@pytest.mark.parametrize("family", sorted(MASKED_SCENARIO_FAMILIES))
+def test_masked_scenario_contract(family):
+    """(speeds, active) pairs: matching shapes, bool mask, absent => 0."""
+    speeds, active = generate_masked_scenario(family, KEY, batch=2,
+                                              iters=20, n=6)
+    assert speeds.shape == active.shape == (2, 20, 6)
+    assert speeds.dtype == jnp.float32 and active.dtype == jnp.bool_
+    sp, ac = np.asarray(speeds), np.asarray(active)
+    assert (sp[~ac] == 0.0).all(), f"{family}: dead partitions must be silent"
+    # determinism
+    s2, a2 = generate_masked_scenario(family, KEY, batch=2, iters=20, n=6)
+    np.testing.assert_array_equal(sp, np.asarray(s2))
+    np.testing.assert_array_equal(ac, np.asarray(a2))
+
+
+def test_churn_masked_matches_legacy_timeline():
+    """The true-mask churn shares the legacy generator's on/off timeline:
+    wherever the mask is on, the speeds agree; wherever off, the legacy
+    trace shows the near-idle fake and the masked one shows absence."""
+    legacy = np.asarray(generate_scenario("churn", KEY, 2, 30, 5))
+    speeds, active = generate_masked_scenario("churn", KEY, 2, 30, 5)
+    sp, ac = np.asarray(speeds), np.asarray(active)
+    np.testing.assert_allclose(sp[ac], legacy[ac], rtol=1e-6)
+    assert (sp[~ac] == 0.0).all()
+    assert (legacy[~ac] > 0.0).all()          # the legacy near-idle fake
+
+
+def test_topic_lifecycle_has_births_and_deaths():
+    _, active = generate_masked_scenario("topic_lifecycle", KEY, batch=4,
+                                         iters=64, n=8)
+    ac = np.asarray(active)
+    assert ac.any() and (~ac).any()
+    flips = np.diff(ac.astype(int), axis=1)
+    assert (flips == 1).any(), "need births mid-stream"
+    assert (flips == -1).any(), "need deaths mid-stream"
+    # one lifetime window per partition: alive is a single contiguous run
+    assert (np.abs(flips).sum(axis=1) <= 2).all()
+
+
+def test_always_on_families_emit_all_true_masks():
+    for family in ("random_walk", "diurnal", "ramp", "bursty", "heavy_tail"):
+        _, active = generate_masked_scenario(family, KEY, 1, 8, 3)
+        assert bool(np.asarray(active).all()), family
+
+
+def test_masked_suite_and_stack():
+    suite = masked_scenario_suite(KEY, batch=2, iters=8, n=4,
+                                  families=("churn", "topic_lifecycle"))
+    labels, speeds, active = stack_masked_suite(suite)
+    assert speeds.shape == active.shape == (4, 8, 4)
+    assert labels == ("churn", "churn", "topic_lifecycle", "topic_lifecycle")
+
+
+def test_masked_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        generate_masked_scenario("tsunami", KEY, 1, 4, 2)
 
 
 # ---------------------------------------------------------------------------
