@@ -1,0 +1,247 @@
+"""Control-plane friction sweep: the paper's R-score packers vs
+realistically configured reactive scalers, over a delay x cooldown grid.
+
+``repro.lagsim.controlplane`` makes scaler *friction* -- polling cadence,
+metric-pipeline delays, cooldown windows, rebalance warm-up storms -- a
+first-class, scan-safe part of the closed-loop twin.  This benchmark
+quantifies what that friction costs: every policy in ``POLICIES`` runs
+the bursty scenario suite under
+
+* ``zero_friction`` -- an explicit all-defaults :class:`ControlPlaneConfig`
+  (polling every step, no delays, no cooldown, no warm-up), which the
+  equivalence goldens pin to be bit-identical to the bare engine, so
+  these rows match the bursty family in ``BENCH_lagsim.json``; and
+* a ``d{delay}_c{cooldown}`` grid (DELAYS x COOLDOWNS, polling every
+  ``POLLING`` steps, ``WARMUP`` warm-up steps) where ``delay`` sets both
+  the observation and the actuation delay -- the two hops of the
+  KEDA / Cloud Run metric-read -> Admin-API pipeline.
+
+The REAL reactive scalers (``KEDA_LAG_REAL``, ``CLOUD_RUN_CPU_LAG``)
+declare the control-plane knobs as hyperparameters, so the same grid
+overrides reconfigure their self-wrapped control plane in place; the
+R-score packers are engine-wrapped with the identical config.  Per
+(config, policy) the batch-averaged SLO metrics (violation_frac,
+time_to_drain, consumer_seconds, ...) go to ``BENCH_controlplane.json``.
+
+``--smoke`` (CI) runs a reduced grid and asserts, exactly:
+
+* the ``zero_friction`` rows are bit-identical to a bare
+  (``control_plane=None``) run for every non-REAL policy;
+* every metric is finite, with ``violation_frac`` in [0, 1];
+* friction is not free on this pinned workload: no grid cell beats
+  ``zero_friction`` mean violation_frac by more than ``SMOKE_TOL``.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py            (controlplane_* rows)
+or    PYTHONPATH=src:. python benchmarks/controlplane_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.api import BenchReport, ControlPlaneConfig, default_fleet
+from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
+from repro.lagsim import LagSimConfig
+
+from benchmarks.sections import section
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_controlplane.json")
+
+# Workload constants mirror benchmarks/lag_slo.py so the zero-friction
+# rows are directly comparable with BENCH_lagsim's bursty family.
+BATCH = 2
+ITERS = 48
+N_PARTITIONS = 10
+CAPACITY = 1.0
+SEED = 0
+FAMILY = "bursty"
+
+# >= 3 R-score policies vs >= 2 reactive scalers (ISSUE acceptance).
+RSCORE_POLICIES = ("BFD", "MBFP", "MWFP")
+REACTIVE_POLICIES = ("KEDA_LAG_REAL", "CLOUD_RUN_CPU_LAG")
+POLICIES = RSCORE_POLICIES + REACTIVE_POLICIES
+
+# delay x cooldown grid (>= 3x3).  ``delay`` drives observation AND
+# actuation delay; polling/warm-up are held fixed across the grid.
+DELAYS = (0, 1, 3)
+COOLDOWNS = (0, 6, 12)
+POLLING = 2
+WARMUP = 2
+
+REPORT_METRICS = ("violation_frac", "time_to_drain", "consumer_seconds")
+SMOKE_TOL = 1e-6
+
+
+def _traces(seed: int):
+    """The bursty batch, keyed exactly as in benchmarks/lag_slo.py.
+
+    ``scenario_suite`` splits its key by family *position*, so the full
+    family list must be generated for the bursty entry to be the same
+    array BENCH_lagsim ran -- that identity is what makes the
+    zero_friction rows comparable across the two artifacts."""
+    suite = scenario_suite(jax.random.key(seed), BATCH, ITERS, N_PARTITIONS,
+                           capacity=CAPACITY,
+                           families=tuple(SCENARIO_FAMILIES))
+    return suite[FAMILY]
+
+
+def _grid(delays: Sequence[int] = DELAYS,
+          cooldowns: Sequence[int] = COOLDOWNS,
+          ) -> Dict[str, Optional[ControlPlaneConfig]]:
+    """Config label -> ControlPlaneConfig, zero_friction first."""
+    configs: Dict[str, Optional[ControlPlaneConfig]] = {
+        "zero_friction": ControlPlaneConfig(),
+    }
+    for d in delays:
+        for c in cooldowns:
+            configs[f"d{d}_c{c}"] = ControlPlaneConfig(
+                polling_interval=POLLING,
+                observation_delay=d,
+                actuation_delay=d,
+                cooldown_period=c,
+                warmup_steps=WARMUP,
+            )
+    return configs
+
+
+def _sweep(fleet, policies: Tuple[str, ...], traces,
+           cp: Optional[ControlPlaneConfig]) -> Dict[str, Dict[str, float]]:
+    """One fleet run -> {policy: {metric: batch-mean}}."""
+    cfg = LagSimConfig(capacity=CAPACITY, dt=1.0, migration_steps=2,
+                       control_plane=cp)
+    res = fleet.simulate(policies, traces, cfg)
+    summary = res.summarize(cfg)                       # {metric: [P, B]}
+    return {
+        pol: {metric: float(np.mean(vals[p]))
+              for metric, vals in summary.items()}
+        for p, pol in enumerate(policies)
+    }
+
+
+def run(policies: Sequence[str] = POLICIES,
+        delays: Sequence[int] = DELAYS,
+        cooldowns: Sequence[int] = COOLDOWNS,
+        seed: int = SEED,
+        write: bool = True) -> Dict:
+    """Full sweep -> nested result dict (written to BENCH_controlplane.json)."""
+    policies = tuple(p.upper() for p in policies)
+    traces = _traces(seed)
+    fleet = default_fleet()
+
+    configs = _grid(delays, cooldowns)
+    per_config: Dict[str, Dict[str, Dict[str, float]]] = {
+        label: _sweep(fleet, policies, traces, cp)
+        for label, cp in configs.items()
+    }
+
+    report = BenchReport(
+        kind="controlplane",
+        config={
+            "batch": BATCH, "iters": ITERS, "n_partitions": N_PARTITIONS,
+            "capacity": CAPACITY, "seed": seed, "family": FAMILY,
+            "policies": list(policies),
+            "delays": list(delays), "cooldowns": list(cooldowns),
+            "polling_interval": POLLING, "warmup_steps": WARMUP,
+            "grid": {label: (dict(cp.knobs()) if cp is not None else None)
+                     for label, cp in configs.items()},
+        },
+        families=per_config,
+        extra={},
+    )
+    out = report.as_dict()
+    if write:
+        out = report.write(BENCH_PATH)
+    return out
+
+
+@section("controlplane", prefixes=("controlplane_",),
+         bench_json="BENCH_controlplane.json")
+def _rows():
+    out = run()                 # also writes BENCH_controlplane.json
+    for label, per_policy in out["families"].items():
+        for pol, metrics in per_policy.items():
+            for metric in REPORT_METRICS:
+                yield (f"controlplane_{label}_{pol}_{metric},0,"
+                       f"{metrics[metric]:.6f}")
+
+
+# ---------------------------------------------------------------------------
+# correctness smoke (CI: zero-friction == bare, grid sanity)
+# ---------------------------------------------------------------------------
+
+def smoke(seed: int = SEED) -> None:
+    policies = POLICIES
+    traces = _traces(seed)
+    fleet = default_fleet()
+
+    # Reduced grid: corners only, to keep CI wall time bounded.
+    out = run(policies=policies, delays=(0, DELAYS[-1]),
+              cooldowns=(0, COOLDOWNS[-1]), seed=seed, write=False)
+    per_config = out["families"]
+
+    # 1) zero-friction == bare engine, bit-for-bit, for every policy that
+    #    does not carry its own registered control plane.  (The REAL
+    #    scalers legitimately differ: with control_plane=None they keep
+    #    their registered friction defaults; the zero_friction grid cell
+    #    overrides those to the identity.)
+    bare = _sweep(fleet, policies, traces, None)
+    zf = per_config["zero_friction"]
+    for pol in RSCORE_POLICIES:
+        for metric, val in bare[pol].items():
+            assert zf[pol][metric] == val, (pol, metric, zf[pol][metric], val)
+
+    # 2) every reported metric is finite; violation_frac is a fraction.
+    for label, per_policy in per_config.items():
+        for pol, metrics in per_policy.items():
+            for metric, val in metrics.items():
+                assert math.isfinite(val), (label, pol, metric, val)
+            assert 0.0 <= metrics["violation_frac"] <= 1.0, (label, pol)
+
+    # 3) friction is not free on this pinned workload: averaged over the
+    #    policy set, no frictionful cell beats zero_friction on
+    #    violation_frac beyond float tolerance.
+    def mean_viol(per_policy):
+        return float(np.mean([m["violation_frac"]
+                              for m in per_policy.values()]))
+
+    base = mean_viol(zf)
+    for label, per_policy in per_config.items():
+        if label == "zero_friction":
+            continue
+        assert mean_viol(per_policy) >= base - SMOKE_TOL, (
+            label, mean_viol(per_policy), base)
+
+    print(f"controlplane smoke OK: {len(per_config) - 1} grid cells, "
+          f"{len(policies)} policies, zero-friction == bare for "
+          f"{len(RSCORE_POLICIES)} R-score policies "
+          f"(mean violation_frac {base:.4f} at zero friction)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="reduced grid + exact zero-friction/bare "
+                             "equivalence asserts (CI)")
+    args = parser.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    out = run()
+    print(f"wrote {BENCH_PATH}")
+    zf = out["families"]["zero_friction"]
+    worst = out["families"][f"d{DELAYS[-1]}_c{COOLDOWNS[-1]}"]
+    for pol in POLICIES:
+        print(f"{pol:>18s}: violation_frac "
+              f"{zf[pol]['violation_frac']:.3f} (zero friction) -> "
+              f"{worst[pol]['violation_frac']:.3f} "
+              f"(d={DELAYS[-1]}, c={COOLDOWNS[-1]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ where meaningful, else 0; derived = the quantity the paper reports).
   tab6_capacity_*     consumer max-throughput calibration      (Table VI/Fig. 10)
   packer_latency_*    reassignment-decision latency            (Sec. III premise)
   lagsim_*            closed-loop lag SLO sweep + speedup      (Sec. VI-D claim)
+  controlplane_*      scaler friction: delay x cooldown grid   (Sec. V scalers)
   opt_*               optimality gaps + frontier hypervolume   (Sec. II model /
                                                                2024 follow-up)
   fleet_*             bucketed/sharded fleet throughput        (ROADMAP scaling)
@@ -33,6 +34,7 @@ from benchmarks import paper_eval          # noqa: F401  fig6/fig8/fig9
 from benchmarks import capacity_calibration  # noqa: F401  tab6
 from benchmarks import packer_latency      # noqa: F401  packer_latency
 from benchmarks import lag_slo             # noqa: F401  lagsim (BENCH_lagsim.json)
+from benchmarks import controlplane_bench  # noqa: F401  controlplane (BENCH_controlplane.json)
 from benchmarks import optimality_gap      # noqa: F401  opt (BENCH_opt.json)
 from benchmarks import fleet_bench         # noqa: F401  fleet (BENCH_fleet.json)
 from benchmarks import roofline            # noqa: F401  roofline

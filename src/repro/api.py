@@ -58,6 +58,7 @@ __all__ = [
     "API_VERSION",
     "BACKENDS",
     "BenchReport",
+    "ControlPlaneConfig",
     "default_fleet",
     "evaluate",
     "EvaluateOutcome",
@@ -84,6 +85,8 @@ __all__ = [
 
 #: fleet re-exports resolve lazily (keeps ``import repro.api`` jax-free)
 _FLEET_EXPORTS = ("FleetRunner", "FleetConfig")
+#: lagsim re-exports resolve lazily for the same reason
+_LAGSIM_EXPORTS = ("ControlPlaneConfig",)
 
 
 def __getattr__(name: str):
@@ -91,6 +94,10 @@ def __getattr__(name: str):
         from repro import fleet as _fleet
 
         return getattr(_fleet, name)
+    if name in _LAGSIM_EXPORTS:
+        from repro import lagsim as _lagsim
+
+        return getattr(_lagsim, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -280,23 +287,36 @@ def sweep(traces, capacity: float = 1.0, *,
 
 
 def simulate(traces, *, policies: Optional[Sequence[str]] = None,
-             config=None, active=None, fleet=None,
+             config=None, active=None, fleet=None, control_plane=None,
              **cfg_overrides) -> SimulateOutcome:
     """Closed-loop lag twin over ``traces`` f32[B, T, N]: backlog, shared
     drain budgets and migration downtime per policy, reduced to SLO
     metrics (violation fraction, peak lag, time-to-drain,
     consumer-seconds, migrations).  Executes through the fleet layer;
     ``active`` (bool[B, T, N], optional) marks masked partitions as
-    unreadable-and-empty."""
+    unreadable-and-empty.
+
+    ``control_plane`` (a ``ControlPlaneConfig`` or a mapping of its
+    knobs) runs every policy behind an emulated scaler control plane:
+    polling, observation/actuation delay, cooldown, replica clamps, and
+    the scale-event rebalance storm.  Inconsistent knobs raise a named
+    ``ValueError`` before anything compiles."""
     import dataclasses as _dc
 
+    from repro.lagsim import ControlPlaneConfig as _CPC
     from repro.lagsim import LagSimConfig
 
     if policies is None:
         policies = list_policies(backend="jax")
     cfg = config if config is not None else LagSimConfig()
+    if control_plane is not None:
+        if isinstance(control_plane, Mapping):
+            control_plane = _CPC(**control_plane)
+        cfg_overrides["control_plane"] = control_plane
     if cfg_overrides:
         cfg = _dc.replace(cfg, **cfg_overrides)
+    cfg.resolve(traces.shape[-1] if hasattr(traces, "shape")
+                else np.asarray(traces).shape[-1])  # fail fast on bad knobs
     runner = fleet if fleet is not None else default_fleet()
     res = runner.simulate(tuple(policies), traces, cfg, active=active)
     st = res.stacked()

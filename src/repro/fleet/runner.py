@@ -372,6 +372,9 @@ class FleetRunner:
         The config is resolved at each scenario's *true* partition count
         (so e.g. the reactive ``max_consumers`` default clamps at the
         real N, not the padded bucket), which keeps padded runs exact.
+        ``cfg.control_plane`` (scaler friction emulation) rides inside
+        the hashable config, so it participates in bucket/compile-cache
+        keys automatically and bucketing stays behavior-preserving.
         """
         policies = tuple(p.upper() for p in policies)
         n_dev = self._n_dev()

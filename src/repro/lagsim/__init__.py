@@ -7,6 +7,7 @@ algorithms or KEDA-style reactive baselines) and migration downtime, as one
 ``engine.py`` for the step semantics, ``policies.py`` for the policy
 catalogue and ``metrics.py`` for the SLO reductions.
 """
+from .controlplane import ControlPlaneConfig, ControlPlaneState, wrap_policy
 from .engine import (
     LagSimConfig,
     LagSweepResult,
@@ -31,6 +32,8 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
+    "ControlPlaneConfig",
+    "ControlPlaneState",
     "LagSimConfig",
     "LagSweepResult",
     "LagTrace",
@@ -43,4 +46,5 @@ __all__ = [
     "slo_summary",
     "summarize_sweep",
     "sweep_lag",
+    "wrap_policy",
 ]

@@ -1,0 +1,324 @@
+"""Faithful control-plane emulation for the closed-loop lag twin.
+
+The reactive baselines in ``repro.registry`` are *idealized*: they observe
+the current lag instantly, reassign instantly, and never pay hysteresis.
+Real autoscalers do none of that.  KEDA evaluates its triggers every
+``pollingInterval`` seconds, holds scale-downs for ``cooldownPeriod``,
+and clamps to ``[minReplicaCount, maxReplicaCount]``; the Cloud Run
+Kafka scaler adds metric-collection delay and slow actuation; and any
+Kafka consumer-group scale event triggers a rebalance during which the
+touched consumers' partitions are unreadable (the paper's downtime
+model, applied to the *scaler itself*).
+
+``wrap_policy`` turns any registered scan-safe ``Policy`` into one that
+runs behind such a control plane:
+
+* **observation delay** -- the inner policy sees speeds/lag from
+  ``observation_delay`` steps ago (ring buffer; delay 0 is the identity);
+* **polling** -- decisions are only *taken* every ``polling_interval``
+  steps; between polls the last applied assignment is held;
+* **actuation delay** -- an accepted decision applies
+  ``actuation_delay`` steps later (single pending slot, latest accepted
+  decision wins);
+* **cooldown** -- after a decision applies, no new decision is accepted
+  for ``cooldown_period`` steps (KEDA-style hysteresis);
+* **replica clamp** -- the consumer count is floored at
+  ``min_replicas``; assignments that use more than ``max_replicas``
+  consumers are rank-folded onto the first ``max_replicas`` of them;
+* **warm-up storm** -- when an applied decision changes any consumer's
+  partition set, every partition owned by a *touched* consumer becomes
+  unreadable for ``warmup_steps`` steps (the engine reads the
+  ``warming`` countdown off ``ControlPlaneState``).
+
+With the zero-friction config (``polling_interval=1``, zero delays,
+zero cooldown, ``min_replicas=1``, ``max_replicas=None``,
+``warmup_steps=0``) the wrapped policy reproduces the bare policy
+bit-for-bit -- ``tests/test_controlplane.py`` pins this against golden
+fixtures.  Everything here is pure ``jax.numpy``/``lax`` data flow (no
+``cond`` on pytrees, the inner policy state always advances), so the
+wrapper is scan-safe, vmappable, and mask-exact under the variable-N
+fleet contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1
+
+
+def _check_int(name: str, value: Any, what: str = "steps") -> None:
+    if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+        raise ValueError(
+            f"{name}={value!r} must be an integer number of {what}; the "
+            f"control plane is a discrete-step state machine")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlPlaneConfig:
+    """Static control-plane knobs (hashable; rides in ``LagSimConfig``).
+
+    Defaults are the zero-friction identity: poll every step, no delays,
+    no cooldown, no replica clamp, no warm-up.  Inconsistent knob
+    combinations raise a named ``ValueError`` at construction instead of
+    producing silent scan-deep nonsense.
+    """
+
+    polling_interval: int = 1       # KEDA pollingInterval (steps)
+    observation_delay: int = 0      # metric-collection staleness (steps)
+    actuation_delay: int = 0        # decision -> rebalance latency (steps)
+    cooldown_period: int = 0        # KEDA cooldownPeriod (steps)
+    min_replicas: int = 1           # KEDA minReplicaCount
+    max_replicas: Optional[int] = None   # KEDA maxReplicaCount (None: free)
+    warmup_steps: int = 0           # rebalance-storm downtime on scale
+
+    def __post_init__(self) -> None:
+        _check_int("polling_interval", self.polling_interval)
+        _check_int("observation_delay", self.observation_delay)
+        _check_int("actuation_delay", self.actuation_delay)
+        _check_int("cooldown_period", self.cooldown_period)
+        _check_int("warmup_steps", self.warmup_steps)
+        _check_int("min_replicas", self.min_replicas, "replicas")
+        if self.max_replicas is not None:
+            _check_int("max_replicas", self.max_replicas, "replicas")
+        if self.polling_interval < 1:
+            raise ValueError(
+                f"polling_interval={self.polling_interval} must be >= 1: "
+                f"the control plane evaluates its triggers at most once "
+                f"per step, never more")
+        if self.observation_delay < 0:
+            raise ValueError(
+                f"observation_delay={self.observation_delay} must be >= 0: "
+                f"the scaler cannot observe metrics from the future")
+        if self.actuation_delay < 0:
+            raise ValueError(
+                f"actuation_delay={self.actuation_delay} must be >= 0: "
+                f"a decision cannot apply before it is taken")
+        if self.cooldown_period < 0:
+            raise ValueError(
+                f"cooldown_period={self.cooldown_period} must be >= 0 "
+                f"steps; use 0 to disable the cooldown")
+        if 0 < self.cooldown_period < self.polling_interval:
+            raise ValueError(
+                f"cooldown_period={self.cooldown_period} < polling_interval="
+                f"{self.polling_interval}: the cooldown would always expire "
+                f"before the next poll could observe it; use "
+                f"cooldown_period=0 or >= polling_interval")
+        if self.warmup_steps < 0:
+            raise ValueError(
+                f"warmup_steps={self.warmup_steps} must be >= 0: a replica "
+                f"cannot warm up for a negative number of steps")
+        if self.min_replicas < 1:
+            raise ValueError(
+                f"min_replicas={self.min_replicas} must be >= 1: a consumer "
+                f"group needs at least one member to make progress")
+        if (self.max_replicas is not None
+                and self.max_replicas < self.min_replicas):
+            raise ValueError(
+                f"max_replicas={self.max_replicas} < min_replicas="
+                f"{self.min_replicas}: the replica clamp is empty")
+
+    @property
+    def is_zero_friction(self) -> bool:
+        """True when the wrapper is the bit-for-bit identity."""
+        return (self.polling_interval == 1 and self.observation_delay == 0
+                and self.actuation_delay == 0 and self.cooldown_period == 0
+                and self.min_replicas == 1 and self.max_replicas is None
+                and self.warmup_steps == 0)
+
+    def knobs(self) -> dict:
+        """The hyperparameter dict a registered REAL policy family takes
+        (the lag twin passes these as ``strict=False`` overrides, so one
+        grid knob configures self-wrapped and engine-wrapped policies
+        alike)."""
+        return dict(
+            polling_interval=self.polling_interval,
+            observation_delay=self.observation_delay,
+            actuation_delay=self.actuation_delay,
+            cooldown_period=self.cooldown_period,
+            min_replicas=self.min_replicas,
+            max_replicas=self.max_replicas,
+            warmup_steps=self.warmup_steps)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ControlPlaneState:
+    """Scan-carried state of a control-plane-wrapped policy.
+
+    The engine type-checks for this class to find the ``warming``
+    countdown (partitions on warming consumers are unreadable), so the
+    wrapper never needs an engine-side sidechannel.
+    """
+
+    tick: jax.Array            # i32    step counter
+    obs_speeds: jax.Array      # f32[D+1, N]  observation ring buffer
+    obs_lag: jax.Array         # f32[D+1, N]
+    obs_active: jax.Array      # bool[D+1, N]
+    held_n: jax.Array          # i32    consumer count of the held decision
+    pending_assign: jax.Array  # i32[N] accepted-but-not-applied assignment
+    pending_n: jax.Array       # i32
+    pending_at: jax.Array      # i32    step at which the pending applies
+    pending_valid: jax.Array   # bool
+    cooldown_until: jax.Array  # i32    no decision accepted before this step
+    warming: jax.Array         # i32[N] rebalance-storm countdown
+    inner: Any                 # wrapped policy's own state pytree
+
+
+def _fold_to_max(assign: jax.Array, n_bins: jax.Array, *, k: int, m: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Clamp an assignment to at most ``k`` consumers.
+
+    Used consumer ids are ranked by id; partitions on a consumer of rank
+    ``r >= k`` are folded onto the used consumer of rank ``r % k``.
+    When at most ``k`` consumers are used this is the exact identity
+    (``m`` is the consumer-id universe, ids are < m)."""
+    valid = assign >= 0
+    sent = jnp.int32(m)
+    safe = jnp.where(valid, assign, sent)
+    used = jnp.zeros(m + 1, bool).at[safe].set(True)[:m]
+    rank = jnp.cumsum(used.astype(jnp.int32)) - 1       # rank of used id i
+    ids = jnp.arange(m, dtype=jnp.int32)
+    id_of_rank = (jnp.zeros(m, jnp.int32)
+                  .at[jnp.where(used, rank, sent)].set(ids, mode="drop"))
+    r = rank[jnp.clip(assign, 0, m - 1)]
+    folded = id_of_rank[r % jnp.int32(k)]
+    new_assign = jnp.where(valid & (r >= jnp.int32(k)), folded, assign)
+    return new_assign, jnp.minimum(n_bins, jnp.int32(k))
+
+
+def wrap_policy(inner_init: Callable, inner_step: Callable,
+                cp: ControlPlaneConfig) -> Tuple[Callable, Callable]:
+    """Wrap a scan-safe ``(init, step)`` policy pair behind ``cp``.
+
+    The inner policy runs on *delayed* observations every step (its
+    state always advances -- no ``where`` over opaque pytrees such as
+    PRNG keys), but only poll-step decisions that differ from the held
+    assignment are accepted, and an accepted decision applies
+    ``actuation_delay`` steps later, starting the cooldown and the
+    warm-up storm on the consumers it touched.
+    """
+    if not isinstance(cp, ControlPlaneConfig):
+        raise ValueError(
+            f"control plane config must be a ControlPlaneConfig, got "
+            f"{type(cp).__name__}")
+    d1 = cp.observation_delay + 1
+
+    def init(n_partitions: int) -> ControlPlaneState:
+        n = int(n_partitions)
+        return ControlPlaneState(
+            tick=jnp.int32(0),
+            obs_speeds=jnp.zeros((d1, n), jnp.float32),
+            obs_lag=jnp.zeros((d1, n), jnp.float32),
+            obs_active=jnp.ones((d1, n), bool),
+            held_n=jnp.int32(0),
+            pending_assign=jnp.full((n,), NEG, jnp.int32),
+            pending_n=jnp.int32(0),
+            pending_at=jnp.int32(0),
+            pending_valid=jnp.zeros((), bool),
+            cooldown_until=jnp.int32(0),
+            warming=jnp.zeros((n,), jnp.int32),
+            inner=inner_init(n))
+
+    def step(speeds, lag, prev_assign, state: ControlPlaneState,
+             active=None):
+        n = speeds.shape[0]
+        m = 2 * n + 2                   # engine's consumer-id universe
+        act_now = None if active is None else active.astype(bool)
+        tick = state.tick
+        # --- observe: write now, read observation_delay steps back ------
+        idx = tick % jnp.int32(d1)
+        obs_speeds = state.obs_speeds.at[idx].set(
+            speeds.astype(jnp.float32))
+        obs_lag = state.obs_lag.at[idx].set(lag.astype(jnp.float32))
+        rd = (idx + jnp.int32(1)) % jnp.int32(d1)   # slot of step t - D
+        sp_d, lag_d = obs_speeds[rd], obs_lag[rd]
+        if act_now is None:
+            obs_active = state.obs_active
+            cand, cand_n, inner = inner_step(sp_d, lag_d, prev_assign,
+                                             state.inner)
+        else:
+            obs_active = state.obs_active.at[idx].set(act_now)
+            cand, cand_n, inner = inner_step(sp_d, lag_d, prev_assign,
+                                             state.inner, obs_active[rd])
+        cand = cand.astype(jnp.int32)
+        cand_n = cand_n.astype(jnp.int32)
+        # --- clamp to [min_replicas, max_replicas] ----------------------
+        if cp.max_replicas is not None:
+            cand, cand_n = _fold_to_max(cand, cand_n, k=cp.max_replicas,
+                                        m=m)
+        if cp.min_replicas > 1:
+            # floor the billed count; the extra replicas idle (KEDA
+            # minReplicaCount keeps them alive regardless of load)
+            cand_n = jnp.maximum(cand_n, jnp.int32(cp.min_replicas))
+        if act_now is None:
+            cand_out, held_out = cand, prev_assign
+        else:
+            cand_out = jnp.where(act_now, cand, jnp.int32(NEG))
+            held_out = jnp.where(act_now, prev_assign, jnp.int32(NEG))
+        # --- decide: poll gating + cooldown hysteresis ------------------
+        poll = (tick % jnp.int32(cp.polling_interval)) == 0
+        is_change = ((cand_n != state.held_n)
+                     | jnp.any(cand_out != held_out))
+        accept = poll & is_change & (tick >= state.cooldown_until)
+        pending_assign = jnp.where(accept, cand_out, state.pending_assign)
+        pending_n = jnp.where(accept, cand_n, state.pending_n)
+        pending_at = jnp.where(
+            accept, tick + jnp.int32(cp.actuation_delay), state.pending_at)
+        pending_valid = accept | state.pending_valid
+        # --- actuate: apply the pending decision when it matures --------
+        do_apply = pending_valid & (pending_at <= tick)
+        out_assign = jnp.where(do_apply, pending_assign, held_out)
+        out_n = jnp.where(do_apply, pending_n, state.held_n)
+        if cp.min_replicas > 1:
+            # minReplicaCount keeps replicas alive (and billed) even
+            # before the first decision applies
+            out_n = jnp.maximum(out_n, jnp.int32(cp.min_replicas))
+        if act_now is not None:
+            out_assign = jnp.where(act_now, out_assign, jnp.int32(NEG))
+        # --- warm-up storm on the consumers this apply touched ----------
+        warm_next = jnp.maximum(state.warming - 1, 0)
+        if cp.warmup_steps > 0:
+            sent = jnp.int32(m)
+            old_bin = jnp.where(held_out >= 0, held_out, sent)
+            new_bin = jnp.where(out_assign >= 0, out_assign, sent)
+            changed = old_bin != new_bin
+            touched = jnp.zeros(m + 1, bool)
+            touched = touched.at[old_bin].max(changed)
+            touched = touched.at[new_bin].max(changed)
+            part_touched = ((out_assign >= 0)
+                            & touched[jnp.clip(out_assign, 0, m - 1)])
+            warming = jnp.where(do_apply & part_touched,
+                                jnp.int32(cp.warmup_steps), warm_next)
+        else:
+            warming = warm_next
+        new_state = ControlPlaneState(
+            tick=tick + 1, obs_speeds=obs_speeds, obs_lag=obs_lag,
+            obs_active=obs_active, held_n=out_n,
+            pending_assign=pending_assign, pending_n=pending_n,
+            pending_at=pending_at,
+            pending_valid=pending_valid & ~do_apply,
+            cooldown_until=jnp.where(
+                do_apply, tick + jnp.int32(cp.cooldown_period),
+                state.cooldown_until),
+            warming=warming, inner=inner)
+        return out_assign, out_n, new_state
+
+    # the engine probes this marker to avoid double-wrapping policies
+    # (KEDA_LAG_REAL etc.) that already built their own control plane
+    step._controlplane_wrapped = True       # type: ignore[attr-defined]
+    step._controlplane_config = cp          # type: ignore[attr-defined]
+    init._controlplane_wrapped = True       # type: ignore[attr-defined]
+    return init, step
+
+
+__all__ = [
+    "ControlPlaneConfig",
+    "ControlPlaneState",
+    "wrap_policy",
+]

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels.lag_update import lag_update_batch, lag_update_reference
+from repro.lagsim.controlplane import (ControlPlaneConfig, ControlPlaneState,
+                                       wrap_policy)
 from repro.registry import make_policy
 
 NEG = -1
@@ -62,6 +64,7 @@ class LagSimConfig:
     scale_down_patience: int = 3             # stabilization window (steps)
     slo_lag: Optional[float] = None          # metrics threshold (bytes)
     use_kernel: bool = False                 # Pallas fused update in the scan
+    control_plane: Optional[ControlPlaneConfig] = None  # scaler friction
 
     @property
     def slo_lag_or_default(self) -> float:
@@ -71,6 +74,14 @@ class LagSimConfig:
 
     def resolve(self, n: int) -> "LagSimConfig":
         """Fill derived defaults for an ``n``-partition workload."""
+        if (self.control_plane is not None
+                and not isinstance(self.control_plane, ControlPlaneConfig)):
+            # one choke point hit by both the direct and the fleet path:
+            # fail fast with a named error instead of a scan-deep crash
+            raise ValueError(
+                f"control_plane must be a ControlPlaneConfig (or None), got "
+                f"{type(self.control_plane).__name__}; build one via "
+                f"repro.api.ControlPlaneConfig(...)")
         return dataclasses.replace(
             self,
             lag_threshold=(self.lag_threshold if self.lag_threshold is not None
@@ -123,8 +134,8 @@ def _check_rates_shape(rates, n: int, what: str, array_name: str) -> None:
 
 
 def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
-              cfg: LagSimConfig, active: Optional[jax.Array] = None
-              ) -> LagTrace:
+              cfg: LagSimConfig, active: Optional[jax.Array] = None,
+              record_assign: bool = False):
     """Unjitted core: ``trace`` f32[T, N] -> LagTrace of f32/i32[T].
 
     ``active`` (bool[T, N], optional) marks which partitions exist at each
@@ -132,20 +143,36 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     backlog, is assigned to no consumer (``NEG``), drains no budget, and
     its recorded lag is exactly zero.  Deaths cost no migration (the
     consumer just stops reading); rebirths start with no sticky memory.
+
+    With ``record_assign=True`` the per-step assignment ``i32[T, N]`` is
+    recorded alongside the trace and a ``(LagTrace, assigns)`` pair is
+    returned (regression goldens pin full trajectories this way).
     """
     n = trace.shape[1]
     m = 2 * n + 2                       # packer bin-name universe
     cfg = cfg.resolve(n)
     cap_step = jnp.float32(cfg.capacity * cfg.dt)
+    cp = cfg.control_plane
     # strict=False: the engine passes its uniform reactive knob set to every
-    # policy; specs that do not declare a knob simply ignore it
+    # policy; specs that do not declare a knob simply ignore it.  With a
+    # control plane configured, its knobs join the set, so a REAL policy
+    # family (which declares them and self-wraps) sees the same grid values
+    # the engine uses to wrap a plain policy below.
+    extra = {} if cp is None else cp.knobs()
     pol = make_policy(
         policy, n, jnp.float32(cfg.capacity), backend="jax", strict=False,
         lag_threshold=jnp.float32(cfg.lag_threshold),
         target_utilization=jnp.float32(cfg.target_utilization),
         max_consumers=cfg.max_consumers,
-        scale_down_patience=cfg.scale_down_patience)
+        scale_down_patience=cfg.scale_down_patience, **extra)
     init, policy_step = pol.init, pol.step
+    if cp is not None and not getattr(policy_step, "_controlplane_wrapped",
+                                      False):
+        init, policy_step = wrap_policy(init, policy_step, cp)
+    # the warm-up storm only exists behind a control plane; probing the
+    # step marker keeps self-wrapped (REAL) policies storm-correct even
+    # when cfg.control_plane is None
+    has_cp = getattr(policy_step, "_controlplane_wrapped", False)
 
     def drain(lag, produced, assign, readable, act_t):
         if cfg.use_kernel:
@@ -178,40 +205,54 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
         down = jnp.where(moved, jnp.int32(cfg.migration_steps),
                          jnp.maximum(down - 1, 0))
         readable = (down == 0) & (new_assign >= 0)
+        blocked = down > 0
+        if has_cp:
+            # rebalance storm: partitions on a warming consumer are
+            # unreadable while that consumer rejoins the group
+            storm = pstate.warming > 0
+            readable = readable & ~storm
+            blocked = blocked | (storm & (new_assign >= 0))
         new_lag = drain(lag, produced, new_assign, readable, act_t)
-        unreadable = (down > 0) if act_t is None else ((down > 0) & act_t)
+        unreadable = blocked if act_t is None else (blocked & act_t)
         ys = (jnp.sum(new_lag), jnp.max(new_lag),
               n_active.astype(jnp.int32),
               jnp.sum(moved.astype(jnp.int32)),
               jnp.sum(unreadable.astype(jnp.int32)))
+        if record_assign:
+            ys = ys + (new_assign,)
         return (new_lag, new_assign, down, pstate), ys
 
     xs = (trace.astype(jnp.float32) if active is None
           else (trace.astype(jnp.float32), active.astype(bool)))
     carry0 = (initial_lag.astype(jnp.float32), jnp.full(n, NEG, jnp.int32),
               jnp.zeros(n, jnp.int32), init(n))
-    _, (tot, mx, cons, migs, unread) = lax.scan(step, carry0, xs)
-    return LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
-                    migrations=migs, unreadable=unread)
+    _, ys = lax.scan(step, carry0, xs)
+    tot, mx, cons, migs, unread = ys[:5]
+    out = LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
+                   migrations=migs, unreadable=unread)
+    return (out, ys[5]) if record_assign else out
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "cfg", "record_assign"))
 def _simulate_jit(trace, initial_lag, policy: str, cfg: LagSimConfig,
-                  active=None):
-    return _simulate(trace, initial_lag, policy, cfg, active)
+                  active=None, record_assign: bool = False):
+    return _simulate(trace, initial_lag, policy, cfg, active, record_assign)
 
 
 def simulate_lag(trace: jax.Array, *, policy: str,
                  cfg: LagSimConfig = LagSimConfig(),
                  initial_lag: Optional[jax.Array] = None,
-                 active: Optional[jax.Array] = None) -> LagTrace:
+                 active: Optional[jax.Array] = None,
+                 record_assign: bool = False):
     """Run one policy over one stream ``f32[T, N]`` -> ``LagTrace`` of [T].
 
     ``initial_lag`` (f32[N], default zeros) seeds the per-partition backlog
     -- e.g. to resume from a measured system state or to study spike
     recovery from a known excursion.  ``active`` (bool[T, N], optional)
     masks partitions that do not exist at a step: unreadable and empty
-    (see ``_simulate``).
+    (see ``_simulate``).  ``record_assign=True`` returns
+    ``(LagTrace, assigns i32[T, N])`` instead of the trace alone.
     """
     trace = jnp.asarray(trace)
     if trace.ndim != 2:
@@ -232,7 +273,8 @@ def simulate_lag(trace: jax.Array, *, policy: str,
                 f"has shape {trace.shape}; the mask must name every "
                 f"(step, partition) cell")
     return _simulate_jit(trace, jnp.asarray(initial_lag, jnp.float32),
-                         policy.upper(), cfg, active)
+                         policy.upper(), cfg, active,
+                         record_assign=record_assign)
 
 
 def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,

@@ -6,7 +6,8 @@ benchmarks key their row order off it:
 
   NF NFD FF FFD BF BFD WF WFD        (Sec. II-B classical, heuristic)
   MWF MBF MWFP MBFP                  (Sec. IV-B Algorithm 1, sticky)
-  KEDA_LAG RATE_THRESHOLD            (reactive baselines)
+  KEDA_LAG RATE_THRESHOLD            (idealized reactive baselines)
+  KEDA_LAG_REAL CLOUD_RUN_CPU_LAG    (control-plane-real reactive scalers)
   ANNEAL ANNEAL_STICKY               (2024 follow-up optimizers)
 
 Every packer name is registered twice -- backend ``py`` wraps the
@@ -201,10 +202,15 @@ def _reactive_policy(kind: str, n: int, capacity, *, lag_threshold,
             act = active.astype(bool)
             speeds = jnp.where(act, speeds, 0.0)
             lag = None if lag is None else jnp.where(act, lag, 0.0)
+        lag_want = jnp.ceil(jnp.sum(lag) / lag_threshold)
+        rate_want = jnp.ceil(jnp.sum(speeds)
+                             / (target_utilization * capacity))
         if kind == "lag":
-            want = jnp.ceil(jnp.sum(lag) / lag_threshold)
-        else:
-            want = jnp.ceil(jnp.sum(speeds) / (target_utilization * capacity))
+            want = lag_want
+        elif kind == "rate":
+            want = rate_want
+        else:                   # "cpu_lag": KEDA multi-trigger semantics --
+            want = jnp.maximum(lag_want, rate_want)   # max over triggers
         want = jnp.clip(want.astype(jnp.int32), 1, max_c)
         under = jnp.where(want < n_cur, under + 1, jnp.int32(0))
         go_down = under >= patience
@@ -249,6 +255,67 @@ def _build_rate_threshold(n, capacity, *, lag_threshold=None,
         "rate", n, capacity, lag_threshold=lag_threshold,
         target_utilization=target_utilization, max_consumers=max_consumers,
         scale_down_patience=scale_down_patience)
+
+
+# ---------------------------------------------------------------------------
+# realistic reactive scalers (family "reactive", jax backend):
+# the idealized rules above, run behind a faithful control plane
+# ---------------------------------------------------------------------------
+
+#: control-plane knobs every REAL scaler family declares (step units);
+#: ``repro.lagsim`` overrides them from ``LagSimConfig.control_plane``
+_KEDA_REAL_CP = {"polling_interval": 3, "observation_delay": 1,
+                 "actuation_delay": 1, "cooldown_period": 20,
+                 "min_replicas": 1, "max_replicas": None, "warmup_steps": 2}
+_CLOUD_RUN_CP = {"polling_interval": 5, "observation_delay": 2,
+                 "actuation_delay": 2, "cooldown_period": 10,
+                 "min_replicas": 1, "max_replicas": None, "warmup_steps": 3}
+
+
+def _real_reactive(kind, n, capacity, *, lag_threshold, target_utilization,
+                   max_consumers, scale_down_patience, **cp_knobs):
+    # lazy import, mirroring _anneal_policy: keeps registry import cheap
+    # and free of a registry <-> lagsim cycle
+    from repro.lagsim.controlplane import ControlPlaneConfig, wrap_policy
+    inner = _reactive_policy(
+        kind, n, capacity, lag_threshold=lag_threshold,
+        target_utilization=target_utilization, max_consumers=max_consumers,
+        scale_down_patience=scale_down_patience)
+    return wrap_policy(*inner, ControlPlaneConfig(**cp_knobs))
+
+
+@register("KEDA_LAG_REAL", family="reactive", backend="jax",
+          hyperparams={"lag_threshold": None, "target_utilization": 0.75,
+                       "max_consumers": None, "scale_down_patience": 3,
+                       **_KEDA_REAL_CP},
+          paper_section="reactive baseline",
+          summary="KEDA lagThreshold rule behind a faithful control plane "
+                  "(pollingInterval/cooldownPeriod/warm-up storm)")
+def _build_keda_lag_real(n, capacity, *, lag_threshold=None,
+                         target_utilization=0.75, max_consumers=None,
+                         scale_down_patience=3, **cp_knobs):
+    cp = {**_KEDA_REAL_CP, **cp_knobs}
+    return _real_reactive(
+        "lag", n, capacity, lag_threshold=lag_threshold,
+        target_utilization=target_utilization, max_consumers=max_consumers,
+        scale_down_patience=scale_down_patience, **cp)
+
+
+@register("CLOUD_RUN_CPU_LAG", family="reactive", backend="jax",
+          hyperparams={"lag_threshold": None, "target_utilization": 0.75,
+                       "max_consumers": None, "scale_down_patience": 3,
+                       **_CLOUD_RUN_CP},
+          paper_section="reactive baseline",
+          summary="Cloud Run style CPU+lag dual trigger (max of both) "
+                  "behind a slow-polling control plane")
+def _build_cloud_run_cpu_lag(n, capacity, *, lag_threshold=None,
+                             target_utilization=0.75, max_consumers=None,
+                             scale_down_patience=3, **cp_knobs):
+    cp = {**_CLOUD_RUN_CP, **cp_knobs}
+    return _real_reactive(
+        "cpu_lag", n, capacity, lag_threshold=lag_threshold,
+        target_utilization=target_utilization, max_consumers=max_consumers,
+        scale_down_patience=scale_down_patience, **cp)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,407 @@
+"""Control-plane emulation, pinned end to end.
+
+Load-bearing properties (ISSUE acceptance criteria):
+
+* **Zero friction is the identity** -- with ``polling_interval=1``, zero
+  delays, zero cooldown, and no warm-up, a control-plane-wrapped policy
+  reproduces the bare policy bit-for-bit (golden fixtures in
+  ``tests/data/golden_controlplane.json``), and the equivalence survives
+  ``FleetRunner`` bucketing (padding does not change behavior).
+* **Hysteresis and clamps hold** -- no scale event applies inside an
+  active cooldown window; replica counts stay in
+  ``[min_replicas, max_replicas]``; the assignment used at step ``t``
+  never reflects observations newer than ``t - observation_delay``;
+  warm-up downtime only affects consumers touched by the scale event
+  (hypothesis properties with deterministic fixed-instance fallbacks).
+* **Semantics cannot drift** -- a fixed-seed ``KEDA_LAG_REAL``
+  trajectory (assignments, lag, SLO metrics) on the ``topic_lifecycle``
+  masked family is pinned, on the direct and the fleet path.
+* **Inconsistent knobs fail loudly** -- each bad combination raises a
+  named ``ValueError`` before anything compiles.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.fleet import FleetConfig, FleetRunner
+from repro.lagsim import (ControlPlaneConfig, ControlPlaneState,
+                          LagSimConfig, simulate_lag, slo_summary, sweep_lag,
+                          wrap_policy)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+CFG = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+ZF = ControlPlaneConfig()               # the zero-friction identity
+TRACE_FIELDS = ("lag_total", "lag_max", "consumers", "migrations",
+                "unreadable")
+
+
+def _load(name):
+    with open(os.path.join(DATA, name)) as f:
+        return json.load(f)
+
+
+def _with_cp(cfg, cp):
+    return dataclasses.replace(cfg, control_plane=cp)
+
+
+def _assert_traces_equal(a, b, msg=""):
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}: {f}")
+
+
+# ---------------------------------------------------------------------------
+# named errors for inconsistent knobs (satellite bugfix)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kwargs,match", [
+    ({"polling_interval": 0}, "polling_interval=0 must be >= 1"),
+    ({"observation_delay": -1}, "observation_delay=-1 must be >= 0"),
+    ({"actuation_delay": -2}, "actuation_delay=-2 must be >= 0"),
+    ({"cooldown_period": -1}, "cooldown_period=-1 must be >= 0"),
+    ({"polling_interval": 4, "cooldown_period": 2},
+     "cooldown_period=2 < polling_interval=4"),
+    ({"warmup_steps": -1}, "warmup_steps=-1 must be >= 0"),
+    ({"min_replicas": 0}, "min_replicas=0 must be >= 1"),
+    ({"min_replicas": 3, "max_replicas": 2},
+     "max_replicas=2 < min_replicas=3"),
+    ({"polling_interval": 1.5}, "must be an integer number of steps"),
+    ({"min_replicas": True}, "must be an integer number of replicas"),
+])
+def test_named_config_errors(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        ControlPlaneConfig(**kwargs)
+
+
+def test_cooldown_zero_and_equal_to_polling_are_legal():
+    ControlPlaneConfig(polling_interval=4, cooldown_period=0)
+    ControlPlaneConfig(polling_interval=4, cooldown_period=4)
+
+
+def test_engine_rejects_non_config_control_plane():
+    with pytest.raises(ValueError, match="must be a ControlPlaneConfig"):
+        LagSimConfig(control_plane={"polling_interval": 2}).resolve(4)
+
+
+def test_api_simulate_raises_named_errors():
+    tr = np.full((1, 6, 4), 0.5, np.float32)
+    with pytest.raises(ValueError, match="cooldown_period=2 < polling"):
+        api.simulate(tr, policies=("BFD",),
+                     control_plane={"polling_interval": 4,
+                                    "cooldown_period": 2})
+    with pytest.raises(ValueError, match="warmup_steps=-1"):
+        api.simulate(tr, policies=("BFD",),
+                     control_plane={"warmup_steps": -1})
+    with pytest.raises(ValueError, match="must be a ControlPlaneConfig"):
+        api.simulate(tr, policies=("BFD",), control_plane=3)
+
+
+# ---------------------------------------------------------------------------
+# zero-friction equivalence goldens
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pol", ("KEDA_LAG", "RATE_THRESHOLD"))
+def test_zero_friction_golden(pol):
+    """Wrapped-at-zero-friction and bare both reproduce the pinned
+    trajectories exactly: the wrapper is the identity, and neither side
+    can drift without the golden catching it."""
+    g = _load("golden_controlplane.json")
+    trace = jnp.asarray(g["trace"], jnp.float32)
+    bare = simulate_lag(trace, policy=pol, cfg=CFG)
+    wrapped = simulate_lag(trace, policy=pol, cfg=_with_cp(CFG, ZF))
+    for r, which in ((bare, "bare"), (wrapped, "wrapped")):
+        for f in TRACE_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r, f)), np.asarray(g[pol][f]),
+                err_msg=f"{pol} ({which}): {f}")
+
+
+@pytest.mark.parametrize("pol", ("BFD", "MBFP", "ANNEAL_STICKY"))
+def test_zero_friction_packers_bit_identical(pol):
+    g = _load("golden_controlplane.json")
+    trace = jnp.asarray(g["trace"], jnp.float32)
+    _assert_traces_equal(simulate_lag(trace, policy=pol, cfg=CFG),
+                         simulate_lag(trace, policy=pol,
+                                      cfg=_with_cp(CFG, ZF)), pol)
+
+
+def test_zero_friction_real_equals_plain_keda():
+    """KEDA_LAG_REAL with zero-friction knob overrides degenerates to the
+    idealized KEDA_LAG baseline bit-for-bit."""
+    g = _load("golden_controlplane.json")
+    trace = jnp.asarray(g["trace"], jnp.float32)
+    real = simulate_lag(trace, policy="KEDA_LAG_REAL", cfg=_with_cp(CFG, ZF))
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(real, f)), np.asarray(g["KEDA_LAG"][f]),
+            err_msg=f"KEDA_LAG_REAL(zero friction): {f}")
+
+
+def test_zero_friction_under_fleet_bucketing():
+    """Bucket padding does not change control-plane behavior: ragged
+    zero-friction fleet runs equal the unwrapped fleet runs exactly."""
+    rng = np.random.default_rng(11)
+    scen = [jnp.asarray(rng.uniform(0, 1.1, s), jnp.float32)
+            for s in ((14, 4), (20, 8), (9, 6))]
+    pols = ("BFD", "KEDA_LAG", "KEDA_LAG_REAL")
+    runner = FleetRunner(FleetConfig(t_buckets=(20,), n_buckets=(8,)))
+    plain = runner.simulate(pols, scen, CFG)
+    wrapped = runner.simulate(pols, scen, _with_cp(CFG, ZF))
+    for i in range(len(scen)):
+        # plain policies: the zero-friction wrapper is the identity
+        # (REAL is excluded here -- without cfg.control_plane it runs
+        # its own registered friction defaults, and the ZF run
+        # overrides them to zero)
+        for p in (0, 1):
+            np.testing.assert_array_equal(plain.lag_total[i][p],
+                                          wrapped.lag_total[i][p])
+            np.testing.assert_array_equal(plain.consumers[i][p],
+                                          wrapped.consumers[i][p])
+            np.testing.assert_array_equal(plain.migrations[i][p],
+                                          wrapped.migrations[i][p])
+        # zero-friction REAL == idealized KEDA_LAG, under padding too
+        np.testing.assert_array_equal(wrapped.consumers[i][2],
+                                      wrapped.consumers[i][1])
+        np.testing.assert_array_equal(wrapped.lag_total[i][2],
+                                      wrapped.lag_total[i][1])
+
+
+# ---------------------------------------------------------------------------
+# properties: cooldown / clamping / staleness / warm-up locality
+# ---------------------------------------------------------------------------
+def _trace_from_seed(seed, t=40, n=6, scale=1.2):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, scale, (t, n)), jnp.float32)
+
+
+def _apply_steps(assigns, consumers):
+    """Steps at which a scale decision *applied* (output changed)."""
+    assigns = np.asarray(assigns)
+    consumers = np.asarray(consumers)
+    events = []
+    prev_a = np.full(assigns.shape[1], -1, assigns.dtype)
+    prev_n = 0
+    for t in range(assigns.shape[0]):
+        if consumers[t] != prev_n or not np.array_equal(assigns[t], prev_a):
+            events.append(t)
+        prev_a, prev_n = assigns[t], consumers[t]
+    return events
+
+
+def _check_cooldown(seed, polling, cooldown, delay):
+    cp = ControlPlaneConfig(polling_interval=polling,
+                            cooldown_period=cooldown,
+                            observation_delay=delay, actuation_delay=delay)
+    trace = _trace_from_seed(seed)
+    res, assigns = simulate_lag(trace, policy="KEDA_LAG",
+                                cfg=_with_cp(CFG, cp), record_assign=True)
+    events = _apply_steps(assigns, res.consumers)
+    gaps = np.diff(events)
+    assert (gaps >= max(cooldown, 1)).all(), (events, cp)
+    # and decisions only ever apply actuation_delay after a poll step
+    for t in events:
+        assert (t - delay) % polling == 0, (t, cp)
+
+
+def _check_clamp(seed, lo, hi):
+    cp = ControlPlaneConfig(min_replicas=lo, max_replicas=hi,
+                            polling_interval=2, cooldown_period=2,
+                            warmup_steps=1)
+    trace = _trace_from_seed(seed, scale=2.0)
+    for pol in ("KEDA_LAG", "BFD"):
+        res, assigns = simulate_lag(trace, policy=pol,
+                                    cfg=_with_cp(CFG, cp),
+                                    record_assign=True)
+        cons = np.asarray(res.consumers)
+        assert cons.min() >= lo and cons.max() <= hi, (pol, cons)
+        # the assignment itself never names more than hi consumers
+        a = np.asarray(assigns)
+        for t in range(a.shape[0]):
+            assert len(set(a[t][a[t] >= 0])) <= hi, (pol, t, a[t])
+
+
+def _check_staleness(seed, delay):
+    """The assignment at step t never reflects observations newer than
+    t - observation_delay: editing the future leaves the prefix alone."""
+    cp = ControlPlaneConfig(observation_delay=delay)
+    # threshold high enough that the unamplified run stays well below the
+    # max-consumer clip (a clipped scaler ignores the future trivially)
+    cfgz = _with_cp(dataclasses.replace(CFG, lag_threshold=3.0), cp)
+    t0 = 12
+    tr1 = np.asarray(_trace_from_seed(seed))
+    tr2 = tr1.copy()
+    tr2[t0:] = tr2[t0:] * 5.0 + 1.0     # violently different future
+    _, a1 = simulate_lag(jnp.asarray(tr1), policy="KEDA_LAG", cfg=cfgz,
+                         record_assign=True)
+    _, a2 = simulate_lag(jnp.asarray(tr2), policy="KEDA_LAG", cfg=cfgz,
+                         record_assign=True)
+    a1, a2 = np.asarray(a1), np.asarray(a2)
+    np.testing.assert_array_equal(a1[:t0 + delay], a2[:t0 + delay])
+    assert not np.array_equal(a1, a2)   # the future is not ignored
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), polling=st.integers(1, 4),
+           cool=st.integers(0, 8), delay=st.integers(0, 3))
+    def test_cooldown_property(seed, polling, cool, delay):
+        if 0 < cool < polling:
+            cool = polling              # keep the config consistent
+        _check_cooldown(seed, polling, cool, delay)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), lo=st.integers(2, 3),
+           span=st.integers(0, 3))
+    def test_clamp_property(seed, lo, span):
+        _check_clamp(seed, lo, lo + span)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), delay=st.integers(0, 4))
+    def test_staleness_property(seed, delay):
+        _check_staleness(seed, delay)
+
+
+@pytest.mark.parametrize("seed", (0, 1))
+def test_control_plane_properties_fixed_instances(seed):
+    """Deterministic fallback of the hypothesis properties above (always
+    runs, with or without hypothesis installed)."""
+    _check_cooldown(seed, polling=3, cooldown=6, delay=1)
+    _check_cooldown(seed + 10, polling=1, cooldown=0, delay=0)
+    _check_clamp(seed, lo=2, hi=4)
+    _check_staleness(seed, delay=2)
+    _check_staleness(seed + 10, delay=0)
+
+
+def test_warmup_touches_only_scaled_consumers():
+    """Drive the wrapper directly with a scripted inner policy: the
+    rebalance storm must hit exactly the consumers whose partition set
+    the applied decision changed."""
+    plan = {0: ([0, 0, 1, 1], 2)}        # tick -> (assignment, consumers)
+    plan[3] = ([0, 0, 1, 2], 3)          # move p3 to a fresh consumer
+
+    def inner_init(n):
+        return jnp.int32(0)
+
+    def inner_step(speeds, lag, prev, tick, active=None):
+        later = [k for k in sorted(plan) if int(tick) >= k][-1]
+        a, k = plan[later]
+        return jnp.asarray(a, jnp.int32), jnp.int32(k), tick + 1
+
+    init, step = wrap_policy(inner_init, inner_step,
+                             ControlPlaneConfig(warmup_steps=4))
+    n = 4
+    speeds = jnp.full((n,), 0.5, jnp.float32)
+    lag = jnp.zeros((n,), jnp.float32)
+    prev = jnp.full((n,), -1, jnp.int32)
+    state = init(n)
+    assert isinstance(state, ControlPlaneState)
+    seen = []
+    for _ in range(6):
+        prev, k, state = step(speeds, lag, prev, state)
+        seen.append(np.asarray(state.warming).tolist())
+    # t=0: group creation touches everyone; t=1,2 decay
+    assert seen[0] == [4, 4, 4, 4]
+    assert seen[1] == [3, 3, 3, 3] and seen[2] == [2, 2, 2, 2]
+    # t=3: p3 moves consumer 1 -> 2; consumer 0 (p0, p1) is untouched
+    assert seen[3] == [1, 1, 4, 4]
+    assert seen[4] == [0, 0, 3, 3]
+
+
+def test_warmup_storm_blocks_reads_in_engine():
+    """A pure scale event (no partition moves) still costs downtime: the
+    engine reports the warming partitions as unreadable and they drain
+    nothing while the storm lasts."""
+    g = _load("golden_controlplane.json")
+    gold = g["topic_lifecycle"]["KEDA_LAG_REAL"]
+    # pinned trajectory has storms with zero migrations: downtime that
+    # only the control plane (not the migration model) can explain
+    assert sum(gold["migrations"]) == 0
+    assert max(gold["unreadable"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed KEDA_LAG_REAL regression (direct + fleet path)
+# ---------------------------------------------------------------------------
+def test_keda_lag_real_topic_lifecycle_regression():
+    g = _load("golden_controlplane.json")["topic_lifecycle"]
+    sp = jnp.asarray(g["speeds"], jnp.float32)
+    act = jnp.asarray(np.asarray(g["active"], bool))
+    gold = g["KEDA_LAG_REAL"]
+    res, assigns = simulate_lag(sp, policy="KEDA_LAG_REAL", cfg=CFG,
+                                active=act, record_assign=True)
+    np.testing.assert_array_equal(np.asarray(assigns),
+                                  np.asarray(gold["assigns"]))
+    for f in TRACE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, f)), np.asarray(gold[f]), err_msg=f)
+    metrics = slo_summary(np.asarray(res.lag_total),
+                          np.asarray(res.consumers),
+                          np.asarray(res.migrations),
+                          slo_lag=CFG.slo_lag_or_default, dt=CFG.dt)
+    for k, v in gold["metrics"].items():
+        assert float(metrics[k]) == pytest.approx(v, abs=1e-6), k
+
+
+def test_keda_lag_real_regression_survives_fleet_padding():
+    """The same pinned trajectory through FleetRunner with forced bucket
+    padding (24x6 -> 32x8): control-plane semantics are padding-exact."""
+    g = _load("golden_controlplane.json")["topic_lifecycle"]
+    sp = jnp.asarray(g["speeds"], jnp.float32)
+    act = jnp.asarray(np.asarray(g["active"], bool))
+    gold = g["KEDA_LAG_REAL"]
+    runner = FleetRunner(FleetConfig(t_buckets=(32,), n_buckets=(8,)))
+    res = runner.simulate(("KEDA_LAG_REAL",), [(sp, act)], CFG)
+    np.testing.assert_allclose(res.lag_total[0][0],
+                               np.asarray(gold["lag_total"]), atol=1e-6)
+    np.testing.assert_array_equal(res.consumers[0][0],
+                                  np.asarray(gold["consumers"]))
+    np.testing.assert_array_equal(res.migrations[0][0],
+                                  np.asarray(gold["migrations"]))
+    np.testing.assert_array_equal(res.unreadable[0][0],
+                                  np.asarray(gold["unreadable"]))
+
+
+# ---------------------------------------------------------------------------
+# api threading
+# ---------------------------------------------------------------------------
+def test_api_simulate_threads_control_plane():
+    tr = np.asarray(jax.random.uniform(jax.random.key(2), (2, 12, 5),
+                                       maxval=0.8))
+    knobs = {"polling_interval": 2, "cooldown_period": 4, "warmup_steps": 1}
+    via_map = api.simulate(tr, policies=("BFD", "KEDA_LAG_REAL"),
+                           control_plane=knobs)
+    via_cfg = api.simulate(tr, policies=("BFD", "KEDA_LAG_REAL"),
+                           control_plane=ControlPlaneConfig(**knobs))
+    assert via_map.schema_version == api.API_VERSION
+    np.testing.assert_array_equal(via_map.lag_total, via_cfg.lag_total)
+    np.testing.assert_array_equal(via_map.consumers, via_cfg.consumers)
+    # friction actually bites: the wrapped runs differ from frictionless
+    plain = api.simulate(tr, policies=("BFD", "KEDA_LAG_REAL"))
+    assert not np.array_equal(via_map.consumers, plain.consumers)
+
+
+def test_api_exports_control_plane_config():
+    assert api.ControlPlaneConfig is ControlPlaneConfig
+    assert "ControlPlaneConfig" in api.__all__
+    api.selfcheck()
+
+
+def test_sweep_lag_accepts_control_plane():
+    trace = _trace_from_seed(3, t=16, n=4)
+    cp = ControlPlaneConfig(polling_interval=2, cooldown_period=2)
+    res = sweep_lag(("KEDA_LAG", "CLOUD_RUN_CPU_LAG"), trace[None],
+                    cfg=_with_cp(CFG, cp))
+    assert np.asarray(res.lag_total).shape == (2, 1, 16)

@@ -170,7 +170,8 @@ def test_masked_partition_is_unreadable_and_empty():
 
 def test_policy_name_catalogue():
     policy_names = list_policies(backend="jax")
-    assert set(REACTIVE_BASELINE_NAMES) == {"KEDA_LAG", "RATE_THRESHOLD"}
+    assert set(REACTIVE_BASELINE_NAMES) == {
+        "KEDA_LAG", "RATE_THRESHOLD", "KEDA_LAG_REAL", "CLOUD_RUN_CPU_LAG"}
     assert set(REACTIVE_BASELINE_NAMES) < set(policy_names)
     assert "MBFP" in policy_names
 
