@@ -1,0 +1,225 @@
+"""Bench regression gate: diff two ``BENCH_*.json`` artifacts and fail
+on regressions beyond a threshold -- the first perf gate in CI.
+
+Every ``BENCH_*.json`` is a nested dict of numeric leaves under the
+shared ``BenchReport`` envelope.  The diff walks both trees, pairs
+leaves by path, and classifies each pair by its key name:
+
+* **higher-is-better** -- throughput/speedup leaves (``*_per_s``,
+  ``*speedup*``): a regression is NEW < OLD by more than ``threshold``;
+* **lower-is-better** -- latency/time leaves (``*_us``, ``*_seconds``,
+  ``*us_per*``): a regression is NEW > OLD by more than ``threshold``;
+* everything else (counts, configs, SLO metrics) is compared for
+  information only and never gates -- those belong to correctness tests,
+  not a perf gate.
+
+Compile/trace-time leaves (``*compile*``, ``*trace_lower*``,
+``*first_call*``) are informational too: first-call cost is environment
+noise on shared CI hosts; the gate watches steady state.
+
+Exit status: 0 = no regressions, 1 = at least one regression (or a
+malformed/missing input).  ``--smoke`` self-checks the gate against the
+checked-in artifacts: each file diffed against itself must produce zero
+regressions, and an injected 50% throughput drop must be detected.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_diff.py OLD.json NEW.json
+or    PYTHONPATH=src:. python benchmarks/bench_diff.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+from typing import Any, Dict, Iterator, List, Tuple
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: default gate: 30% relative change
+DEFAULT_THRESHOLD = 0.30
+
+#: checked-in artifacts the ``--smoke`` self-check runs over
+SMOKE_ARTIFACTS = ("BENCH_lagsim.json", "BENCH_fleet.json")
+
+#: leaf-key suffixes / fragments -> metric direction (matched on the
+#: final path component only, so e.g. ``steps_per_scenario`` never
+#: collides with the ``*_per_s`` throughput suffix)
+HIGHER_SUFFIXES = ("_per_s",)
+HIGHER_FRAGMENTS = ("speedup",)
+LOWER_SUFFIXES = ("_us", "_seconds")
+LOWER_FRAGMENTS = ("us_per",)
+#: never gate on these even when they look like perf leaves:
+#: first-call/compile cost is host noise (the gate watches steady
+#: state), ``consumer_seconds`` is a paper SLO metric (correctness tests
+#: own it), span summaries are diagnostics
+INFORMATIONAL = ("compile", "trace_lower", "first_call", "first_dispatch",
+                 "python_us_per_step", "telemetry", "spans",
+                 "consumer_seconds")
+
+
+def _leaves(tree: Any, path: Tuple[str, ...] = ()
+            ) -> Iterator[Tuple[Tuple[str, ...], float]]:
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _leaves(v, path + (str(k),))
+    elif isinstance(tree, bool):
+        return
+    elif isinstance(tree, (int, float)):
+        yield path, float(tree)
+
+
+def _direction(path: Tuple[str, ...]) -> str:
+    """-> 'higher' | 'lower' | 'info' for one leaf path."""
+    joined = "/".join(path).lower()
+    if any(frag in joined for frag in INFORMATIONAL):
+        return "info"
+    key = path[-1].lower()
+    if key.endswith(HIGHER_SUFFIXES) or any(
+            frag in key for frag in HIGHER_FRAGMENTS):
+        return "higher"
+    if key.endswith(LOWER_SUFFIXES) or any(
+            frag in key for frag in LOWER_FRAGMENTS):
+        return "lower"
+    return "info"
+
+
+def diff(old: Dict, new: Dict, threshold: float = DEFAULT_THRESHOLD
+         ) -> Dict[str, List[Tuple[str, float, float, float]]]:
+    """-> {"regressions": [...], "improvements": [...], "info": [...]}.
+
+    Each entry is ``(path, old, new, rel_change)`` with ``rel_change``
+    signed so that positive = worse for gated leaves.
+    """
+    old_leaves = dict(_leaves(old))
+    new_leaves = dict(_leaves(new))
+    out: Dict[str, List] = {"regressions": [], "improvements": [],
+                            "info": []}
+    for path in sorted(old_leaves.keys() & new_leaves.keys()):
+        a, b = old_leaves[path], new_leaves[path]
+        direction = _direction(path)
+        name = "/".join(path)
+        if direction == "info" or a == 0.0:
+            out["info"].append((name, a, b, 0.0))
+            continue
+        rel = (b - a) / abs(a)
+        worse = -rel if direction == "higher" else rel
+        if worse > threshold:
+            out["regressions"].append((name, a, b, worse))
+        elif worse < -threshold:
+            out["improvements"].append((name, a, b, worse))
+        else:
+            out["info"].append((name, a, b, worse))
+    return out
+
+
+def run_diff(old_path: str, new_path: str,
+             threshold: float = DEFAULT_THRESHOLD, quiet: bool = False
+             ) -> int:
+    """Diff two artifacts; print the verdict; -> process exit code."""
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    if old.get("kind") != new.get("kind"):
+        print(f"bench_diff: kind mismatch: {old.get('kind')!r} vs "
+              f"{new.get('kind')!r}", file=sys.stderr)
+        return 1
+    res = diff(old, new, threshold)
+    if not quiet:
+        for name, a, b, worse in res["improvements"]:
+            print(f"  IMPROVED  {name}: {a:.6g} -> {b:.6g} "
+                  f"({-worse:+.0%})")
+    for name, a, b, worse in res["regressions"]:
+        print(f"  REGRESSED {name}: {a:.6g} -> {b:.6g} ({worse:+.0%} "
+              f"worse, gate {threshold:.0%})")
+    gated = sum(1 for e in res.values() for _ in e)
+    verdict = "FAIL" if res["regressions"] else "ok"
+    print(f"bench_diff {verdict}: {os.path.basename(old_path)} -> "
+          f"{os.path.basename(new_path)}: {len(res['regressions'])} "
+          f"regression(s), {len(res['improvements'])} improvement(s), "
+          f"{gated} leaves compared")
+    return 1 if res["regressions"] else 0
+
+
+def _inject_throughput_regression(report: Dict, factor: float = 0.5) -> Dict:
+    """A copy of ``report`` with every throughput leaf cut to ``factor``
+    (and every gated latency leaf inflated by ``1/factor``)."""
+    out = copy.deepcopy(report)
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if isinstance(v, dict):
+                walk(v)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                d = _direction((k,))
+                if d == "higher":
+                    node[k] = v * factor
+                elif d == "lower":
+                    node[k] = v / factor
+
+    walk(out)
+    return out
+
+
+def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
+    """Self-check against the checked-in artifacts: identity diffs must
+    pass, an injected 50% throughput regression must fail."""
+    import tempfile
+
+    for name in SMOKE_ARTIFACTS:
+        path = os.path.join(REPO_ROOT, name)
+        if not os.path.exists(path):
+            print(f"bench_diff smoke: missing artifact {name}",
+                  file=sys.stderr)
+            return 1
+        code = run_diff(path, path, threshold, quiet=True)
+        if code != 0:
+            print(f"bench_diff smoke: identity diff of {name} reported "
+                  f"regressions", file=sys.stderr)
+            return 1
+        with open(path) as f:
+            report = json.load(f)
+        hurt = _inject_throughput_regression(report, factor=0.5)
+        if hurt == report:
+            print(f"bench_diff smoke: {name} has no gated perf leaves; "
+                  f"the gate would be vacuous", file=sys.stderr)
+            return 1
+        with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                         delete=False) as tmp:
+            json.dump(hurt, tmp)
+            hurt_path = tmp.name
+        try:
+            code = run_diff(path, hurt_path, threshold, quiet=True)
+        finally:
+            os.unlink(hurt_path)
+        if code == 0:
+            print(f"bench_diff smoke: injected 50% regression in {name} "
+                  f"was NOT detected", file=sys.stderr)
+            return 1
+    print(f"bench_diff smoke OK: identity diffs clean, injected 50% "
+          f"throughput regressions detected ({', '.join(SMOKE_ARTIFACTS)})")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("new", nargs="?", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression gate (default 0.30 = 30%%)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-check the gate against the checked-in "
+                         "artifacts (identity + injected regression)")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke(args.threshold))
+    if not args.old or not args.new:
+        ap.error("OLD and NEW artifact paths are required (or --smoke)")
+    sys.exit(run_diff(args.old, args.new, args.threshold))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,12 @@ several padded ``(T, N)`` buckets.  Per bucket the benchmark reports
 ``BENCH_fleet.json`` under the shared ``BenchReport`` envelope together
 with the runner's cache statistics.
 
+Per bucket the JSON also splits the first call into its span-measured
+parts -- ``*_trace_lower_us`` / ``*_compile_us`` / ``*_first_dispatch_us``
+(the runner compiles ahead-of-time, so first dispatch no longer conflates
+XLA compilation with dispatch) -- and carries the shared ``telemetry``
+block plus ``runner_stats`` with the per-bucket hit/miss breakdown.
+
 ``--smoke`` (CI) additionally asserts, exactly:
 
 * an all-active fleet sweep equals the direct ``sweep_streams`` result;
@@ -17,6 +23,9 @@ with the runner's cache statistics.
   to a single device, for both verbs, masks included.  Run it under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to make the
   check non-trivial on CPU hosts.
+
+and writes the whole run as a validated Chrome/Perfetto trace to
+``trace_fleet_smoke.json`` (uploaded as a CI artifact).
 
 Run:  PYTHONPATH=src:. python benchmarks/run.py          (fleet_* rows)
 or    PYTHONPATH=src:. python benchmarks/fleet_bench.py [--smoke]
@@ -36,11 +45,13 @@ from repro.api import BenchReport
 from repro.core.scenarios import generate_masked_scenario
 from repro.fleet import FleetConfig, FleetRunner
 from repro.lagsim import LagSimConfig
+from repro.telemetry import default_tracer, validate_chrome_trace
 
-from benchmarks.sections import section
+from benchmarks.sections import section, telemetry_block
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+TRACE_PATH = os.path.join(REPO_ROOT, "trace_fleet_smoke.json")
 
 ALGORITHMS = ("BFD", "MBFP")
 POLICIES = ("BFD", "MBFP", "KEDA_LAG")
@@ -75,6 +86,20 @@ def _throughput(fn, scenarios_steps: int, reps: int = 3
     return first_us, scenarios_steps / steady_s if steady_s > 0 else 0.0
 
 
+def _span_breakdown(verb: str, recs) -> Dict[str, float]:
+    """Compile-vs-dispatch split of one verb's first call, from its span
+    records: first-call wall time used to conflate XLA compilation with
+    the first dispatch; these fields pin them apart in the JSON."""
+    total = lambda name: sum(r.dur_us for r in recs if r.name == name)
+    first_disp = [r.dur_us for r in recs
+                  if r.name == "fleet.dispatch" and r.args.get("first")]
+    return {
+        f"{verb}_trace_lower_us": total("fleet.trace_lower"),
+        f"{verb}_compile_us": total("fleet.compile"),
+        f"{verb}_first_dispatch_us": first_disp[0] if first_disp else 0.0,
+    }
+
+
 def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
         seed: int = 0) -> Dict:
     """Per-bucket steady-state fleet throughput -> BENCH_fleet.json."""
@@ -82,14 +107,18 @@ def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
     runner = FleetRunner(FleetConfig(
         t_buckets=tuple(sorted({t for t, _, _ in buckets})),
         n_buckets=tuple(sorted({n for _, n, _ in buckets}))))
+    tracer = default_tracer()
     per_bucket: Dict[str, Dict[str, float]] = {}
     for t, n, per_family in buckets:
         scen = _fleet_for(t, n, per_family, seed)
         steps = len(scen) * t
+        n0 = len(tracer.records())
         sweep_first, sweep_tp = _throughput(
             lambda: runner.sweep(ALGORITHMS, scen, 1.0), steps)
+        n1 = len(tracer.records())
         sim_first, sim_tp = _throughput(
             lambda: runner.simulate(POLICIES, scen, cfg), steps)
+        recs = tracer.records()
         per_bucket[f"{t}x{n}"] = {
             "scenarios": len(scen),
             "steps_per_scenario": t,
@@ -97,6 +126,8 @@ def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
             "sweep_first_call_us": sweep_first,
             "simulate_scenario_steps_per_s": sim_tp,
             "simulate_first_call_us": sim_first,
+            **_span_breakdown("sweep", recs[n0:n1]),
+            **_span_breakdown("simulate", recs[n1:]),
         }
     report = BenchReport(
         kind="fleet",
@@ -107,7 +138,10 @@ def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
             "buckets": [list(b) for b in buckets],
         },
         families=per_bucket,
-        extra={"runner_stats": runner.stats()},
+        extra={
+            "runner_stats": runner.stats(),
+            "telemetry": telemetry_block(),
+        },
     )
     return report.write(BENCH_PATH)
 
@@ -152,9 +186,18 @@ def smoke(seed: int = 0) -> None:
 
     out = run(buckets=SMOKE_BUCKETS, seed=seed)
     assert os.path.exists(BENCH_PATH)
+
+    # Perfetto trace artifact: the whole smoke as a host timeline
+    trace = default_tracer().write(TRACE_PATH)
+    validate_chrome_trace(trace)
+    names = {ev["name"] for ev in trace["traceEvents"]}
+    for required in ("fleet.trace_lower", "fleet.compile", "fleet.dispatch"):
+        assert required in names, (
+            f"span {required!r} missing from the fleet trace: {names}")
     print(f"fleet smoke OK on {n_dev} device(s): sharded == single-device, "
           f"fleet == direct; wrote {BENCH_PATH} "
-          f"({sorted(out['families'])} buckets)")
+          f"({sorted(out['families'])} buckets); Perfetto trace "
+          f"({len(trace['traceEvents'])} events) -> {TRACE_PATH}")
 
 
 @section("fleet", prefixes=("fleet_",), bench_json="BENCH_fleet.json")

@@ -15,11 +15,20 @@ simulated (stream, step) for the batched twin vs the Python object loop
 (``serving/simulation.py``) on a same-sized workload.  The acceptance bar
 is a >= 50x advantage; on CPU the measured gap is orders of magnitude.
 
+The ``telemetry`` block of the JSON carries the flight-recorder view of
+the same run: host-side span summaries (``api.*`` / ``fleet.*``, compile
+split from dispatch) plus in-loop event counts from a telemetry-on
+``topic_lifecycle`` probe.  ``--smoke`` (CI) runs a tiny telemetry-on
+sweep end to end: decodes the event stream (must be non-empty), writes a
+Chrome/Perfetto trace to ``trace_lag_smoke.json`` and validates it --
+without touching the checked-in ``BENCH_lagsim.json``.
+
 Run:  PYTHONPATH=src:. python benchmarks/run.py          (lagsim_* rows)
-or    PYTHONPATH=src:. python benchmarks/lag_slo.py      (JSON only)
+or    PYTHONPATH=src:. python benchmarks/lag_slo.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import os
 import time
 from typing import Dict, Optional, Sequence
@@ -32,11 +41,14 @@ from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
 from repro.lagsim import LagSimConfig
 from repro.registry import list_policies
 from repro.serving import AutoscaleSimulation
+from repro.telemetry import (EventStream, TelemetryConfig, default_tracer,
+                             validate_chrome_trace)
 
-from benchmarks.sections import section
+from benchmarks.sections import section, telemetry_block
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_lagsim.json")
+TRACE_PATH = os.path.join(REPO_ROOT, "trace_lag_smoke.json")
 
 BATCH = 2
 ITERS = 48
@@ -91,6 +103,9 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
     jax_us = float(np.mean(list(seconds.values()))) * 1e6 / (
         len(policies) * batch * iters)
     py_us = _python_loop_us_per_step(n)
+    # flight-recorder probe: one telemetry-on lifecycle run for event
+    # counts (the timed sweep above stays recorder-free)
+    counts = _event_counts(policies[:2], batch, iters, n, seed)
     report = BenchReport(
         kind="lagsim",
         config={
@@ -100,14 +115,36 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
             "policies": list(policies), "families": list(suite),
         },
         families=per_family,
-        extra={"timing": {
-            "lagsim_us_per_stream_step": jax_us,
-            "python_us_per_step": py_us,
-            "speedup_vs_python": py_us / jax_us if jax_us > 0 else float("inf"),
-            "sweep_seconds_per_family": seconds,
-        }},
+        extra={
+            "timing": {
+                "lagsim_us_per_stream_step": jax_us,
+                "python_us_per_step": py_us,
+                "speedup_vs_python": (py_us / jax_us if jax_us > 0
+                                      else float("inf")),
+                "sweep_seconds_per_family": seconds,
+            },
+            "telemetry": telemetry_block(event_counts=counts),
+        },
     )
     return report.write(BENCH_PATH)
+
+
+def _event_counts(policies: Sequence[str], batch: int, iters: int, n: int,
+                  seed: int) -> Dict[str, int]:
+    """Aggregate decoded event counts of a telemetry-on ``topic_lifecycle``
+    fleet run (the churniest family: scale + migration + lifecycle)."""
+    from repro.core.scenarios import generate_masked_scenario
+
+    speeds, active = generate_masked_scenario(
+        "topic_lifecycle", jax.random.key(seed), batch, iters, n)
+    cfg = LagSimConfig(capacity=CAPACITY, dt=1.0, migration_steps=2,
+                       telemetry=TelemetryConfig())
+    res = default_fleet().simulate(policies, speeds, cfg, active=active)
+    counts: Dict[str, int] = {}
+    for frame in res.telemetry:
+        for kind, c in EventStream.from_frame(frame).counts().items():
+            counts[kind] = counts.get(kind, 0) + c
+    return counts
 
 
 @section("lagsim", prefixes=("lagsim_",), bench_json="BENCH_lagsim.json")
@@ -124,7 +161,33 @@ def _rows():
            f"{lag['timing']['speedup_vs_python']:.1f}")
 
 
+def smoke(seed: int = SEED) -> None:
+    """CI: a tiny telemetry-on sweep must yield a decodable, non-empty
+    event stream and a valid Perfetto trace.  Does not touch the
+    checked-in ``BENCH_lagsim.json``."""
+    policies = ("MBFP", "KEDA_LAG")
+    counts = _event_counts(policies, batch=2, iters=24, n=6, seed=seed)
+    assert counts, "telemetry-on smoke run decoded no events at all"
+    trace = default_tracer().write(TRACE_PATH)
+    validate_chrome_trace(trace)
+    span_names = {ev["name"] for ev in trace["traceEvents"]}
+    for required in ("fleet.simulate", "fleet.compile", "fleet.dispatch"):
+        assert required in span_names, (
+            f"span {required!r} missing from the smoke trace: {span_names}")
+    print(f"lag_slo smoke OK: events {counts}; "
+          f"valid Perfetto trace with {len(trace['traceEvents'])} events "
+          f"-> {TRACE_PATH}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny telemetry-on run: decode events, write + "
+                         "validate a Perfetto trace (no BENCH rewrite)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     out = run()
     t = out["timing"]
     print(f"wrote {BENCH_PATH}")

@@ -17,15 +17,20 @@ run; for the python reference just a cold call) from *steady-state* time
 (mean over ``reps`` warm calls): a jitted packer's first call is
 typically thousands of times slower than its steady state, and folding
 it in used to dominate the throughput rows.  The CSV reports steady-state
-microseconds in the ``us_per_call`` column and first-call microseconds
-in the ``derived`` column.
+microseconds in the ``us_per_call`` column, first-call microseconds in
+the ``derived`` column, and -- for the jitted/Pallas rows -- *dispatch-only*
+microseconds in the ``dispatch_us`` column: steady-state minus a no-op
+baseline of identical call structure (a jitted identity for one-shot
+rows, a no-op ``lax.scan`` of the same (B, T) geometry for sweep rows).
+That column is the pinned before-number for the ROADMAP megakernel item:
+it is the floor a fused kernel cannot beat without touching dispatch.
 
 Run:  PYTHONPATH=src:. python benchmarks/run.py      (packer_latency_* rows)
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +42,9 @@ from repro.kernels.ops import select_slot_batched
 from repro.registry import packer_for
 
 from benchmarks.sections import section
+
+#: (first_us, steady_us, dispatch_us | None) per row
+Row = Tuple[float, float, Optional[float]]
 
 
 def _time(fn, reps=5) -> Tuple[float, float]:
@@ -50,9 +58,34 @@ def _time(fn, reps=5) -> Tuple[float, float]:
     return first, (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def run(sizes=(50, 200, 500)) -> Dict[str, Tuple[float, float]]:
-    """-> {row_name: (first_call_us, steady_state_us)}."""
-    out = {}
+def _noop_call_us(example, reps: int = 20) -> float:
+    """Steady-state cost of dispatching a jitted identity on ``example``
+    -- the pure call-overhead baseline for one-shot rows."""
+    noop = jax.jit(lambda x: x)
+    _, steady = _time(lambda: jax.block_until_ready(noop(example)),
+                      reps=reps)
+    return steady
+
+
+def _noop_scan_us(traces, reps: int = 5) -> float:
+    """Steady-state cost of a no-op scan of the sweep's (B, T) geometry:
+    vmapped over streams, scanning the iteration axis, computing nothing."""
+
+    @jax.jit
+    def noop(tr):
+        def one(stream):                       # stream: (T, N)
+            return jax.lax.scan(
+                lambda c, x: (c, jnp.float32(0.0)), jnp.float32(0.0),
+                stream)[1]
+        return jax.vmap(one)(tr)
+
+    _, steady = _time(lambda: jax.block_until_ready(noop(traces)), reps=reps)
+    return steady
+
+
+def run(sizes=(50, 200, 500)) -> Dict[str, Row]:
+    """-> {row_name: (first_call_us, steady_state_us, dispatch_us|None)}."""
+    out: Dict[str, Row] = {}
     rng = np.random.default_rng(0)
     for n in sizes:
         speeds = rng.uniform(0, 1, n)
@@ -62,28 +95,35 @@ def run(sizes=(50, 200, 500)) -> Dict[str, Tuple[float, float]]:
 
         ref_bfd = packer_for("BFD", backend="py")
         ref_mbfp = packer_for("MBFP", backend="py")
+        # python reference rows: no jit dispatch, no dispatch column
         out[f"ref_BFD_n{n}_us"] = _time(
-            lambda: ref_bfd(sp, 1.0, prev=prev_map))
+            lambda: ref_bfd(sp, 1.0, prev=prev_map)) + (None,)
         out[f"ref_MBFP_n{n}_us"] = _time(
-            lambda: ref_mbfp(sp, 1.0, prev=prev_map))
+            lambda: ref_mbfp(sp, 1.0, prev=prev_map)) + (None,)
         sj = jnp.asarray(speeds, jnp.float32)
         pj = jnp.asarray(prev)
-        out[f"jax_BFD_n{n}_us"] = _time(
-            lambda: jax.block_until_ready(
-                pack_jax(sj, pj, 1.0, strategy="best", decreasing=True)))
-        out[f"jax_MBFP_n{n}_us"] = _time(
-            lambda: jax.block_until_ready(
+        noop = _noop_call_us(sj)
+        for name, fn in (
+            ("BFD", lambda: jax.block_until_ready(
+                pack_jax(sj, pj, 1.0, strategy="best", decreasing=True))),
+            ("MBFP", lambda: jax.block_until_ready(
                 modified_any_fit_jax(sj, pj, 1.0, fit="best",
-                                     sort_key="max_partition")))
+                                     sort_key="max_partition"))),
+        ):
+            first, steady = _time(fn)
+            out[f"jax_{name}_n{n}_us"] = (
+                first, steady, max(0.0, steady - noop))
 
     # batched sweep: B streams x T iterations in one program, us/iteration
     batch, iters, n = 8, 50, 20
     traces = generate_scenario("bursty", jax.random.key(0), batch, iters, n)
+    noop_scan = _noop_scan_us(traces)
     for algo in ("BFD", "MBFP"):
         first, us = _time(lambda: jax.block_until_ready(
             sweep_streams((algo,), traces, 1.0)), reps=3)
         out[f"sweep_{algo}_b{batch}xt{iters}_us_per_iter"] = (
-            first / (batch * iters), us / (batch * iters))
+            first / (batch * iters), us / (batch * iters),
+            max(0.0, us - noop_scan) / (batch * iters))
 
     # Pallas batched fit-select: one launch over the (B, N, M) grid
     b, ninst, m = 8, 512, 64
@@ -91,16 +131,22 @@ def run(sizes=(50, 200, 500)) -> Dict[str, Tuple[float, float]]:
     w = jnp.asarray(rng.uniform(0, 0.6, (b, ninst)), jnp.float32)
     k = jnp.asarray(rng.integers(0, m + 1, (b, ninst)), jnp.int32)
     cap = jnp.ones((b, ninst), jnp.float32)
+    noop_sel = _noop_call_us(loads)
     for strat in ("first", "best", "worst"):
-        out[f"pallas_select_{strat}_b{b}xn{ninst}_us"] = _time(
+        first, steady = _time(
             lambda: jax.block_until_ready(
                 select_slot_batched(loads, w, k, cap, strategy=strat)),
             reps=3)
+        out[f"pallas_select_{strat}_b{b}xn{ninst}_us"] = (
+            first, steady, max(0.0, steady - noop_sel))
     return out
 
 
 @section("packer_latency", prefixes=("packer_latency_",))
 def _rows():
-    # us_per_call = steady state; derived = first call (compile+run)
-    for name, (first_us, steady_us) in run().items():
-        yield f"packer_latency_{name},{steady_us:.1f},{first_us:.1f}"
+    # us_per_call = steady state; derived = first call (compile+run);
+    # dispatch_us = steady minus the no-op baseline (empty for py refs)
+    for name, (first_us, steady_us, dispatch_us) in run().items():
+        tail = "" if dispatch_us is None else f"{dispatch_us:.1f}"
+        yield (f"packer_latency_{name},{steady_us:.1f},{first_us:.1f},"
+               f"{tail}")

@@ -21,10 +21,32 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Callable, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
-HEADER = "name,us_per_call,derived"
+#: ``dispatch_us`` (dispatch-only steady time, see ``packer_latency``) is
+#: optional -- three-column rows are padded with an empty fourth field
+HEADER = "name,us_per_call,derived,dispatch_us"
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def telemetry_block(event_counts: Optional[Dict[str, int]] = None,
+                    extra: Optional[Dict[str, Any]] = None
+                    ) -> Dict[str, Any]:
+    """The shared ``telemetry`` block every ``BENCH_*.json`` carries:
+    per-span duration summary (first-call vs steady-state) from the
+    process-wide tracer, plus optional recorder event counts."""
+    from repro.telemetry.spans import default_tracer
+
+    tracer = default_tracer()
+    block: Dict[str, Any] = {
+        "spans": tracer.summary(),
+        "spans_dropped": tracer.dropped,
+    }
+    if event_counts is not None:
+        block["event_counts"] = dict(event_counts)
+    if extra:
+        block.update(extra)
+    return block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +81,7 @@ def emit_all(print_fn: Callable[[str], None] = print) -> None:
     a section declaring a ``bench_json`` artifact must actually (re)write
     it at the repo root during its run."""
     print_fn(HEADER)
+    n_cols = HEADER.count(",")
     for sec in SECTIONS:
         t0 = time.time()
         for row in sec.runner():
@@ -66,7 +89,12 @@ def emit_all(print_fn: Callable[[str], None] = print) -> None:
                 raise RuntimeError(
                     f"section {sec.name!r} emitted row {row.split(',')[0]!r} "
                     f"outside its declared prefixes {sec.prefixes}")
-            print_fn(row)
+            missing = n_cols - row.count(",")
+            if missing < 0:
+                raise RuntimeError(
+                    f"section {sec.name!r} emitted row {row.split(',')[0]!r} "
+                    f"with more fields than the header {HEADER!r}")
+            print_fn(row + "," * missing)   # pad optional trailing columns
         if sec.bench_json is not None:
             path = os.path.join(REPO_ROOT, sec.bench_json)
             if not os.path.exists(path) or os.path.getmtime(path) < t0 - 1.0:

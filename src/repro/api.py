@@ -50,6 +50,7 @@ from repro.registry import (
     make_policy,
     packer_for,
 )
+from repro.telemetry.spans import Tracer, default_tracer, span, traced
 
 #: schema version stamped on every result dataclass and BENCH_*.json
 API_VERSION = 1
@@ -60,8 +61,10 @@ __all__ = [
     "BenchReport",
     "ControlPlaneConfig",
     "default_fleet",
+    "default_tracer",
     "evaluate",
     "EvaluateOutcome",
+    "EventStream",
     "FAMILIES",
     "FleetConfig",
     "FleetRunner",
@@ -79,14 +82,21 @@ __all__ = [
     "selfcheck",
     "simulate",
     "SimulateOutcome",
+    "span",
     "sweep",
     "SweepOutcome",
+    "TelemetryConfig",
+    "TelemetryFrame",
+    "Tracer",
 ]
 
 #: fleet re-exports resolve lazily (keeps ``import repro.api`` jax-free)
 _FLEET_EXPORTS = ("FleetRunner", "FleetConfig")
 #: lagsim re-exports resolve lazily for the same reason
 _LAGSIM_EXPORTS = ("ControlPlaneConfig",)
+#: in-loop recorder re-exports (jax-backed) resolve lazily too; the span
+#: half of telemetry is stdlib-only and imported eagerly above
+_TELEMETRY_EXPORTS = ("TelemetryConfig", "TelemetryFrame", "EventStream")
 
 
 def __getattr__(name: str):
@@ -98,6 +108,10 @@ def __getattr__(name: str):
         from repro import lagsim as _lagsim
 
         return getattr(_lagsim, name)
+    if name in _TELEMETRY_EXPORTS:
+        from repro import telemetry as _telemetry
+
+        return getattr(_telemetry, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -157,6 +171,9 @@ class SimulateOutcome:
     lag_total: np.ndarray             # f32[P, B, T] raw trajectories
     consumers: np.ndarray             # i32[P, B, T]
     migrations: np.ndarray            # i32[P, B, T]
+    #: per-scenario recorder frames (``TelemetryFrame``) when the config
+    #: carries a ``TelemetryConfig``; decode with ``EventStream.from_frame``
+    telemetry: Optional[List[Any]] = None
     schema_version: int = API_VERSION
 
 
@@ -226,6 +243,7 @@ class BenchReport:
 # the five verbs
 # ---------------------------------------------------------------------------
 
+@traced("api.pack")
 def pack(speeds, capacity: float, *, algorithm: str = "BFD",
          prev: Optional[Mapping] = None, backend: str = "py") -> PackOutcome:
     """One packing decision with any registered packer.
@@ -270,6 +288,7 @@ def pack(speeds, capacity: float, *, algorithm: str = "BFD",
                        assignment=assignment, loads=loads, rscore=r)
 
 
+@traced("api.sweep")
 def sweep(traces, capacity: float = 1.0, *,
           algorithms: Optional[Sequence[str]] = None, active=None,
           fleet=None) -> SweepOutcome:
@@ -286,6 +305,7 @@ def sweep(traces, capacity: float = 1.0, *,
                         rscores=rscores, migrations=migrations)
 
 
+@traced("api.simulate")
 def simulate(traces, *, policies: Optional[Sequence[str]] = None,
              config=None, active=None, fleet=None, control_plane=None,
              **cfg_overrides) -> SimulateOutcome:
@@ -325,9 +345,11 @@ def simulate(traces, *, policies: Optional[Sequence[str]] = None,
     return SimulateOutcome(policies=res.policies, metrics=metrics,
                            lag_total=st["lag_total"],
                            consumers=st["consumers"],
-                           migrations=st["migrations"])
+                           migrations=st["migrations"],
+                           telemetry=res.telemetry)
 
 
+@traced("api.optimize")
 def optimize(speeds, prev=None, capacity: float = 1.0, *,
              lambdas: Sequence[float] = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0),
              restarts: int = 4, steps: int = 250, seed: int = 0,
@@ -359,6 +381,7 @@ def optimize(speeds, prev=None, capacity: float = 1.0, *,
                            heuristics=heur)
 
 
+@traced("api.evaluate")
 def evaluate(*, algorithms: Optional[Sequence[str]] = None,
              deltas: Sequence[int] = (5, 15, 25), n_partitions: int = 30,
              n_measurements: int = 120, capacity: float = 1.0,

@@ -47,6 +47,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core.jaxpack import _sweep_streams_impl
 from repro.lagsim.engine import LagSimConfig, _sweep_impl
 from repro.lagsim.metrics import slo_summary
+from repro.telemetry.record import TelemetryFrame
+from repro.telemetry.spans import instant as _instant
+from repro.telemetry.spans import span as _span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +97,12 @@ class FleetSweepResult:
                 np.stack(self.migrations, axis=1))
 
 
+#: trajectory fields of ``FleetLagResult`` (the stackable [P, T_i] arrays;
+#: ``policies`` is static and ``telemetry`` holds per-scenario frames)
+_TRAJ_FIELDS = ("lag_total", "lag_max", "consumers", "migrations",
+                "unreadable")
+
+
 @dataclasses.dataclass
 class FleetLagResult:
     """Per-scenario closed-loop trajectories, in input order ([P, T_i])."""
@@ -104,11 +113,15 @@ class FleetLagResult:
     consumers: List[np.ndarray]     # i32[P, T_i]
     migrations: List[np.ndarray]    # i32[P, T_i]
     unreadable: List[np.ndarray]    # i32[P, T_i]
+    #: per-scenario recorder frames (channels ``[P, T_i, K]``), present
+    #: iff the config's ``TelemetryConfig`` is on; decode each with
+    #: ``EventStream.from_frame``
+    telemetry: Optional[List[TelemetryFrame]] = None
 
     def stacked(self) -> Dict[str, np.ndarray]:
         """Stack a uniform-``T`` fleet into ``[P, B, T]`` arrays."""
-        return {f.name: np.stack(getattr(self, f.name), axis=1)
-                for f in dataclasses.fields(self) if f.name != "policies"}
+        return {name: np.stack(getattr(self, name), axis=1)
+                for name in _TRAJ_FIELDS}
 
     def summarize(self, cfg: LagSimConfig,
                   stacked: Optional[Dict[str, np.ndarray]] = None
@@ -139,16 +152,24 @@ class FleetRunner:
 
     def __init__(self, config: FleetConfig = FleetConfig()):
         self.config = config
-        self._cache: "OrderedDict[Any, Callable]" = OrderedDict()
+        # key -> (executable, bucket label); the label follows the entry
+        # so its eviction is charged to the right bucket
+        self._cache: "OrderedDict[Any, Tuple[Callable, str]]" = OrderedDict()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
         self._bucket_counts: Dict[Tuple[int, int], int] = {}
+        self._per_bucket: Dict[str, Dict[str, int]] = {}
+        self._dispatched: set = set()
 
     # -- observability ------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
-        """Snapshot: cache behaviour and scenarios executed per bucket."""
+        """Snapshot: cache behaviour and scenarios executed per bucket.
+
+        ``per_bucket`` breaks the global hit/miss/eviction counters down
+        by padded bucket label (``"TxN"``).
+        """
         return {
             "cache_entries": len(self._cache),
             "cache_hits": self._hits,
@@ -156,11 +177,24 @@ class FleetRunner:
             "cache_evictions": self._evictions,
             "buckets": {f"{t}x{n}": c
                         for (t, n), c in sorted(self._bucket_counts.items())},
+            "per_bucket": {b: dict(c)
+                           for b, c in sorted(self._per_bucket.items())},
             "devices": len(self._devices()),
         }
 
+    def reset(self) -> None:
+        """Zero every counter (global and per-bucket) without dropping
+        compiled executables -- warm cache, fresh statistics.  Use before
+        a measured region; ``clear()`` drops the executables too."""
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._bucket_counts.clear()
+        self._per_bucket.clear()
+
     def clear(self) -> None:
         self._cache.clear()
+        self._dispatched.clear()
 
     # -- internals ----------------------------------------------------------
 
@@ -168,19 +202,52 @@ class FleetRunner:
         return (self.config.devices if self.config.devices is not None
                 else tuple(jax.devices()))
 
-    def _compiled(self, key: Any, build: Callable[[], Callable]) -> Callable:
-        fn = self._cache.get(key)
-        if fn is not None:
+    def _bucket_stats(self, bucket: str) -> Dict[str, int]:
+        return self._per_bucket.setdefault(
+            bucket, {"hits": 0, "misses": 0, "evictions": 0})
+
+    def _compiled(self, key: Any, build: Callable[[], Callable],
+                  args: Tuple[Any, ...], bucket: str) -> Callable:
+        """Executable for ``key``, compiling ahead-of-time on a miss.
+
+        The jitted builder is lowered and compiled *here* (jax AOT), not
+        lazily on first call -- so ``fleet.trace_lower`` / ``fleet.compile``
+        spans carry the true compile cost and the first ``fleet.dispatch``
+        is a dispatch, nothing more (BENCH_fleet first-call times used to
+        conflate the two).
+        """
+        entry = self._cache.get(key)
+        if entry is not None:
             self._hits += 1
+            self._bucket_stats(bucket)["hits"] += 1
+            _instant("fleet.cache_hit", bucket=bucket)
             self._cache.move_to_end(key)
-            return fn
+            return entry[0]
         self._misses += 1
+        self._bucket_stats(bucket)["misses"] += 1
+        _instant("fleet.cache_miss", bucket=bucket)
         fn = build()
+        with _span("fleet.trace_lower", bucket=bucket):
+            lowered = fn.lower(*args)
+        with _span("fleet.compile", bucket=bucket):
+            compiled = lowered.compile()
         while len(self._cache) >= self.config.max_compile_cache:
-            self._cache.popitem(last=False)
+            _, (_, gone) = self._cache.popitem(last=False)
             self._evictions += 1
-        self._cache[key] = fn
-        return fn
+            self._bucket_stats(gone)["evictions"] += 1
+            _instant("fleet.cache_evict", bucket=gone)
+        self._cache[key] = (compiled, bucket)
+        return compiled
+
+    def _dispatch(self, key: Any, fn: Callable, args: Tuple[Any, ...],
+                  bucket: str):
+        """Run the executable under a ``fleet.dispatch`` span; the span's
+        ``first`` arg marks the first dispatch of this cache key (still
+        distinct from compile, which happened in ``_compiled``)."""
+        first = key not in self._dispatched
+        self._dispatched.add(key)
+        with _span("fleet.dispatch", bucket=bucket, first=first):
+            return jax.block_until_ready(fn(*args))
 
     def _normalize(self, scenarios, active) -> List[Tuple[jax.Array,
                                                           Optional[jax.Array]]]:
@@ -307,9 +374,11 @@ class FleetRunner:
     def _run_sweep(self, algorithms, speeds, act, capacity, tb: int, nb: int):
         speeds, act = self._device_put(speeds, act)
         key = ("sweep", algorithms, tb, nb, act is not None, speeds.shape[0])
+        bucket = f"{tb}x{nb}"
+        args = (speeds, jnp.float32(capacity), act)
         fn = self._compiled(key, lambda: jax.jit(functools.partial(
-            _sweep_streams_impl, algorithms)))
-        res = fn(speeds, capacity, act)
+            _sweep_streams_impl, algorithms)), args, bucket)
+        res = self._dispatch(key, fn, args, bucket)
         return (np.asarray(res.bins), np.asarray(res.rscores),
                 np.asarray(res.migrations))
 
@@ -322,6 +391,11 @@ class FleetRunner:
         active)`` entries of heterogeneous shape.  Results come back
         sliced to each scenario's true ``(T_i,)`` length, in input order.
         """
+        with _span("fleet.sweep", algorithms=len(algorithms)):
+            return self._sweep(algorithms, scenarios, capacity, active)
+
+    def _sweep(self, algorithms, scenarios, capacity, active
+               ) -> FleetSweepResult:
         algorithms = tuple(a.upper() for a in algorithms)
         n_dev = self._n_dev()
         fast = self._uniform_batch(scenarios, active, n_dev)
@@ -352,17 +426,38 @@ class FleetRunner:
         return FleetSweepResult(algorithms=algorithms, bins=out_bins,
                                 rscores=out_rs, migrations=out_migs)
 
-    _SIM_FIELDS = ("lag_total", "lag_max", "consumers", "migrations",
-                   "unreadable")
+    _SIM_FIELDS = _TRAJ_FIELDS
 
     def _run_sim(self, policies, speeds, act, rcfg, tb: int, nb: int):
         speeds, act = self._device_put(speeds, act)
         key = ("simulate", policies, tb, nb, act is not None, rcfg,
                speeds.shape[0])
+        bucket = f"{tb}x{nb}"
+        args = (speeds, act)
         fn = self._compiled(key, lambda: jax.jit(
-            lambda tr, ac: _sweep_impl(policies, tr, rcfg, ac)))
-        res = fn(speeds, act)
-        return {f: np.asarray(getattr(res, f)) for f in self._SIM_FIELDS}
+            lambda tr, ac: _sweep_impl(policies, tr, rcfg, ac)), args, bucket)
+        res = self._dispatch(key, fn, args, bucket)
+        arrays = {f: np.asarray(getattr(res, f)) for f in self._SIM_FIELDS}
+        tele = res.telemetry
+        if tele is not None:
+            tele = TelemetryFrame(
+                channels=np.asarray(tele.channels),   # [P, B, T, K]
+                steps=np.asarray(tele.steps),         # [P, B, T]
+                count=np.asarray(tele.count),         # [P, B]
+                names=tele.names)
+        return arrays, tele
+
+    @staticmethod
+    def _scenario_frame(tele: TelemetryFrame, slot: int,
+                        t: int) -> TelemetryFrame:
+        """Slice one scenario's frame out of a batch frame, trimming the
+        padded timesteps (the recorder ran tb steps; only the scenario's
+        true first ``t`` are its history)."""
+        return TelemetryFrame(
+            channels=tele.channels[:, slot, :t],
+            steps=tele.steps[:, slot, :t],
+            count=np.minimum(tele.count[:, slot], t),
+            names=tele.names)
 
     def simulate(self, policies: Sequence[str], scenarios,
                  cfg: LagSimConfig = LagSimConfig(), *,
@@ -375,29 +470,52 @@ class FleetRunner:
         ``cfg.control_plane`` (scaler friction emulation) rides inside
         the hashable config, so it participates in bucket/compile-cache
         keys automatically and bucketing stays behavior-preserving.
+        With ``cfg.telemetry`` on, the result carries one recorder frame
+        per scenario (``FleetLagResult.telemetry``), sliced to true
+        length like every other trajectory.
         """
+        with _span("fleet.simulate", policies=len(policies)):
+            return self._simulate(policies, scenarios, cfg, active)
+
+    def _simulate(self, policies, scenarios, cfg: LagSimConfig,
+                  active) -> FleetLagResult:
+        if cfg.telemetry is not None and cfg.telemetry.ring is not None:
+            raise ValueError(
+                "TelemetryConfig.ring is not supported through FleetRunner: "
+                "a ring holds the *last* ring steps, which for a T-padded "
+                "scenario are padding, not history; use the full-history "
+                "recorder (ring=None) here, or run simulate_lag directly "
+                "for ring capture")
         policies = tuple(p.upper() for p in policies)
         n_dev = self._n_dev()
         fast = self._uniform_batch(scenarios, active, n_dev)
         if fast is not None:
             speeds, act = fast
             b, t, n = speeds.shape
-            arrays = self._run_sim(policies, speeds, act, cfg.resolve(n),
-                                   t, n)
+            arrays, tele = self._run_sim(policies, speeds, act,
+                                         cfg.resolve(n), t, n)
             return FleetLagResult(policies=policies, **{
                 f: [arrays[f][:, i] for i in range(b)]
-                for f in self._SIM_FIELDS})
+                for f in self._SIM_FIELDS},
+                telemetry=None if tele is None else [
+                    self._scenario_frame(tele, i, t) for i in range(b)])
         items = self._normalize(scenarios, active)
         outs: Dict[str, List[Optional[np.ndarray]]] = {
             f: [None] * len(items) for f in self._SIM_FIELDS}
+        tele_out: List[Optional[TelemetryFrame]] = [None] * len(items)
+        any_tele = False
         groups = self._group(items,
                              extra_key=lambda sp, ac: (cfg.resolve(sp.shape[1]),))
         for (tb, nb, use_mask, rcfg), members in groups.items():
             speeds, act = self._pad_and_stack(members, tb, nb, use_mask,
                                               n_dev)
-            arrays = self._run_sim(policies, speeds, act, rcfg, tb, nb)
+            arrays, tele = self._run_sim(policies, speeds, act, rcfg, tb, nb)
             for slot, (idx, sp, _) in enumerate(members):
                 t = sp.shape[0]
                 for f in self._SIM_FIELDS:
                     outs[f][idx] = arrays[f][:, slot, :t]
-        return FleetLagResult(policies=policies, **outs)
+                if tele is not None:
+                    any_tele = True
+                    tele_out[idx] = self._scenario_frame(tele, slot, t)
+        return FleetLagResult(policies=policies, **outs,
+                              telemetry=tele_out if any_tele else None)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.telemetry.spans import span as _span
+
 from ._compat import CompilerParams as _CompilerParams
 from ._compat import default_interpret as _default_interpret
 
@@ -110,7 +112,7 @@ def select_slot_grid(loads, w, k, capacity, *, active=None,
     if masked:
         in_specs.append(row_spec)
         args.append(active.astype(jnp.int32))
-    out = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(b, n_pad // rows),
         in_specs=in_specs,
@@ -119,8 +121,13 @@ def select_slot_grid(loads, w, k, capacity, *, active=None,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(*args)
-    return out[:, :n]
+    )
+    if isinstance(loads, jax.core.Tracer):
+        # under a jit trace the launch is timed by the caller's spans
+        return call(*args)[:, :n]
+    with _span("kernel.select_slot", batch=b, n=n, m=m, strategy=strategy,
+               interpret=bool(interpret)):
+        return call(*args)[:, :n]
 
 
 def select_slot_batch(loads, w, k, capacity, *, active=None,

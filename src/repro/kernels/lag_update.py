@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.telemetry.spans import span as _span
+
 from ._compat import CompilerParams as _CompilerParams
 from ._compat import default_interpret as _default_interpret
 
@@ -123,7 +125,7 @@ def lag_update_batch(lag, produced, assign, readable, cap, *, active=None,
     if masked:
         in_specs.append(n_spec)
         args.append(active.astype(jnp.int32))
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=in_specs,
@@ -131,4 +133,11 @@ def lag_update_batch(lag, produced, assign, readable, cap, *, active=None,
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(*args)
+    )
+    if isinstance(lag, jax.core.Tracer):
+        # inside a jit trace: launch cost belongs to the enclosing
+        # fleet.compile / fleet.dispatch spans, not a per-step host span
+        return call(*args)
+    with _span("kernel.lag_update", batch=b, n=n, m=m,
+               interpret=bool(interpret)):
+        return call(*args)

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.telemetry.spans import span as _span
+
 from ._compat import CompilerParams as _CompilerParams
 from ._compat import default_interpret as _default_interpret
 
@@ -159,7 +161,7 @@ def move_delta_batch(loads, counts, assign, speeds, prev, lam, cap, *,
     if masked:
         in_specs.append(n_spec)
         args.append(active.astype(jnp.int32))
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(k,),
         in_specs=in_specs,
@@ -167,4 +169,10 @@ def move_delta_batch(loads, counts, assign, speeds, prev, lam, cap, *,
         out_shape=jax.ShapeDtypeStruct((k, n, m), jnp.float32),
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(*args)
+    )
+    if isinstance(loads, jax.core.Tracer):
+        # under a jit trace the launch is timed by the caller's spans
+        return call(*args)
+    with _span("kernel.move_eval", chains=k, n=n, m=m,
+               interpret=bool(interpret)):
+        return call(*args)

@@ -41,6 +41,10 @@ from repro.kernels.lag_update import lag_update_batch, lag_update_reference
 from repro.lagsim.controlplane import (ControlPlaneConfig, ControlPlaneState,
                                        wrap_policy)
 from repro.registry import make_policy
+from repro.telemetry.record import (CounterState, TelemetryConfig,
+                                    TelemetryFrame, frame_from_outputs,
+                                    frame_from_ring, record_step, ring_init,
+                                    ring_write)
 
 NEG = -1
 
@@ -65,6 +69,12 @@ class LagSimConfig:
     slo_lag: Optional[float] = None          # metrics threshold (bytes)
     use_kernel: bool = False                 # Pallas fused update in the scan
     control_plane: Optional[ControlPlaneConfig] = None  # scaler friction
+    telemetry: Optional[TelemetryConfig] = None  # in-loop flight recorder
+
+    @property
+    def telemetry_on(self) -> bool:
+        """True when the in-loop recorder captures this config's runs."""
+        return self.telemetry is not None and self.telemetry.enabled
 
     @property
     def slo_lag_or_default(self) -> float:
@@ -82,6 +92,12 @@ class LagSimConfig:
                 f"control_plane must be a ControlPlaneConfig (or None), got "
                 f"{type(self.control_plane).__name__}; build one via "
                 f"repro.api.ControlPlaneConfig(...)")
+        if (self.telemetry is not None
+                and not isinstance(self.telemetry, TelemetryConfig)):
+            raise ValueError(
+                f"telemetry must be a TelemetryConfig (or None), got "
+                f"{type(self.telemetry).__name__}; build one via "
+                f"repro.api.TelemetryConfig(...)")
         return dataclasses.replace(
             self,
             lag_threshold=(self.lag_threshold if self.lag_threshold is not None
@@ -95,13 +111,18 @@ class LagSimConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class LagTrace:
-    """Per-step trajectories of one simulated stream (axes ``[..., T]``)."""
+    """Per-step trajectories of one simulated stream (axes ``[..., T]``).
+
+    ``telemetry`` is the in-loop flight-recorder frame when the config's
+    ``TelemetryConfig`` is on (``None`` otherwise -- the recorder-free
+    path is bit-identical to the pre-telemetry engine)."""
 
     lag_total: jax.Array    # f32  total backlog after draining
     lag_max: jax.Array      # f32  worst single-partition backlog
     consumers: jax.Array    # i32  consumers billed this step
     migrations: jax.Array   # i32  partitions that changed owner
     unreadable: jax.Array   # i32  partitions in migration downtime
+    telemetry: Optional[TelemetryFrame] = None  # recorder frame [.., R, K]
 
 
 @jax.tree_util.register_dataclass
@@ -115,11 +136,18 @@ class LagSweepResult:
     migrations: jax.Array   # i32[P, B, T]
     unreadable: jax.Array   # i32[P, B, T]
     policies: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    telemetry: Optional[TelemetryFrame] = None  # frame [P, B, R, K]
 
     def for_policy(self, name: str) -> LagTrace:
         p = self.policies.index(name.upper())
+        tele = self.telemetry
+        if tele is not None:
+            tele = TelemetryFrame(channels=tele.channels[p],
+                                  steps=tele.steps[p], count=tele.count[p],
+                                  names=tele.names)
         return LagTrace(self.lag_total[p], self.lag_max[p], self.consumers[p],
-                        self.migrations[p], self.unreadable[p])
+                        self.migrations[p], self.unreadable[p],
+                        telemetry=tele)
 
 
 def _check_rates_shape(rates, n: int, what: str, array_name: str) -> None:
@@ -147,6 +175,14 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     With ``record_assign=True`` the per-step assignment ``i32[T, N]`` is
     recorded alongside the trace and a ``(LagTrace, assigns)`` pair is
     returned (regression goldens pin full trajectories this way).
+
+    With ``cfg.telemetry`` on, the flight recorder threads a fixed-shape
+    channel vector through the scan (an extra scan output, or a carried
+    ring buffer when ``telemetry.ring`` is set) and the returned
+    ``LagTrace.telemetry`` holds the recorded ``TelemetryFrame``.  The
+    recorder only *reads* values the step already computes, so telemetry
+    on/off never changes the simulated trajectories, and the off path
+    emits the exact pre-telemetry jaxpr.
     """
     n = trace.shape[1]
     m = 2 * n + 2                       # packer bin-name universe
@@ -173,6 +209,9 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     # step marker keeps self-wrapped (REAL) policies storm-correct even
     # when cfg.control_plane is None
     has_cp = getattr(policy_step, "_controlplane_wrapped", False)
+    tele = cfg.telemetry if cfg.telemetry_on else None
+    ring_mode = tele is not None and tele.ring is not None
+    tele_names: list = [None]        # filled at trace time by record_step
 
     def drain(lag, produced, assign, readable, act_t):
         if cfg.use_kernel:
@@ -186,7 +225,10 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
                                     cap_step, m=m, active=act_t)
 
     def step(carry, xs):
-        lag, assign, down, pstate = carry
+        if ring_mode:
+            lag, assign, down, pstate, tick, rbuf = carry
+        else:
+            lag, assign, down, pstate = carry
         if active is None:
             rate_t, act_t = xs, None
             produced = rate_t * jnp.float32(cfg.dt)
@@ -206,31 +248,61 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
                          jnp.maximum(down - 1, 0))
         readable = (down == 0) & (new_assign >= 0)
         blocked = down > 0
+        storm_mask = None
         if has_cp:
             # rebalance storm: partitions on a warming consumer are
             # unreadable while that consumer rejoins the group
             storm = pstate.warming > 0
             readable = readable & ~storm
-            blocked = blocked | (storm & (new_assign >= 0))
+            storm_mask = storm & (new_assign >= 0)
+            blocked = blocked | storm_mask
         new_lag = drain(lag, produced, new_assign, readable, act_t)
         unreadable = blocked if act_t is None else (blocked & act_t)
         ys = (jnp.sum(new_lag), jnp.max(new_lag),
               n_active.astype(jnp.int32),
               jnp.sum(moved.astype(jnp.int32)),
               jnp.sum(unreadable.astype(jnp.int32)))
+        if tele is not None:
+            if storm_mask is not None and act_t is not None:
+                storm_mask = storm_mask & act_t
+            vec, tele_names[0] = record_step(
+                tele, speeds=rate_t, new_lag=new_lag, moved=moved,
+                blocked=unreadable, storm=storm_mask, n_consumers=n_active,
+                act_t=act_t, capacity=cfg.capacity, pstate=pstate)
+            if not ring_mode:
+                ys = ys + (vec,)
         if record_assign:
             ys = ys + (new_assign,)
-        return (new_lag, new_assign, down, pstate), ys
+        new_carry = (new_lag, new_assign, down, pstate)
+        if ring_mode:
+            new_carry = new_carry + (tick + 1, ring_write(rbuf, tick, vec))
+        return new_carry, ys
 
     xs = (trace.astype(jnp.float32) if active is None
           else (trace.astype(jnp.float32), active.astype(bool)))
     carry0 = (initial_lag.astype(jnp.float32), jnp.full(n, NEG, jnp.int32),
               jnp.zeros(n, jnp.int32), init(n))
-    _, ys = lax.scan(step, carry0, xs)
+    if ring_mode:
+        pstate0 = carry0[3]
+        k = len(tele.base_channels) + (len(pstate0.names)
+                                       if isinstance(pstate0, CounterState)
+                                       else 0)
+        carry0 = carry0 + (jnp.int32(0), ring_init(tele, k))
+    carry_end, ys = lax.scan(step, carry0, xs)
     tot, mx, cons, migs, unread = ys[:5]
+    idx = 5
+    frame = None
+    if tele is not None:
+        t_total = trace.shape[0]
+        if ring_mode:
+            frame = frame_from_ring(tele, tele_names[0], carry_end[5],
+                                    t_total)
+        else:
+            frame = frame_from_outputs(tele, tele_names[0], ys[idx], t_total)
+            idx += 1
     out = LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
-                   migrations=migs, unreadable=unread)
-    return (out, ys[5]) if record_assign else out
+                   migrations=migs, unreadable=unread, telemetry=frame)
+    return (out, ys[idx]) if record_assign else out
 
 
 @functools.partial(jax.jit,
@@ -295,11 +367,23 @@ def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,
                 traces, active)
             for p in policies
         ]
+    frames = [tr.telemetry for tr in per_policy]
+    if any(f is not None for f in frames):
+        # stacking telemetry across policies needs one channel universe;
+        # fail with names, not a cryptic treedef mismatch from tree_map
+        per_names = {p: (None if f is None else f.names)
+                     for p, f in zip(policies, frames)}
+        if len(set(per_names.values())) != 1:
+            raise ValueError(
+                f"policies in one sweep must record identical telemetry "
+                f"channels (custom CounterState counters differ): "
+                f"{per_names}; sweep them separately via simulate_lag")
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_policy)
     return LagSweepResult(
         lag_total=stacked.lag_total, lag_max=stacked.lag_max,
         consumers=stacked.consumers, migrations=stacked.migrations,
-        unreadable=stacked.unreadable, policies=policies)
+        unreadable=stacked.unreadable, policies=policies,
+        telemetry=stacked.telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("policies", "cfg"))

@@ -25,6 +25,15 @@ they all register through:
   inside the lag twin's jitted scan; ``py``-backend policies satisfy the
   same signature on numpy arrays (reference semantics, used by the
   controller and the parity tests).
+
+  A policy may publish custom per-step counters to the in-loop flight
+  recorder by wrapping its state as
+  ``repro.telemetry.CounterState(counters=f32[K], inner=state,
+  names=(...))``: when ``LagSimConfig.telemetry`` is on, the engine
+  appends those named counters to every recorded step's channel vector
+  (see ``repro.telemetry.record``).  Policies that don't care keep
+  returning their plain state -- the recorder only adds its base
+  channels then.
 * ``register``     -- decorator that publishes a builder
   ``(n, capacity, **hyperparams) -> (init, step)`` under a spec.
 * ``make_policy``  -- ``name -> Policy`` with hyperparameter overrides.

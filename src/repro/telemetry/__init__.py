@@ -1,0 +1,48 @@
+"""Flight-recorder telemetry: in-loop trace capture + host-side spans.
+
+Two halves (see the submodule docstrings for the design):
+
+* ``telemetry.record`` -- the scan-safe in-loop recorder.  Enable it by
+  putting a :class:`TelemetryConfig` on ``LagSimConfig.telemetry``; the
+  engine then threads a fixed-shape channel vector through the scan and
+  returns a :class:`TelemetryFrame` on every trace, decodable into typed
+  events (:func:`decode_events` / :class:`EventStream`).  Off (the
+  default) is bit-identical to the recorder-free engine.
+* ``telemetry.spans`` -- host-side span profiling (:func:`span`,
+  :func:`traced`, :class:`Tracer`) with first-call vs steady-state
+  separation and Chrome/Perfetto ``trace_event`` export.
+
+``spans`` is stdlib-only and imported eagerly; ``record`` needs jax and
+resolves lazily, so ``import repro.telemetry`` stays cheap.
+"""
+from .spans import (SpanRecord, Tracer, default_tracer, instant, span,
+                    traced, validate_chrome_trace)
+
+_RECORD_EXPORTS = (
+    "BASE_CHANNELS",
+    "CounterState",
+    "EventStream",
+    "TelemetryConfig",
+    "TelemetryEvent",
+    "TelemetryFrame",
+    "decode_events",
+)
+
+
+def __getattr__(name: str):
+    if name in _RECORD_EXPORTS:
+        from . import record as _record
+
+        return getattr(_record, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = sorted(_RECORD_EXPORTS + (
+    "SpanRecord",
+    "Tracer",
+    "default_tracer",
+    "instant",
+    "span",
+    "traced",
+    "validate_chrome_trace",
+))
