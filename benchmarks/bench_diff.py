@@ -9,9 +9,15 @@ leaves by path, and classifies each pair by its key name:
   ``*speedup*``): a regression is NEW < OLD by more than ``threshold``;
 * **lower-is-better** -- latency/time leaves (``*_us``, ``*_seconds``,
   ``*us_per*``): a regression is NEW > OLD by more than ``threshold``;
-* everything else (counts, configs, SLO metrics) is compared for
-  information only and never gates -- those belong to correctness tests,
-  not a perf gate.
+* **incident leaves** -- anything under the ``observability`` probe's
+  incident roll-ups (``*incident*`` in the path): lower is better, and
+  -- unlike perf leaves -- a zero baseline still gates, with the
+  relative change floored at one incident, so a run that starts paging
+  (0 -> 1 SLO-burn incidents) fails the gate even though 0 has no
+  well-defined relative change;
+* everything else (counts, configs, SLO metrics, sketch means) is
+  compared for information only and never gates -- those belong to
+  correctness tests, not a perf gate.
 
 Compile/trace-time leaves (``*compile*``, ``*trace_lower*``,
 ``*first_call*``) are informational too: first-call cost is environment
@@ -20,7 +26,9 @@ noise on shared CI hosts; the gate watches steady state.
 Exit status: 0 = no regressions, 1 = at least one regression (or a
 malformed/missing input).  ``--smoke`` self-checks the gate against the
 checked-in artifacts: each file diffed against itself must produce zero
-regressions, and an injected 50% throughput drop must be detected.
+regressions, an injected 50% throughput drop must be detected, and an
+injected incident storm (every incident count/duration worsened) must
+be detected via the incident leaves.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_diff.py OLD.json NEW.json
 or    PYTHONPATH=src:. python benchmarks/bench_diff.py --smoke
@@ -49,6 +57,11 @@ HIGHER_SUFFIXES = ("_per_s",)
 HIGHER_FRAGMENTS = ("speedup",)
 LOWER_SUFFIXES = ("_us", "_seconds")
 LOWER_FRAGMENTS = ("us_per",)
+#: alerting leaves (the ``observability`` block's per-rule roll-ups):
+#: matched on the full path and checked *before* the informational
+#: fragments, so e.g. a probe nested under a ``telemetry`` block still
+#: gates -- more incidents / longer burn than the baseline = regression
+INCIDENT_FRAGMENTS = ("incident",)
 #: never gate on these even when they look like perf leaves:
 #: first-call/compile cost is host noise (the gate watches steady
 #: state), ``consumer_seconds`` is a paper SLO metric (correctness tests
@@ -70,8 +83,10 @@ def _leaves(tree: Any, path: Tuple[str, ...] = ()
 
 
 def _direction(path: Tuple[str, ...]) -> str:
-    """-> 'higher' | 'lower' | 'info' for one leaf path."""
+    """-> 'higher' | 'lower' | 'incident' | 'info' for one leaf path."""
     joined = "/".join(path).lower()
+    if any(frag in joined for frag in INCIDENT_FRAGMENTS):
+        return "incident"
     if any(frag in joined for frag in INFORMATIONAL):
         return "info"
     key = path[-1].lower()
@@ -99,11 +114,16 @@ def diff(old: Dict, new: Dict, threshold: float = DEFAULT_THRESHOLD
         a, b = old_leaves[path], new_leaves[path]
         direction = _direction(path)
         name = "/".join(path)
-        if direction == "info" or a == 0.0:
+        if direction == "info" or (a == 0.0 and direction != "incident"):
             out["info"].append((name, a, b, 0.0))
             continue
-        rel = (b - a) / abs(a)
-        worse = -rel if direction == "higher" else rel
+        if direction == "incident":
+            # lower is better; the denominator floor of one incident
+            # keeps a zero baseline gateable (0 -> 1 incident = +100%)
+            worse = (b - a) / max(abs(a), 1.0)
+        else:
+            rel = (b - a) / abs(a)
+            worse = -rel if direction == "higher" else rel
         if worse > threshold:
             out["regressions"].append((name, a, b, worse))
         elif worse < -threshold:
@@ -164,11 +184,52 @@ def _inject_throughput_regression(report: Dict, factor: float = 0.5) -> Dict:
     return out
 
 
-def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
-    """Self-check against the checked-in artifacts: identity diffs must
-    pass, an injected 50% throughput regression must fail."""
+def _inject_incident_regression(report: Dict, extra: float = 3.0) -> Dict:
+    """A copy of ``report`` with every incident leaf worsened
+    (``2x + extra``): the additive term makes even zero-baseline
+    incident counts regress, which the gate must catch."""
+    out = copy.deepcopy(report)
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            p = path + (str(k),)
+            if isinstance(v, dict):
+                walk(v, p)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if _direction(p) == "incident":
+                    node[k] = v * 2 + extra
+
+    walk(out, ())
+    return out
+
+
+def _expect_fail(path: str, hurt: Dict, threshold: float, what: str) -> int:
+    """Diff ``path`` against the injected ``hurt`` report; 0 iff the gate
+    correctly reported at least one regression."""
     import tempfile
 
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as tmp:
+        json.dump(hurt, tmp)
+        hurt_path = tmp.name
+    try:
+        code = run_diff(path, hurt_path, threshold, quiet=True)
+    finally:
+        os.unlink(hurt_path)
+    if code == 0:
+        print(f"bench_diff smoke: injected {what} in "
+              f"{os.path.basename(path)} was NOT detected", file=sys.stderr)
+        return 1
+    return 0
+
+
+def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
+    """Self-check against the checked-in artifacts: identity diffs must
+    pass; an injected 50% throughput regression and an injected incident
+    storm must both fail."""
+    incident_checked = 0
     for name in SMOKE_ARTIFACTS:
         path = os.path.join(REPO_ROOT, name)
         if not os.path.exists(path):
@@ -187,20 +248,22 @@ def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
             print(f"bench_diff smoke: {name} has no gated perf leaves; "
                   f"the gate would be vacuous", file=sys.stderr)
             return 1
-        with tempfile.NamedTemporaryFile("w", suffix=".json",
-                                         delete=False) as tmp:
-            json.dump(hurt, tmp)
-            hurt_path = tmp.name
-        try:
-            code = run_diff(path, hurt_path, threshold, quiet=True)
-        finally:
-            os.unlink(hurt_path)
-        if code == 0:
-            print(f"bench_diff smoke: injected 50% regression in {name} "
-                  f"was NOT detected", file=sys.stderr)
+        if _expect_fail(path, hurt, threshold, "50% throughput regression"):
             return 1
+        stormed = _inject_incident_regression(report)
+        if stormed != report:
+            incident_checked += 1
+            if _expect_fail(path, stormed, threshold, "incident storm"):
+                return 1
+    if incident_checked == 0:
+        print("bench_diff smoke: no artifact carries incident leaves; the "
+              "incident gate would be vacuous (run the benchmarks to "
+              "regenerate the observability blocks)", file=sys.stderr)
+        return 1
     print(f"bench_diff smoke OK: identity diffs clean, injected 50% "
-          f"throughput regressions detected ({', '.join(SMOKE_ARTIFACTS)})")
+          f"throughput regressions detected, injected incident storms "
+          f"detected in {incident_checked} artifact(s) "
+          f"({', '.join(SMOKE_ARTIFACTS)})")
     return 0
 
 

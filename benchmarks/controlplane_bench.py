@@ -48,7 +48,7 @@ from repro.api import BenchReport, ControlPlaneConfig, default_fleet
 from repro.core.scenarios import SCENARIO_FAMILIES, scenario_suite
 from repro.lagsim import LagSimConfig
 
-from benchmarks.sections import section, telemetry_block
+from benchmarks.sections import observability_block, section, telemetry_block
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_controlplane.json")
@@ -152,7 +152,8 @@ def run(policies: Sequence[str] = POLICIES,
                      for label, cp in configs.items()},
         },
         families=per_config,
-        extra={"telemetry": telemetry_block()},
+        extra={"telemetry": telemetry_block(),
+               "observability": observability_block(seed=seed)},
     )
     out = report.as_dict()
     if write:

@@ -47,7 +47,7 @@ from repro.fleet import FleetConfig, FleetRunner
 from repro.lagsim import LagSimConfig
 from repro.telemetry import default_tracer, validate_chrome_trace
 
-from benchmarks.sections import section, telemetry_block
+from benchmarks.sections import observability_block, section, telemetry_block
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_fleet.json")
@@ -141,6 +141,7 @@ def run(buckets: Sequence[Tuple[int, int, int]] = BUCKETS,
         extra={
             "runner_stats": runner.stats(),
             "telemetry": telemetry_block(),
+            "observability": observability_block(seed=seed),
         },
     )
     return report.write(BENCH_PATH)

@@ -44,11 +44,13 @@ from repro.serving import AutoscaleSimulation
 from repro.telemetry import (EventStream, TelemetryConfig, default_tracer,
                              validate_chrome_trace)
 
-from benchmarks.sections import section, telemetry_block
+from benchmarks.sections import observability_block, section, telemetry_block
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_lagsim.json")
 TRACE_PATH = os.path.join(REPO_ROOT, "trace_lag_smoke.json")
+PROM_PATH = os.path.join(REPO_ROOT, "metrics_lag_smoke.prom")
+INCIDENTS_PATH = os.path.join(REPO_ROOT, "incidents_lag_smoke.json")
 
 BATCH = 2
 ITERS = 48
@@ -124,6 +126,7 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
                 "sweep_seconds_per_family": seconds,
             },
             "telemetry": telemetry_block(event_counts=counts),
+            "observability": observability_block(seed=seed),
         },
     )
     return report.write(BENCH_PATH)
@@ -163,8 +166,19 @@ def _rows():
 
 def smoke(seed: int = SEED) -> None:
     """CI: a tiny telemetry-on sweep must yield a decodable, non-empty
-    event stream and a valid Perfetto trace.  Does not touch the
-    checked-in ``BENCH_lagsim.json``."""
+    event stream and a valid Perfetto trace; a sketch+alerts run through
+    ``repro.api.simulate`` must export a lintable Prometheus scrape body
+    (``metrics_lag_smoke.prom``) and a decoded incident JSON
+    (``incidents_lag_smoke.json``), both uploaded as CI artifacts.  Does
+    not touch the checked-in ``BENCH_lagsim.json``."""
+    import json
+
+    from repro.api import simulate
+    from repro.telemetry import (AlertConfig, SketchConfig, TelemetryConfig,
+                                 default_rules, merge_summaries,
+                                 prometheus_exposition, validate_exposition)
+    from repro.core.scenarios import generate_masked_scenario
+
     policies = ("MBFP", "KEDA_LAG")
     counts = _event_counts(policies, batch=2, iters=24, n=6, seed=seed)
     assert counts, "telemetry-on smoke run decoded no events at all"
@@ -174,9 +188,33 @@ def smoke(seed: int = SEED) -> None:
     for required in ("fleet.simulate", "fleet.compile", "fleet.dispatch"):
         assert required in span_names, (
             f"span {required!r} missing from the smoke trace: {span_names}")
+
+    # sketch + alerts end to end: simulate -> export -> lint
+    speeds, active = generate_masked_scenario(
+        "topic_lifecycle", jax.random.key(seed), 2, 24, 6)
+    out = simulate(speeds, policies=policies, active=active,
+                   capacity=CAPACITY, migration_steps=2,
+                   telemetry=TelemetryConfig(
+                       record_frames=False, sketch=SketchConfig(),
+                       alerts=AlertConfig(rules=default_rules())))
+    assert out.sketches is not None and out.incidents is not None
+    merged = merge_summaries([s for per_scen in out.sketches
+                              for s in per_scen])
+    incidents = [inc for per_scen in out.incidents for inc in per_scen]
+    assert incidents, "sketch+alerts smoke run opened no incidents"
+    prom = prometheus_exposition(sketch=merged, incidents=incidents,
+                                 spans=default_tracer().summary(),
+                                 labels={"probe": "lag_smoke"})
+    validate_exposition(prom)
+    with open(PROM_PATH, "w") as f:
+        f.write(prom)
+    with open(INCIDENTS_PATH, "w") as f:
+        json.dump([inc.as_dict() for inc in incidents], f, indent=1)
     print(f"lag_slo smoke OK: events {counts}; "
           f"valid Perfetto trace with {len(trace['traceEvents'])} events "
-          f"-> {TRACE_PATH}")
+          f"-> {TRACE_PATH}; {len(incidents)} incident(s) -> "
+          f"{INCIDENTS_PATH}; lint-clean exposition "
+          f"({len(prom.splitlines())} lines) -> {PROM_PATH}")
 
 
 def main() -> None:

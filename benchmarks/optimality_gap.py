@@ -51,7 +51,7 @@ from repro.opt import (
 )
 from repro.registry import PACKER_FAMILIES, list_policies
 
-from benchmarks.sections import section, telemetry_block
+from benchmarks.sections import observability_block, section, telemetry_block
 
 ALGORITHMS = list_policies(family=PACKER_FAMILIES, backend="jax")
 
@@ -190,7 +190,8 @@ def run(batch: int, iters: int, n: int, lambdas: Sequence[float],
             "families": list(suite),
         },
         families=out_families,
-        extra={"telemetry": telemetry_block()},
+        extra={"telemetry": telemetry_block(),
+               "observability": observability_block(seed=seed)},
     )
     return report.write(BENCH_PATH)
 

@@ -49,6 +49,70 @@ def telemetry_block(event_counts: Optional[Dict[str, int]] = None,
     return block
 
 
+#: sketch channels the ``observability`` block keeps per policy -- the
+#: full sketch carries every recorder channel; BENCH JSONs only embed
+#: the ones operators actually compare across runs
+OBSERVABILITY_CHANNELS = ("lag_total", "consumers", "unreadable")
+
+
+def observability_block(policies: Tuple[str, ...] = ("MBFP", "KEDA_LAG"),
+                        batch: int = 2, iters: int = 32, n: int = 6,
+                        seed: int = 0) -> Dict[str, Any]:
+    """The shared ``observability`` block: a fixed-seed sketch + alerts
+    probe (frames off, ``topic_lifecycle`` -- the churniest family) run
+    through the fleet, so every ``BENCH_*.json`` carries whole-run
+    sketch summaries and per-rule incident roll-ups.
+
+    ``bench_diff`` gates on the incident leaves (more incidents or
+    longer burn than the baseline = regression); the sketch statistics
+    stay informational.
+    """
+    import jax
+    import numpy as np
+
+    from repro.api import default_fleet
+    from repro.core.scenarios import generate_masked_scenario
+    from repro.lagsim import LagSimConfig
+    from repro.telemetry import (AlertConfig, SketchConfig, TelemetryConfig,
+                                 default_rules, incident_summary,
+                                 merge_summaries)
+
+    speeds, active = generate_masked_scenario(
+        "topic_lifecycle", jax.random.key(seed), batch, iters, n)
+    tele = TelemetryConfig(record_frames=False, sketch=SketchConfig(),
+                           alerts=AlertConfig(rules=default_rules()))
+    cfg = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2,
+                       telemetry=tele)
+    res = default_fleet().simulate(tuple(p.upper() for p in policies),
+                                   speeds, cfg, active=active)
+    per_policy: Dict[str, Any] = {}
+    for p, pol in enumerate(res.policies):
+        merged = merge_summaries([
+            s for b in range(len(res.sketch))
+            for idx, s in res.sketch_summaries(b) if idx[0] == p])
+        full = merged.as_dict()
+        state_p = jax.tree_util.tree_map(
+            lambda *xs: np.stack(xs)[:, p], *res.incidents)
+        per_policy[pol] = {
+            "sketch": {
+                "steps": full["count"],
+                "channels": {ch: full["channels"][ch]
+                             for ch in OBSERVABILITY_CHANNELS
+                             if ch in full["channels"]},
+            },
+            "incidents": incident_summary(state_p, res.alert_config,
+                                          dt=res.dt),
+        }
+    return {
+        "probe": {
+            "family": "topic_lifecycle", "policies": list(res.policies),
+            "batch": batch, "iters": iters, "n_partitions": n, "seed": seed,
+            "rules": list(res.alert_config.rule_names),
+        },
+        "per_policy": per_policy,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class Section:
     name: str                     # section id (registration order = run order)

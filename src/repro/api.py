@@ -56,6 +56,8 @@ from repro.telemetry.spans import Tracer, default_tracer, span, traced
 API_VERSION = 1
 
 __all__ = [
+    "AlertConfig",
+    "AlertRule",
     "API_VERSION",
     "BACKENDS",
     "BenchReport",
@@ -69,34 +71,45 @@ __all__ = [
     "FleetConfig",
     "FleetRunner",
     "get_spec",
+    "Incident",
     "list_policies",
     "make_policy",
     "optimize",
     "OptimizeOutcome",
+    "otlp_metrics_json",
     "pack",
     "PACKER_FAMILIES",
     "packer_for",
     "PackOutcome",
     "Policy",
     "PolicySpec",
+    "prometheus_exposition",
     "selfcheck",
     "simulate",
     "SimulateOutcome",
+    "SketchConfig",
+    "SketchSummary",
     "span",
     "sweep",
     "SweepOutcome",
     "TelemetryConfig",
     "TelemetryFrame",
     "Tracer",
+    "validate_exposition",
 ]
 
 #: fleet re-exports resolve lazily (keeps ``import repro.api`` jax-free)
 _FLEET_EXPORTS = ("FleetRunner", "FleetConfig")
 #: lagsim re-exports resolve lazily for the same reason
 _LAGSIM_EXPORTS = ("ControlPlaneConfig",)
-#: in-loop recorder re-exports (jax-backed) resolve lazily too; the span
-#: half of telemetry is stdlib-only and imported eagerly above
-_TELEMETRY_EXPORTS = ("TelemetryConfig", "TelemetryFrame", "EventStream")
+#: in-loop recorder / sketch / alert / exporter re-exports resolve
+#: lazily too (the exporters are jax-free but live behind
+#: ``repro.telemetry``'s lazy map); the span half of telemetry is
+#: stdlib-only and imported eagerly above
+_TELEMETRY_EXPORTS = ("TelemetryConfig", "TelemetryFrame", "EventStream",
+                      "SketchConfig", "SketchSummary", "AlertConfig",
+                      "AlertRule", "Incident", "prometheus_exposition",
+                      "validate_exposition", "otlp_metrics_json")
 
 
 def __getattr__(name: str):
@@ -174,6 +187,13 @@ class SimulateOutcome:
     #: per-scenario recorder frames (``TelemetryFrame``) when the config
     #: carries a ``TelemetryConfig``; decode with ``EventStream.from_frame``
     telemetry: Optional[List[Any]] = None
+    #: per-scenario streaming-sketch summaries when ``telemetry.sketch``
+    #: is on: ``sketches[scenario][policy]`` is a ``SketchSummary``
+    #: (merge across scenarios with ``telemetry.sketch.merge_summaries``)
+    sketches: Optional[List[List[Any]]] = None
+    #: per-scenario decoded ``Incident`` lists (``index == (policy,)``)
+    #: when ``telemetry.alerts`` is on
+    incidents: Optional[List[List[Any]]] = None
     schema_version: int = API_VERSION
 
 
@@ -320,7 +340,15 @@ def simulate(traces, *, policies: Optional[Sequence[str]] = None,
     knobs) runs every policy behind an emulated scaler control plane:
     polling, observation/actuation delay, cooldown, replica clamps, and
     the scale-event rebalance storm.  Inconsistent knobs raise a named
-    ``ValueError`` before anything compiles."""
+    ``ValueError`` before anything compiles.
+
+    ``telemetry=TelemetryConfig(...)`` (a config override) turns on the
+    in-loop observability surface: ``record_frames`` captures per-step
+    frames (``.telemetry``), ``sketch=SketchConfig(...)`` streams O(1)
+    whole-run aggregates (``.sketches``), and
+    ``alerts=AlertConfig(rules=...)`` evaluates SLO burn-rate /
+    lag-growth / storm / thrash rules in-loop (``.incidents``).  Export
+    any of them with ``prometheus_exposition`` / ``otlp_metrics_json``."""
     import dataclasses as _dc
 
     from repro.lagsim import ControlPlaneConfig as _CPC
@@ -342,11 +370,20 @@ def simulate(traces, *, policies: Optional[Sequence[str]] = None,
     st = res.stacked()
     metrics = {k: np.asarray(v)
                for k, v in res.summarize(cfg, stacked=st).items()}
+    sketches = None
+    if res.sketch is not None:
+        sketches = [[s for _, s in res.sketch_summaries(i)]
+                    for i in range(len(res.sketch))]
+    incidents = None
+    if res.incidents is not None:
+        incidents = [res.scenario_incidents(i)
+                     for i in range(len(res.incidents))]
     return SimulateOutcome(policies=res.policies, metrics=metrics,
                            lag_total=st["lag_total"],
                            consumers=st["consumers"],
                            migrations=st["migrations"],
-                           telemetry=res.telemetry)
+                           telemetry=res.telemetry,
+                           sketches=sketches, incidents=incidents)
 
 
 @traced("api.optimize")

@@ -6,10 +6,13 @@ See ``repro.fleet.runner`` for the design.  Public surface:
 * ``FleetConfig``  -- bucket sizes, compile-cache bound, sharding knobs.
 * ``FleetSweepResult`` / ``FleetLagResult`` -- per-scenario results in
   input order, sliced back to true shapes.
+* ``FleetProgress`` -- live observability snapshot handed to the
+  optional ``progress`` callback of ``FleetRunner.simulate``.
 """
 from .runner import (
     FleetConfig,
     FleetLagResult,
+    FleetProgress,
     FleetRunner,
     FleetSweepResult,
 )
@@ -17,6 +20,7 @@ from .runner import (
 __all__ = [
     "FleetConfig",
     "FleetLagResult",
+    "FleetProgress",
     "FleetRunner",
     "FleetSweepResult",
 ]

@@ -47,7 +47,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core.jaxpack import _sweep_streams_impl
 from repro.lagsim.engine import LagSimConfig, _sweep_impl
 from repro.lagsim.metrics import slo_summary
+from repro.telemetry.alerts import (AlertConfig, AlertState, Incident,
+                                    decode_incidents, incident_counts)
 from repro.telemetry.record import TelemetryFrame
+from repro.telemetry.sketch import (SketchConfig, SketchState, SketchSummary,
+                                    merge_summaries, summaries_from_state)
 from repro.telemetry.spans import instant as _instant
 from repro.telemetry.spans import span as _span
 
@@ -117,6 +121,38 @@ class FleetLagResult:
     #: iff the config's ``TelemetryConfig`` is on; decode each with
     #: ``EventStream.from_frame``
     telemetry: Optional[List[TelemetryFrame]] = None
+    #: per-scenario final streaming-sketch states (leading ``[P]`` policy
+    #: axis, numpy leaves) plus the per-scenario *resolved*
+    #: ``SketchConfig`` (``hist_max`` filled at the scenario's true N) --
+    #: padded bucket steps are valid-gated out, so a padded scenario's
+    #: state is bit-identical to a direct ``simulate_lag`` run's
+    sketch: Optional[List[SketchState]] = None
+    sketch_configs: Optional[List[SketchConfig]] = None
+    #: per-scenario final alert states (leading ``[P]``); see
+    #: :meth:`scenario_incidents`
+    incidents: Optional[List[AlertState]] = None
+    alert_config: Optional[AlertConfig] = None
+    dt: float = 1.0
+
+    def sketch_summaries(self, scenario: int
+                         ) -> List[Tuple[Tuple[int, ...], SketchSummary]]:
+        """Finalized ``[(policy_index,), SketchSummary]`` pairs for one
+        scenario (requires the run's ``SketchConfig`` to have been on)."""
+        if self.sketch is None:
+            raise ValueError(
+                "this fleet run carried no sketches; enable them via "
+                "TelemetryConfig(sketch=SketchConfig(...))")
+        return summaries_from_state(self.sketch[scenario],
+                                    self.sketch_configs[scenario])
+
+    def scenario_incidents(self, scenario: int) -> List[Incident]:
+        """Decoded incidents for one scenario (``index`` = policy)."""
+        if self.incidents is None:
+            raise ValueError(
+                "this fleet run carried no alerting; enable it via "
+                "TelemetryConfig(alerts=AlertConfig(rules=default_rules()))")
+        return decode_incidents(self.incidents[scenario], self.alert_config,
+                                dt=self.dt)
 
     def stacked(self) -> Dict[str, np.ndarray]:
         """Stack a uniform-``T`` fleet into ``[P, B, T]`` arrays."""
@@ -133,6 +169,24 @@ class FleetLagResult:
         return slo_summary(st["lag_total"], st["consumers"],
                            st["migrations"],
                            slo_lag=cfg.slo_lag_or_default, dt=cfg.dt)
+
+
+@dataclasses.dataclass
+class FleetProgress:
+    """One live observability snapshot, handed to the ``progress``
+    callback of :meth:`FleetRunner.simulate` after each bucket group
+    finishes (host-side only -- the compiled programs never see it).
+
+    ``sketch`` is the merge of every finished scenario's summaries
+    (``None`` until sketches exist, or when scenarios use different
+    histogram edges and cannot merge); ``incidents`` the cumulative
+    per-rule incident counts."""
+
+    done: int                           # scenarios finished so far
+    total: int                          # scenarios in this call
+    bucket: str                         # bucket label just finished
+    sketch: Optional[SketchSummary] = None
+    incidents: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _round_up(x: int, buckets: Tuple[int, ...]) -> int:
@@ -428,14 +482,24 @@ class FleetRunner:
 
     _SIM_FIELDS = _TRAJ_FIELDS
 
-    def _run_sim(self, policies, speeds, act, rcfg, tb: int, nb: int):
+    def _run_sim(self, policies, speeds, act, rcfg, tb: int, nb: int,
+                 valid=None):
         speeds, act = self._device_put(speeds, act)
-        key = ("simulate", policies, tb, nb, act is not None, rcfg,
-               speeds.shape[0])
+        # `valid is not None` is part of the key: the gated program takes
+        # a third operand, so it must never share an executable with the
+        # ungated one even at identical shapes
+        key = ("simulate", policies, tb, nb, act is not None,
+               valid is not None, rcfg, speeds.shape[0])
         bucket = f"{tb}x{nb}"
-        args = (speeds, act)
-        fn = self._compiled(key, lambda: jax.jit(
-            lambda tr, ac: _sweep_impl(policies, tr, rcfg, ac)), args, bucket)
+        if valid is None:
+            args = (speeds, act)
+            build = lambda: jax.jit(
+                lambda tr, ac: _sweep_impl(policies, tr, rcfg, ac))
+        else:
+            args = (speeds, act, valid)
+            build = lambda: jax.jit(
+                lambda tr, ac, va: _sweep_impl(policies, tr, rcfg, ac, va))
+        fn = self._compiled(key, build, args, bucket)
         res = self._dispatch(key, fn, args, bucket)
         arrays = {f: np.asarray(getattr(res, f)) for f in self._SIM_FIELDS}
         tele = res.telemetry
@@ -445,7 +509,9 @@ class FleetRunner:
                 steps=np.asarray(tele.steps),         # [P, B, T]
                 count=np.asarray(tele.count),         # [P, B]
                 names=tele.names)
-        return arrays, tele
+        to_np = lambda obj: (None if obj is None else
+                             jax.tree_util.tree_map(np.asarray, obj))
+        return arrays, tele, to_np(res.sketch), to_np(res.incidents)
 
     @staticmethod
     def _scenario_frame(tele: TelemetryFrame, slot: int,
@@ -459,9 +525,25 @@ class FleetRunner:
             count=np.minimum(tele.count[:, slot], t),
             names=tele.names)
 
+    @staticmethod
+    def _scenario_state(state, slot: int):
+        """Slice one scenario's sketch/alert state (leading [P, B] axes)
+        out of a batch; unlike frames there is no T axis to trim -- the
+        padded steps never touched the state (valid gating)."""
+        return jax.tree_util.tree_map(lambda a: a[:, slot], state)
+
+    @staticmethod
+    def _obs_on(cfg: LagSimConfig) -> bool:
+        """True when the run carries scan-state observability (sketches
+        or alerts) that bucket padding must valid-gate."""
+        return cfg.telemetry_on and (cfg.telemetry.sketch is not None
+                                     or cfg.telemetry.alerts is not None)
+
     def simulate(self, policies: Sequence[str], scenarios,
                  cfg: LagSimConfig = LagSimConfig(), *,
-                 active=None) -> FleetLagResult:
+                 active=None,
+                 progress: Optional[Callable[[FleetProgress], None]] = None
+                 ) -> FleetLagResult:
         """Closed-loop lag twin over a fleet of scenarios.
 
         The config is resolved at each scenario's *true* partition count
@@ -472,13 +554,21 @@ class FleetRunner:
         keys automatically and bucketing stays behavior-preserving.
         With ``cfg.telemetry`` on, the result carries one recorder frame
         per scenario (``FleetLagResult.telemetry``), sliced to true
-        length like every other trajectory.
+        length like every other trajectory.  Streaming sketches/alerts
+        ride the same config (``telemetry.sketch`` / ``telemetry.alerts``)
+        and come back as per-scenario states; padded bucket steps are
+        gated out of their updates, so padding stays exact for them too.
+
+        ``progress`` (optional, host-side) is called after each bucket
+        group with a :class:`FleetProgress` snapshot -- merged sketch
+        summary and cumulative incident counts so far; this is what
+        ``examples/live_dashboard.py`` streams.
         """
         with _span("fleet.simulate", policies=len(policies)):
-            return self._simulate(policies, scenarios, cfg, active)
+            return self._simulate(policies, scenarios, cfg, active, progress)
 
     def _simulate(self, policies, scenarios, cfg: LagSimConfig,
-                  active) -> FleetLagResult:
+                  active, progress=None) -> FleetLagResult:
         if cfg.telemetry is not None and cfg.telemetry.ring is not None:
             raise ValueError(
                 "TelemetryConfig.ring is not supported through FleetRunner: "
@@ -487,29 +577,58 @@ class FleetRunner:
                 "recorder (ring=None) here, or run simulate_lag directly "
                 "for ring capture")
         policies = tuple(p.upper() for p in policies)
+        alert_cfg = (cfg.telemetry.alerts if cfg.telemetry_on else None)
         n_dev = self._n_dev()
         fast = self._uniform_batch(scenarios, active, n_dev)
         if fast is not None:
             speeds, act = fast
             b, t, n = speeds.shape
-            arrays, tele = self._run_sim(policies, speeds, act,
-                                         cfg.resolve(n), t, n)
-            return FleetLagResult(policies=policies, **{
+            rcfg = cfg.resolve(n)
+            arrays, tele, sk, inc = self._run_sim(policies, speeds, act,
+                                                  rcfg, t, n)
+            sk_cfg = None if rcfg.telemetry is None else rcfg.telemetry.sketch
+            result = FleetLagResult(policies=policies, **{
                 f: [arrays[f][:, i] for i in range(b)]
                 for f in self._SIM_FIELDS},
                 telemetry=None if tele is None else [
-                    self._scenario_frame(tele, i, t) for i in range(b)])
+                    self._scenario_frame(tele, i, t) for i in range(b)],
+                sketch=None if sk is None else [
+                    self._scenario_state(sk, i) for i in range(b)],
+                sketch_configs=None if sk is None else [sk_cfg] * b,
+                incidents=None if inc is None else [
+                    self._scenario_state(inc, i) for i in range(b)],
+                alert_config=alert_cfg, dt=cfg.dt)
+            if progress is not None:
+                progress(self._progress_snapshot(result, b, b, f"{t}x{n}"))
+            return result
         items = self._normalize(scenarios, active)
+        obs_on = self._obs_on(cfg)
         outs: Dict[str, List[Optional[np.ndarray]]] = {
             f: [None] * len(items) for f in self._SIM_FIELDS}
         tele_out: List[Optional[TelemetryFrame]] = [None] * len(items)
-        any_tele = False
+        sk_out: List[Optional[SketchState]] = [None] * len(items)
+        sk_cfg_out: List[Optional[SketchConfig]] = [None] * len(items)
+        inc_out: List[Optional[AlertState]] = [None] * len(items)
+        any_tele = any_sk = any_inc = False
+        done = 0
+        result = FleetLagResult(policies=policies, **outs,
+                                telemetry=None, alert_config=alert_cfg,
+                                dt=cfg.dt)
         groups = self._group(items,
                              extra_key=lambda sp, ac: (cfg.resolve(sp.shape[1]),))
         for (tb, nb, use_mask, rcfg), members in groups.items():
             speeds, act = self._pad_and_stack(members, tb, nb, use_mask,
                                               n_dev)
-            arrays, tele = self._run_sim(policies, speeds, act, rcfg, tb, nb)
+            valid = None
+            if obs_on:
+                # bool[B, T]: a scenario's true steps, False on T-padding
+                # and on the all-dummy rows added for the shard grid
+                rows = [np.arange(tb) < sp.shape[0] for _, sp, _ in members]
+                rows += [np.zeros(tb, bool)] * (speeds.shape[0] - len(rows))
+                valid = jnp.asarray(np.stack(rows))
+            arrays, tele, sk, inc = self._run_sim(policies, speeds, act,
+                                                  rcfg, tb, nb, valid)
+            sk_cfg = None if rcfg.telemetry is None else rcfg.telemetry.sketch
             for slot, (idx, sp, _) in enumerate(members):
                 t = sp.shape[0]
                 for f in self._SIM_FIELDS:
@@ -517,5 +636,48 @@ class FleetRunner:
                 if tele is not None:
                     any_tele = True
                     tele_out[idx] = self._scenario_frame(tele, slot, t)
-        return FleetLagResult(policies=policies, **outs,
-                              telemetry=tele_out if any_tele else None)
+                if sk is not None:
+                    any_sk = True
+                    sk_out[idx] = self._scenario_state(sk, slot)
+                    sk_cfg_out[idx] = sk_cfg
+                if inc is not None:
+                    any_inc = True
+                    inc_out[idx] = self._scenario_state(inc, slot)
+            done += len(members)
+            if progress is not None:
+                result.sketch = sk_out if any_sk else None
+                result.sketch_configs = sk_cfg_out if any_sk else None
+                result.incidents = inc_out if any_inc else None
+                progress(self._progress_snapshot(result, done, len(items),
+                                                 f"{tb}x{nb}"))
+        result.telemetry = tele_out if any_tele else None
+        result.sketch = sk_out if any_sk else None
+        result.sketch_configs = sk_cfg_out if any_sk else None
+        result.incidents = inc_out if any_inc else None
+        return result
+
+    @staticmethod
+    def _progress_snapshot(result: FleetLagResult, done: int, total: int,
+                           bucket: str) -> FleetProgress:
+        """Merge whatever has finished into one live snapshot."""
+        merged = None
+        if result.sketch is not None:
+            summaries = []
+            for i, st in enumerate(result.sketch):
+                if st is not None:
+                    summaries.extend(
+                        s for _, s in summaries_from_state(
+                            st, result.sketch_configs[i]))
+            if summaries:
+                try:
+                    merged = merge_summaries(summaries)
+                except ValueError:
+                    merged = None       # heterogeneous edges: unmergeable
+        counts: Dict[str, int] = {}
+        if result.incidents is not None:
+            for st in result.incidents:
+                if st is not None:
+                    for rule, c in incident_counts(st).items():
+                        counts[rule] = counts.get(rule, 0) + c
+        return FleetProgress(done=done, total=total, bucket=bucket,
+                             sketch=merged, incidents=counts)

@@ -41,10 +41,12 @@ from repro.kernels.lag_update import lag_update_batch, lag_update_reference
 from repro.lagsim.controlplane import (ControlPlaneConfig, ControlPlaneState,
                                        wrap_policy)
 from repro.registry import make_policy
+from repro.telemetry.alerts import AlertState, alert_init, alert_step
 from repro.telemetry.record import (CounterState, TelemetryConfig,
                                     TelemetryFrame, frame_from_outputs,
                                     frame_from_ring, record_step, ring_init,
                                     ring_write)
+from repro.telemetry.sketch import SketchState, sketch_init, sketch_update
 
 NEG = -1
 
@@ -98,6 +100,15 @@ class LagSimConfig:
                 f"telemetry must be a TelemetryConfig (or None), got "
                 f"{type(self.telemetry).__name__}; build one via "
                 f"repro.api.TelemetryConfig(...)")
+        tele = self.telemetry
+        if (tele is not None and tele.sketch is not None
+                and tele.sketch.hist_max is None):
+            # default histogram range: eight consumer-steps of drain per
+            # partition covers any workload the SLO metrics call healthy
+            tele = dataclasses.replace(
+                tele, sketch=dataclasses.replace(
+                    tele.sketch,
+                    hist_max=8.0 * self.capacity * self.dt * n))
         return dataclasses.replace(
             self,
             lag_threshold=(self.lag_threshold if self.lag_threshold is not None
@@ -105,6 +116,7 @@ class LagSimConfig:
             max_consumers=(self.max_consumers if self.max_consumers is not None
                            else n),
             slo_lag=self.slo_lag_or_default,
+            telemetry=tele,
         )
 
 
@@ -123,6 +135,8 @@ class LagTrace:
     migrations: jax.Array   # i32  partitions that changed owner
     unreadable: jax.Array   # i32  partitions in migration downtime
     telemetry: Optional[TelemetryFrame] = None  # recorder frame [.., R, K]
+    sketch: Optional[SketchState] = None    # streaming aggregators (O(1))
+    incidents: Optional[AlertState] = None  # in-loop alert/incident state
 
 
 @jax.tree_util.register_dataclass
@@ -137,17 +151,18 @@ class LagSweepResult:
     unreadable: jax.Array   # i32[P, B, T]
     policies: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
     telemetry: Optional[TelemetryFrame] = None  # frame [P, B, R, K]
+    sketch: Optional[SketchState] = None    # aggregators, leading [P, B]
+    incidents: Optional[AlertState] = None  # alert state, leading [P, B]
 
     def for_policy(self, name: str) -> LagTrace:
         p = self.policies.index(name.upper())
-        tele = self.telemetry
-        if tele is not None:
-            tele = TelemetryFrame(channels=tele.channels[p],
-                                  steps=tele.steps[p], count=tele.count[p],
-                                  names=tele.names)
+        pick = lambda obj: (None if obj is None else
+                            jax.tree_util.tree_map(lambda a: a[p], obj))
         return LagTrace(self.lag_total[p], self.lag_max[p], self.consumers[p],
                         self.migrations[p], self.unreadable[p],
-                        telemetry=tele)
+                        telemetry=pick(self.telemetry),
+                        sketch=pick(self.sketch),
+                        incidents=pick(self.incidents))
 
 
 def _check_rates_shape(rates, n: int, what: str, array_name: str) -> None:
@@ -163,7 +178,8 @@ def _check_rates_shape(rates, n: int, what: str, array_name: str) -> None:
 
 def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
               cfg: LagSimConfig, active: Optional[jax.Array] = None,
-              record_assign: bool = False):
+              record_assign: bool = False,
+              valid: Optional[jax.Array] = None):
     """Unjitted core: ``trace`` f32[T, N] -> LagTrace of f32/i32[T].
 
     ``active`` (bool[T, N], optional) marks which partitions exist at each
@@ -183,6 +199,14 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     recorder only *reads* values the step already computes, so telemetry
     on/off never changes the simulated trajectories, and the off path
     emits the exact pre-telemetry jaxpr.
+
+    ``telemetry.sketch`` / ``telemetry.alerts`` additionally carry
+    streaming aggregators (``repro.telemetry.sketch``) and an in-loop
+    alert evaluator (``repro.telemetry.alerts``) through the scan --
+    O(1) observability state regardless of T.  ``valid`` (bool[T],
+    optional, fleet-internal) gates sketch/alert updates on padded
+    bucket steps so a padded run's observability state is bit-identical
+    to the direct run's.
     """
     n = trace.shape[1]
     m = 2 * n + 2                       # packer bin-name universe
@@ -210,7 +234,11 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     # when cfg.control_plane is None
     has_cp = getattr(policy_step, "_controlplane_wrapped", False)
     tele = cfg.telemetry if cfg.telemetry_on else None
-    ring_mode = tele is not None and tele.ring is not None
+    frames_on = tele is not None and tele.record_frames
+    sketch_on = tele is not None and tele.sketch is not None
+    alerts_on = tele is not None and tele.alerts is not None
+    ring_mode = frames_on and tele.ring is not None
+    need_vec = frames_on or sketch_on
     tele_names: list = [None]        # filled at trace time by record_step
 
     def drain(lag, produced, assign, readable, act_t):
@@ -225,15 +253,28 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
                                     cap_step, m=m, active=act_t)
 
     def step(carry, xs):
+        lag, assign, down, pstate = carry[:4]
+        ci = 4
         if ring_mode:
-            lag, assign, down, pstate, tick, rbuf = carry
-        else:
-            lag, assign, down, pstate = carry
+            tick, rbuf = carry[4:6]
+            ci = 6
+        if sketch_on:
+            sk = carry[ci]
+            ci += 1
+        if alerts_on:
+            al = carry[ci]
+        valid_t = None
         if active is None:
-            rate_t, act_t = xs, None
+            if valid is None:
+                rate_t, act_t = xs, None
+            else:
+                (rate_t, valid_t), act_t = xs, None
             produced = rate_t * jnp.float32(cfg.dt)
         else:
-            rate_t, act_t = xs
+            if valid is None:
+                rate_t, act_t = xs
+            else:
+                rate_t, act_t, valid_t = xs
             produced = jnp.where(act_t, rate_t * jnp.float32(cfg.dt), 0.0)
         observed = lag + produced       # backlog a lag-reactive scaler sees
         if active is None:
@@ -262,37 +303,57 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
               n_active.astype(jnp.int32),
               jnp.sum(moved.astype(jnp.int32)),
               jnp.sum(unreadable.astype(jnp.int32)))
-        if tele is not None:
-            if storm_mask is not None and act_t is not None:
-                storm_mask = storm_mask & act_t
+        if tele is not None and storm_mask is not None and act_t is not None:
+            storm_mask = storm_mask & act_t
+        if need_vec:
             vec, tele_names[0] = record_step(
                 tele, speeds=rate_t, new_lag=new_lag, moved=moved,
                 blocked=unreadable, storm=storm_mask, n_consumers=n_active,
                 act_t=act_t, capacity=cfg.capacity, pstate=pstate)
-            if not ring_mode:
+            if frames_on and not ring_mode:
                 ys = ys + (vec,)
         if record_assign:
             ys = ys + (new_assign,)
         new_carry = (new_lag, new_assign, down, pstate)
         if ring_mode:
             new_carry = new_carry + (tick + 1, ring_write(rbuf, tick, vec))
+        if sketch_on:
+            new_carry = new_carry + (
+                sketch_update(tele.sketch, sk, vec, valid=valid_t),)
+        if alerts_on:
+            storm_ct = (jnp.float32(0.0) if storm_mask is None
+                        else jnp.sum(storm_mask.astype(jnp.float32)))
+            new_carry = new_carry + (alert_step(
+                tele.alerts, al, lag_total=ys[0], consumers=n_active,
+                unreadable=ys[4], storm_parts=storm_ct,
+                slo_lag=cfg.slo_lag, valid=valid_t),)
         return new_carry, ys
 
-    xs = (trace.astype(jnp.float32) if active is None
-          else (trace.astype(jnp.float32), active.astype(bool)))
+    if active is None:
+        xs = (trace.astype(jnp.float32) if valid is None
+              else (trace.astype(jnp.float32), valid.astype(bool)))
+    else:
+        xs = ((trace.astype(jnp.float32), active.astype(bool))
+              if valid is None
+              else (trace.astype(jnp.float32), active.astype(bool),
+                    valid.astype(bool)))
     carry0 = (initial_lag.astype(jnp.float32), jnp.full(n, NEG, jnp.int32),
               jnp.zeros(n, jnp.int32), init(n))
-    if ring_mode:
+    if tele is not None:
         pstate0 = carry0[3]
-        k = len(tele.base_channels) + (len(pstate0.names)
-                                       if isinstance(pstate0, CounterState)
-                                       else 0)
-        carry0 = carry0 + (jnp.int32(0), ring_init(tele, k))
+        full_names = tele.base_channels + (
+            tuple(pstate0.names) if isinstance(pstate0, CounterState) else ())
+    if ring_mode:
+        carry0 = carry0 + (jnp.int32(0), ring_init(tele, len(full_names)))
+    if sketch_on:
+        carry0 = carry0 + (sketch_init(tele.sketch, full_names),)
+    if alerts_on:
+        carry0 = carry0 + (alert_init(tele.alerts),)
     carry_end, ys = lax.scan(step, carry0, xs)
     tot, mx, cons, migs, unread = ys[:5]
     idx = 5
     frame = None
-    if tele is not None:
+    if frames_on:
         t_total = trace.shape[0]
         if ring_mode:
             frame = frame_from_ring(tele, tele_names[0], carry_end[5],
@@ -300,16 +361,24 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
         else:
             frame = frame_from_outputs(tele, tele_names[0], ys[idx], t_total)
             idx += 1
+    ci = 6 if ring_mode else 4
+    sk_state = None
+    if sketch_on:
+        sk_state = carry_end[ci]
+        ci += 1
+    al_state = carry_end[ci] if alerts_on else None
     out = LagTrace(lag_total=tot, lag_max=mx, consumers=cons,
-                   migrations=migs, unreadable=unread, telemetry=frame)
+                   migrations=migs, unreadable=unread, telemetry=frame,
+                   sketch=sk_state, incidents=al_state)
     return (out, ys[idx]) if record_assign else out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("policy", "cfg", "record_assign"))
 def _simulate_jit(trace, initial_lag, policy: str, cfg: LagSimConfig,
-                  active=None, record_assign: bool = False):
-    return _simulate(trace, initial_lag, policy, cfg, active, record_assign)
+                  active=None, record_assign: bool = False, valid=None):
+    return _simulate(trace, initial_lag, policy, cfg, active, record_assign,
+                     valid)
 
 
 def simulate_lag(trace: jax.Array, *, policy: str,
@@ -350,46 +419,56 @@ def simulate_lag(trace: jax.Array, *, policy: str,
 
 
 def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,
-                cfg: LagSimConfig, active: Optional[jax.Array] = None
-                ) -> LagSweepResult:
+                cfg: LagSimConfig, active: Optional[jax.Array] = None,
+                valid: Optional[jax.Array] = None) -> LagSweepResult:
     """Unjitted sweep core, shared by the module-level jit below and the
     fleet execution layer (``repro.fleet``), which jits it under its own
-    bounded per-bucket cache."""
+    bounded per-bucket cache.  ``valid`` (bool[B, T], fleet-internal)
+    gates sketch/alert updates on padded bucket steps."""
     zero0 = jnp.zeros(traces.shape[2], jnp.float32)
-    if active is None:
-        per_policy = [
-            jax.vmap(lambda tr, p=p: _simulate(tr, zero0, p, cfg))(traces)
-            for p in policies
-        ]
-    else:
-        per_policy = [
-            jax.vmap(lambda tr, ac, p=p: _simulate(tr, zero0, p, cfg, ac))(
-                traces, active)
-            for p in policies
-        ]
-    frames = [tr.telemetry for tr in per_policy]
-    if any(f is not None for f in frames):
-        # stacking telemetry across policies needs one channel universe;
-        # fail with names, not a cryptic treedef mismatch from tree_map
-        per_names = {p: (None if f is None else f.names)
-                     for p, f in zip(policies, frames)}
-        if len(set(per_names.values())) != 1:
-            raise ValueError(
-                f"policies in one sweep must record identical telemetry "
-                f"channels (custom CounterState counters differ): "
-                f"{per_names}; sweep them separately via simulate_lag")
+
+    def run_policy(p):
+        if active is None and valid is None:
+            return jax.vmap(lambda tr: _simulate(tr, zero0, p, cfg))(traces)
+        if valid is None:
+            return jax.vmap(
+                lambda tr, ac: _simulate(tr, zero0, p, cfg, ac))(
+                    traces, active)
+        if active is None:
+            return jax.vmap(
+                lambda tr, va: _simulate(tr, zero0, p, cfg, valid=va))(
+                    traces, valid)
+        return jax.vmap(
+            lambda tr, ac, va: _simulate(tr, zero0, p, cfg, ac, valid=va))(
+                traces, active, valid)
+
+    per_policy = [run_policy(p) for p in policies]
+    for attr, what in (("telemetry", "telemetry channels"),
+                       ("sketch", "sketch channels")):
+        objs = [getattr(tr, attr) for tr in per_policy]
+        if any(o is not None for o in objs):
+            # stacking across policies needs one channel universe; fail
+            # with names, not a cryptic treedef mismatch from tree_map
+            per_names = {p: (None if o is None else o.names)
+                         for p, o in zip(policies, objs)}
+            if len(set(per_names.values())) != 1:
+                raise ValueError(
+                    f"policies in one sweep must record identical {what} "
+                    f"(custom CounterState counters differ): "
+                    f"{per_names}; sweep them separately via simulate_lag")
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_policy)
     return LagSweepResult(
         lag_total=stacked.lag_total, lag_max=stacked.lag_max,
         consumers=stacked.consumers, migrations=stacked.migrations,
         unreadable=stacked.unreadable, policies=policies,
-        telemetry=stacked.telemetry)
+        telemetry=stacked.telemetry, sketch=stacked.sketch,
+        incidents=stacked.incidents)
 
 
 @functools.partial(jax.jit, static_argnames=("policies", "cfg"))
 def _sweep_jit(policies: Tuple[str, ...], traces: jax.Array,
-               cfg: LagSimConfig, active=None) -> LagSweepResult:
-    return _sweep_impl(policies, traces, cfg, active)
+               cfg: LagSimConfig, active=None, valid=None) -> LagSweepResult:
+    return _sweep_impl(policies, traces, cfg, active, valid)
 
 
 def sweep_lag(policies: Tuple[str, ...], traces: jax.Array,

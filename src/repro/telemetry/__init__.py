@@ -1,6 +1,7 @@
-"""Flight-recorder telemetry: in-loop trace capture + host-side spans.
+"""Flight-recorder telemetry: in-loop capture, streaming sketches,
+SLO alerting, host-side spans, and standard metric export.
 
-Two halves (see the submodule docstrings for the design):
+Five submodules (see their docstrings for the design):
 
 * ``telemetry.record`` -- the scan-safe in-loop recorder.  Enable it by
   putting a :class:`TelemetryConfig` on ``LagSimConfig.telemetry``; the
@@ -8,12 +9,23 @@ Two halves (see the submodule docstrings for the design):
   returns a :class:`TelemetryFrame` on every trace, decodable into typed
   events (:func:`decode_events` / :class:`EventStream`).  Off (the
   default) is bit-identical to the recorder-free engine.
+* ``telemetry.sketch`` -- constant-memory online aggregators (Welford
+  moments, min/max, EWMA windows, histogram quantiles) carried through
+  the scan; enable via ``TelemetryConfig(sketch=SketchConfig(...))``.
+* ``telemetry.alerts`` -- declarative in-loop alerting (multi-window
+  SLO burn rate, lag-growth invariant, rebalance storms, thrash) with
+  fixed-shape incident tables; ``TelemetryConfig(alerts=AlertConfig(
+  rules=default_rules()))``.
 * ``telemetry.spans`` -- host-side span profiling (:func:`span`,
   :func:`traced`, :class:`Tracer`) with first-call vs steady-state
   separation and Chrome/Perfetto ``trace_event`` export.
+* ``telemetry.export`` -- stdlib-only Prometheus text exposition and
+  OTLP-style JSON for sketches, incidents, and spans, plus a
+  pure-python exposition linter.
 
-``spans`` is stdlib-only and imported eagerly; ``record`` needs jax and
-resolves lazily, so ``import repro.telemetry`` stays cheap.
+``spans`` and ``export`` are jax-free; ``spans`` imports eagerly,
+everything jax-backed resolves lazily, so ``import repro.telemetry``
+stays cheap.
 """
 from .spans import (SpanRecord, Tracer, default_tracer, instant, span,
                     traced, validate_chrome_trace)
@@ -28,21 +40,64 @@ _RECORD_EXPORTS = (
     "decode_events",
 )
 
+_SKETCH_EXPORTS = (
+    "SketchConfig",
+    "SketchState",
+    "SketchSummary",
+    "merge_summaries",
+    "sketch_init",
+    "sketch_update",
+    "summaries_from_state",
+)
+
+_ALERT_EXPORTS = (
+    "AlertConfig",
+    "AlertRule",
+    "AlertState",
+    "Incident",
+    "alert_init",
+    "alert_step",
+    "decode_incidents",
+    "default_rules",
+    "incident_counts",
+    "incident_summary",
+)
+
+_EXPORT_EXPORTS = (
+    "otlp_metrics_json",
+    "otlp_spans_json",
+    "prometheus_exposition",
+    "validate_exposition",
+)
+
 
 def __getattr__(name: str):
     if name in _RECORD_EXPORTS:
         from . import record as _record
 
         return getattr(_record, name)
+    if name in _SKETCH_EXPORTS:
+        from . import sketch as _sketch
+
+        return getattr(_sketch, name)
+    if name in _ALERT_EXPORTS:
+        from . import alerts as _alerts
+
+        return getattr(_alerts, name)
+    if name in _EXPORT_EXPORTS:
+        from . import export as _export
+
+        return getattr(_export, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = sorted(_RECORD_EXPORTS + (
-    "SpanRecord",
-    "Tracer",
-    "default_tracer",
-    "instant",
-    "span",
-    "traced",
-    "validate_chrome_trace",
-))
+__all__ = sorted(
+    _RECORD_EXPORTS + _SKETCH_EXPORTS + _ALERT_EXPORTS + _EXPORT_EXPORTS + (
+        "SpanRecord",
+        "Tracer",
+        "default_tracer",
+        "instant",
+        "span",
+        "traced",
+        "validate_chrome_trace",
+    ))

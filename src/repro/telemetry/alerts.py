@@ -1,0 +1,444 @@
+"""Declarative in-loop SLO alerting: burn rates, invariant violations,
+storms and thrash, evaluated inside the scan in O(rules) per step.
+
+Post-hoc trace forensics (PR 7's ``decode_events``) needs the full
+frame history; an autoscaler run at the ROADMAP's horizons can't afford
+that, and a production scaler is judged on *alerts*, not traces (KEDA's
+lag trigger, the Cloud-Run scheduled-scaling work in PAPERS.md).  This
+module evaluates a declarative :class:`AlertRule` set over streaming
+sketch state (per-rule debiased EWMA windows) inside the ``lax.scan``:
+
+* ``slo_burn``          -- multi-window burn rate on the lag-SLO
+  violation fraction (Google SRE-style: a fast and a slow EWMA window
+  must *both* burn error budget faster than ``burn_threshold``x);
+* ``lag_growth``        -- the paper's Eq. 1 invariant made an alert:
+  consumption is not keeping up (EWMA of the per-step lag delta stays
+  positive) for ``sustain_steps`` consecutive steps;
+* ``rebalance_storm``   -- partitions continuously unreadable (migration
+  downtime / control-plane storm) for ``storm_steps`` or longer;
+* ``consumer_thrash``   -- scale-event flapping: the EWMA rate of
+  consumer-count changes exceeds ``thrash_rate``.
+
+State is a fixed-shape :class:`AlertState` (per-rule windows + a bounded
+incident table of ``max_incidents`` rows), so alerting adds O(R * M)
+memory no matter how long the run is; a padded fleet step is gated out
+by ``valid`` exactly like the sketches.  Host-side,
+:func:`decode_incidents` turns the table into typed :class:`Incident`
+records with open/close steps, duration, peak measurement and severity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+ALERT_KINDS: Tuple[str, ...] = ("slo_burn", "lag_growth", "rebalance_storm",
+                                "consumer_thrash")
+SEVERITIES: Tuple[str, ...] = ("page", "ticket", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertRule:
+    """One declarative rule (hashable; rides the engine's jit key).
+
+    ``kind`` selects which fields matter -- use the classmethod
+    constructors (:meth:`slo_burn`, :meth:`lag_growth`,
+    :meth:`rebalance_storm`, :meth:`consumer_thrash`) rather than
+    spelling every knob.  Windows/half-lives are in simulation steps.
+    """
+
+    name: str
+    kind: str
+    severity: str = "page"
+    # slo_burn: both EWMA windows of the violation indicator must burn
+    # budget (1 - slo_target) at >= burn_threshold x the sustainable rate
+    slo_target: float = 0.99
+    burn_threshold: float = 2.0
+    fast_halflife: float = 8.0
+    slow_halflife: float = 64.0
+    # lag_growth: EWMA(lag delta) > min_growth for sustain_steps steps
+    growth_halflife: float = 16.0
+    sustain_steps: int = 8
+    min_growth: float = 0.0
+    # rebalance_storm: any partition blocked for >= storm_steps steps
+    storm_steps: int = 4
+    # consumer_thrash: EWMA(consumer-count-changed) > thrash_rate
+    thrash_halflife: float = 16.0
+    thrash_rate: float = 0.25
+
+    def __post_init__(self) -> None:
+        if self.kind not in ALERT_KINDS:
+            raise ValueError(
+                f"unknown alert kind {self.kind!r}; have {ALERT_KINDS}")
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"unknown severity {self.severity!r}; have {SEVERITIES}")
+        if not self.name:
+            raise ValueError("alert rules need a non-empty name")
+        for fld in ("fast_halflife", "slow_halflife", "growth_halflife",
+                    "thrash_halflife"):
+            if not float(getattr(self, fld)) > 0.0:
+                raise ValueError(
+                    f"{self.name}: {fld} must be > 0 steps, got "
+                    f"{getattr(self, fld)!r}")
+        if not 0.0 < float(self.slo_target) < 1.0:
+            raise ValueError(
+                f"{self.name}: slo_target must be in (0, 1) -- the error "
+                f"budget is 1 - slo_target -- got {self.slo_target!r}")
+        if int(self.sustain_steps) < 1 or int(self.storm_steps) < 1:
+            raise ValueError(
+                f"{self.name}: sustain_steps/storm_steps must be >= 1")
+        if not float(self.burn_threshold) > 0.0:
+            raise ValueError(
+                f"{self.name}: burn_threshold must be > 0, got "
+                f"{self.burn_threshold!r}")
+        if not 0.0 < float(self.thrash_rate) < 1.0:
+            raise ValueError(
+                f"{self.name}: thrash_rate is a change *fraction* in (0, 1), "
+                f"got {self.thrash_rate!r}")
+
+    # -- constructors ---------------------------------------------------
+
+    @classmethod
+    def slo_burn(cls, name: str = "slo_burn", *, slo_target: float = 0.99,
+                 burn_threshold: float = 2.0, fast_halflife: float = 8.0,
+                 slow_halflife: float = 64.0,
+                 severity: str = "page") -> "AlertRule":
+        return cls(name=name, kind="slo_burn", severity=severity,
+                   slo_target=slo_target, burn_threshold=burn_threshold,
+                   fast_halflife=fast_halflife, slow_halflife=slow_halflife)
+
+    @classmethod
+    def lag_growth(cls, name: str = "lag_growth", *,
+                   growth_halflife: float = 16.0, sustain_steps: int = 8,
+                   min_growth: float = 0.0,
+                   severity: str = "page") -> "AlertRule":
+        return cls(name=name, kind="lag_growth", severity=severity,
+                   growth_halflife=growth_halflife,
+                   sustain_steps=sustain_steps, min_growth=min_growth)
+
+    @classmethod
+    def rebalance_storm(cls, name: str = "rebalance_storm", *,
+                        storm_steps: int = 4,
+                        severity: str = "ticket") -> "AlertRule":
+        return cls(name=name, kind="rebalance_storm", severity=severity,
+                   storm_steps=storm_steps)
+
+    @classmethod
+    def consumer_thrash(cls, name: str = "consumer_thrash", *,
+                        thrash_halflife: float = 16.0,
+                        thrash_rate: float = 0.25,
+                        severity: str = "ticket") -> "AlertRule":
+        return cls(name=name, kind="consumer_thrash", severity=severity,
+                   thrash_halflife=thrash_halflife, thrash_rate=thrash_rate)
+
+
+def default_rules(*, slo_target: float = 0.99) -> Tuple[AlertRule, ...]:
+    """The canonical four-rule set: one rule per failure mode the paper
+    prices (SLO burn, Eq. 1 invariant, rebalance downtime, flapping)."""
+    return (AlertRule.slo_burn(slo_target=slo_target),
+            AlertRule.lag_growth(),
+            AlertRule.rebalance_storm(),
+            AlertRule.consumer_thrash())
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertConfig:
+    """A rule set plus the incident-table bound (hashable).
+
+    ``max_incidents`` bounds the per-rule open/close table carried
+    through the scan; incidents past the bound still *count* (see
+    ``AlertState.count``) but lose their open/close steps.
+    """
+
+    rules: Tuple[AlertRule, ...] = ()
+    max_incidents: int = 32
+
+    def __post_init__(self) -> None:
+        if not self.rules:
+            raise ValueError(
+                "AlertConfig needs at least one AlertRule (see "
+                "repro.telemetry.alerts.default_rules)")
+        names = [r.name for r in self.rules]
+        if len(set(names)) != len(names):
+            raise ValueError(
+                f"alert rule names must be unique, got {names}")
+        if int(self.max_incidents) < 1:
+            raise ValueError(
+                f"max_incidents={self.max_incidents!r} must be >= 1")
+
+    @property
+    def rule_names(self) -> Tuple[str, ...]:
+        return tuple(r.name for r in self.rules)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AlertState:
+    """Fixed-shape alert carry: ``R`` rules x ``M = max_incidents`` table
+    rows.  ``count`` is the total incidents ever opened per rule (it may
+    exceed ``M``; overflowed incidents keep counting but drop their
+    table row)."""
+
+    tick: jax.Array         # i32[]    valid steps seen (absolute step)
+    fast: jax.Array         # f32[R]   fast EWMA accumulator (per kind)
+    fast_w: jax.Array       # f32[R]   its debias weight
+    slow: jax.Array         # f32[R]   slow EWMA accumulator
+    slow_w: jax.Array       # f32[R]
+    consec: jax.Array       # i32[R]   consecutive-condition counter
+    prev_lag: jax.Array     # f32[]    last step's total lag
+    prev_cons: jax.Array    # f32[]    last step's consumer count
+    measure: jax.Array      # f32[R]   current measured value per rule
+    active: jax.Array       # bool[R]  rule currently firing
+    cur_start: jax.Array    # i32[R]   open step of the firing incident
+    cur_peak: jax.Array     # f32[R]   peak measure of the firing incident
+    open_step: jax.Array    # i32[R, M]  -1 = row unused
+    close_step: jax.Array   # i32[R, M]  -1 = still open / unused
+    peak: jax.Array         # f32[R, M]
+    count: jax.Array        # i32[R]   incidents ever opened
+    rule_names: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True))
+
+
+def alert_init(cfg: AlertConfig) -> AlertState:
+    r, m = len(cfg.rules), int(cfg.max_incidents)
+    zf = jnp.zeros(r, jnp.float32)
+    zi = jnp.zeros(r, jnp.int32)
+    return AlertState(
+        tick=jnp.int32(0), fast=zf, fast_w=zf, slow=zf, slow_w=zf,
+        consec=zi, prev_lag=jnp.float32(0.0), prev_cons=jnp.float32(0.0),
+        measure=zf, active=jnp.zeros(r, bool), cur_start=zi - 1,
+        cur_peak=zf, open_step=jnp.full((r, m), -1, jnp.int32),
+        close_step=jnp.full((r, m), -1, jnp.int32),
+        peak=jnp.zeros((r, m), jnp.float32), count=zi,
+        rule_names=cfg.rule_names)
+
+
+def _alpha(halflife: float) -> float:
+    return 1.0 - 2.0 ** (-1.0 / float(halflife))
+
+
+def alert_step(cfg: AlertConfig, state: AlertState, *, lag_total, consumers,
+               unreadable, storm_parts, slo_lag,
+               valid: Optional[jax.Array] = None) -> AlertState:
+    """Evaluate every rule on this step's already-computed scalars.
+
+    Pure ``jnp`` reads -- alerting never changes the trajectories.
+    ``valid`` gates padded fleet steps out, like ``sketch_update``.
+    """
+    lag_total = jnp.asarray(lag_total, jnp.float32)
+    consumers = jnp.asarray(consumers, jnp.float32)
+    unreadable = jnp.asarray(unreadable, jnp.float32)
+    storm_parts = jnp.asarray(storm_parts, jnp.float32)
+    tick = state.tick
+
+    fasts, fast_ws, slows, slow_ws = [], [], [], []
+    consecs, measures, firings = [], [], []
+    dlag = jnp.where(tick > 0, lag_total - state.prev_lag, 0.0)
+    changed = jnp.where(tick > 0,
+                        (consumers != state.prev_cons).astype(jnp.float32),
+                        0.0)
+    for i, rule in enumerate(cfg.rules):
+        fast, fw = state.fast[i], state.fast_w[i]
+        slow, sw = state.slow[i], state.slow_w[i]
+        consec = state.consec[i]
+        if rule.kind == "slo_burn":
+            v = (lag_total > jnp.float32(slo_lag)).astype(jnp.float32)
+            af = jnp.float32(_alpha(rule.fast_halflife))
+            as_ = jnp.float32(_alpha(rule.slow_halflife))
+            fast = (1 - af) * fast + af * v
+            fw = (1 - af) * fw + af
+            slow = (1 - as_) * slow + as_ * v
+            sw = (1 - as_) * sw + as_
+            budget = jnp.float32(1.0 - rule.slo_target)
+            burn_fast = fast / jnp.maximum(fw, 1e-12) / budget
+            burn_slow = slow / jnp.maximum(sw, 1e-12) / budget
+            measure = jnp.minimum(burn_fast, burn_slow)
+            firing = measure > jnp.float32(rule.burn_threshold)
+        elif rule.kind == "lag_growth":
+            ag = jnp.float32(_alpha(rule.growth_halflife))
+            fast = (1 - ag) * fast + ag * dlag
+            fw = (1 - ag) * fw + ag
+            measure = fast / jnp.maximum(fw, 1e-12)
+            grow = measure > jnp.float32(rule.min_growth)
+            consec = jnp.where(grow, consec + 1, 0)
+            firing = consec >= rule.sustain_steps
+        elif rule.kind == "rebalance_storm":
+            blocked = (unreadable > 0) | (storm_parts > 0)
+            consec = jnp.where(blocked, consec + 1, 0)
+            measure = consec.astype(jnp.float32)
+            firing = consec >= rule.storm_steps
+        else:                                   # consumer_thrash
+            at = jnp.float32(_alpha(rule.thrash_halflife))
+            fast = (1 - at) * fast + at * changed
+            fw = (1 - at) * fw + at
+            measure = fast / jnp.maximum(fw, 1e-12)
+            firing = measure > jnp.float32(rule.thrash_rate)
+        fasts.append(fast)
+        fast_ws.append(fw)
+        slows.append(slow)
+        slow_ws.append(sw)
+        consecs.append(consec)
+        measures.append(measure)
+        firings.append(firing)
+
+    measure = jnp.stack(measures)
+    firing = jnp.stack(firings)
+    r, m = state.open_step.shape
+    rows = jnp.arange(r)
+    opening = firing & ~state.active
+    closing = ~firing & state.active
+    # the firing incident's running peak (seeded by the opening measure)
+    cur_peak = jnp.where(opening, measure,
+                         jnp.where(state.active & firing,
+                                   jnp.maximum(state.cur_peak, measure),
+                                   state.cur_peak))
+    cur_start = jnp.where(opening, tick, state.cur_start)
+    # open: write row `count` (if it still fits the bounded table)
+    oslot = jnp.clip(state.count, 0, m - 1)
+    o_ok = opening & (state.count < m)
+    open_step = state.open_step.at[rows, oslot].set(
+        jnp.where(o_ok, tick, state.open_step[rows, oslot]))
+    # close: the open incident lives at row `count - 1`
+    cslot = jnp.clip(state.count - 1, 0, m - 1)
+    c_ok = closing & (state.count >= 1) & (state.count <= m)
+    close_step = state.close_step.at[rows, cslot].set(
+        jnp.where(c_ok, tick - 1, state.close_step[rows, cslot]))
+    peak = state.peak.at[rows, cslot].set(
+        jnp.where(c_ok, cur_peak, state.peak[rows, cslot]))
+    new = AlertState(
+        tick=tick + 1,
+        fast=jnp.stack(fasts), fast_w=jnp.stack(fast_ws),
+        slow=jnp.stack(slows), slow_w=jnp.stack(slow_ws),
+        consec=jnp.stack(consecs),
+        prev_lag=lag_total, prev_cons=consumers,
+        measure=measure, active=firing,
+        cur_start=cur_start, cur_peak=cur_peak,
+        open_step=open_step, close_step=close_step, peak=peak,
+        count=state.count + opening.astype(jnp.int32),
+        rule_names=state.rule_names)
+    if valid is None:
+        return new
+    keep = jnp.asarray(valid, bool)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(keep, a, b), new, state)
+
+
+# ---------------------------------------------------------------------------
+# host-side decoding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Incident:
+    """One decoded incident.  ``open_step``/``close_step`` are inclusive
+    simulation steps; a still-open incident closes at the last step with
+    ``still_open=True``.  ``index`` locates the stream in a batched
+    state (e.g. ``(policy,)`` through ``api.simulate``)."""
+
+    rule: str
+    kind: str
+    severity: str
+    open_step: int
+    close_step: int
+    duration_s: float
+    peak: float
+    still_open: bool = False
+    index: Tuple[int, ...] = ()
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "kind": self.kind,
+                "severity": self.severity, "open_step": self.open_step,
+                "close_step": self.close_step,
+                "duration_s": round(float(self.duration_s), 6),
+                "peak": round(float(self.peak), 6),
+                "still_open": self.still_open, "index": list(self.index)}
+
+
+def decode_incidents(state: AlertState, cfg: AlertConfig,
+                     dt: float = 1.0) -> List[Incident]:
+    """Typed incidents from a (possibly batched) final ``AlertState``,
+    ordered by ``(index, open_step, rule)``.  Incidents past the bounded
+    table are counted but carry no rows; compare ``incident_counts``
+    against ``len(decode_incidents(...))`` to detect the overflow."""
+    rule_of = {r.name: r for r in cfg.rules}
+    counts = np.asarray(state.count)
+    lead = counts.shape[:-1]
+    opens = np.asarray(state.open_step)
+    closes = np.asarray(state.close_step)
+    peaks = np.asarray(state.peak)
+    cur_peak = np.asarray(state.cur_peak)
+    active = np.asarray(state.active)
+    ticks = np.asarray(state.tick)
+    out: List[Incident] = []
+    for index in (np.ndindex(*lead) if lead else [()]):
+        t_end = int(ticks[index]) - 1
+        for ri, name in enumerate(state.rule_names):
+            rule = rule_of[name]
+            n_rows = min(int(counts[index + (ri,)]), opens.shape[-1])
+            for row in range(n_rows):
+                o = int(opens[index + (ri, row)])
+                if o < 0:
+                    continue
+                c = int(closes[index + (ri, row)])
+                if c >= 0:
+                    out.append(Incident(
+                        rule=name, kind=rule.kind, severity=rule.severity,
+                        open_step=o, close_step=c,
+                        duration_s=(c - o + 1) * dt,
+                        peak=float(peaks[index + (ri, row)]), index=index))
+                elif bool(active[index + (ri,)]) and t_end >= o:
+                    out.append(Incident(
+                        rule=name, kind=rule.kind, severity=rule.severity,
+                        open_step=o, close_step=t_end,
+                        duration_s=(t_end - o + 1) * dt,
+                        peak=float(cur_peak[index + (ri,)]),
+                        still_open=True, index=index))
+    out.sort(key=lambda e: (e.index, e.open_step, e.rule))
+    return out
+
+
+def incident_counts(state: AlertState) -> Dict[str, int]:
+    """Total incidents per rule (overflowed ones included), summed over
+    any leading batch axes."""
+    counts = np.asarray(state.count)
+    flat = counts.reshape(-1, counts.shape[-1]).sum(axis=0)
+    return {name: int(flat[i]) for i, name in enumerate(state.rule_names)}
+
+
+def incident_summary(state: AlertState, cfg: AlertConfig,
+                     dt: float = 1.0) -> Dict[str, Dict[str, float]]:
+    """Per-rule roll-up for BENCH blocks / exporters: incident count,
+    total alert duration, peak measurement, and how many are still
+    open."""
+    incidents = decode_incidents(state, cfg, dt=dt)
+    counts = incident_counts(state)
+    out: Dict[str, Dict[str, float]] = {
+        name: {"count": float(counts.get(name, 0)),
+               "total_duration_s": 0.0, "peak": 0.0, "open": 0.0}
+        for name in state.rule_names
+    }
+    for inc in incidents:
+        row = out[inc.rule]
+        row["total_duration_s"] += inc.duration_s
+        row["peak"] = max(row["peak"], inc.peak)
+        row["open"] += 1.0 if inc.still_open else 0.0
+    return out
+
+
+__all__ = [
+    "ALERT_KINDS",
+    "AlertConfig",
+    "AlertRule",
+    "AlertState",
+    "Incident",
+    "alert_init",
+    "alert_step",
+    "decode_incidents",
+    "default_rules",
+    "incident_counts",
+    "incident_summary",
+]

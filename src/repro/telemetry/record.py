@@ -49,11 +49,21 @@ class TelemetryConfig:
     bounds recorder memory: ``None`` records every step (``T`` rows);
     an integer keeps only the last ``ring`` steps in a carried ring
     buffer (the flight-recorder mode for very long scans).
+
+    The streaming-observability knobs ride here too: ``sketch`` carries
+    online aggregators (``repro.telemetry.sketch``) through the scan,
+    ``alerts`` evaluates a declarative rule set in-loop
+    (``repro.telemetry.alerts``), and ``record_frames=False`` drops the
+    per-step frame entirely -- sketches/alerts in O(1) memory with no
+    O(T) history, the planet-scale monitoring mode.
     """
 
     enabled: bool = True
     lag_quantiles: Tuple[float, ...] = (0.5, 0.9, 0.99)
     ring: Optional[int] = None
+    record_frames: bool = True
+    sketch: Optional["Any"] = None       # telemetry.sketch.SketchConfig
+    alerts: Optional["Any"] = None       # telemetry.alerts.AlertConfig
 
     def __post_init__(self) -> None:
         for q in self.lag_quantiles:
@@ -64,6 +74,22 @@ class TelemetryConfig:
             raise ValueError(
                 f"ring={self.ring!r} must be a positive number of steps "
                 f"(or None to record every step)")
+        if self.ring is not None and not self.record_frames:
+            raise ValueError(
+                "ring is a frame-recorder mode; record_frames=False with "
+                "ring set is contradictory (drop ring, or keep frames)")
+        if self.sketch is not None:
+            from . import sketch as _sketch
+            if not isinstance(self.sketch, _sketch.SketchConfig):
+                raise TypeError(
+                    f"TelemetryConfig.sketch must be a SketchConfig, got "
+                    f"{type(self.sketch).__name__}")
+        if self.alerts is not None:
+            from . import alerts as _alerts
+            if not isinstance(self.alerts, _alerts.AlertConfig):
+                raise TypeError(
+                    f"TelemetryConfig.alerts must be an AlertConfig, got "
+                    f"{type(self.alerts).__name__}")
 
     @property
     def base_channels(self) -> Tuple[str, ...]:
@@ -305,6 +331,21 @@ def decode_events(frame: TelemetryFrame) -> List[TelemetryEvent]:
     return events
 
 
+def _require_pandas(caller: str):
+    """Late pandas import with a degrade-gracefully error: pandas is an
+    optional dependency (not in requirements.txt), and the exporters are
+    conveniences, not core paths."""
+    try:
+        import pandas as pd
+    except ImportError as exc:
+        raise ImportError(
+            f"{caller} needs pandas, which is an optional dependency and "
+            f"is not installed in this environment.  Install pandas, or "
+            f"use to_json()/decode_events() (stdlib + numpy only) instead."
+        ) from exc
+    return pd
+
+
 @dataclasses.dataclass
 class EventStream:
     """A decoded frame: typed events plus the raw per-step samples."""
@@ -338,8 +379,7 @@ class EventStream:
     def to_dataframe(self):
         """The per-step samples as a tidy ``pandas.DataFrame`` (one row
         per recorded (index, step), one column per channel)."""
-        import pandas as pd                    # optional dep, import late
-
+        pd = _require_pandas("EventStream.to_dataframe")
         ch = np.asarray(self.frame.channels, np.float64)
         steps = np.asarray(self.frame.steps, np.int64)
         lead = ch.shape[:-2]
@@ -360,8 +400,7 @@ class EventStream:
 
     def events_dataframe(self):
         """The decoded events as a ``pandas.DataFrame``."""
-        import pandas as pd
-
+        pd = _require_pandas("EventStream.events_dataframe")
         return pd.DataFrame([
             {"kind": e.kind, "step": e.step, "index": e.index, **e.data}
             for e in self.events])

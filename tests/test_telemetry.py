@@ -458,3 +458,103 @@ def test_bench_diff_gate():
     better = _inject_throughput_regression(report, factor=2.0)
     res = diff(report, better, DEFAULT_THRESHOLD)
     assert res["regressions"] == [] and len(res["improvements"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# custom-counter policies end to end + optional-pandas degradation
+# ---------------------------------------------------------------------------
+
+def test_counter_state_flows_into_fleet_sketch():
+    """A registered policy carrying ``CounterState`` gets its counters
+    recorded as first-class channels all the way through the
+    fleet-padded path: frame names, sketch aggregation, histograms."""
+    from repro import registry
+    from repro.telemetry import CounterState, SketchConfig
+
+    NAME = "TEST_COUNTED"
+
+    @registry.register(NAME, family="reactive", backend="jax",
+                       summary="test-only KEDA_LAG wrapper with counters")
+    def _build(n, capacity):
+        inner = registry.make_policy("KEDA_LAG", n, capacity, backend="jax")
+
+        def init(n_partitions):
+            return CounterState(counters=jnp.zeros(2, jnp.float32),
+                                inner=inner.init(n_partitions),
+                                names=("steps_seen", "scale_ups"))
+
+        def step(speeds, lag, prev, state, active=None):
+            args = (speeds, lag, prev, state.inner)
+            assign, k, nxt = inner.step(*(args if active is None
+                                          else args + (active,)))
+            up = (nxt[0] > state.inner[0]).astype(jnp.float32)
+            counters = state.counters + jnp.stack([jnp.float32(1.0), up])
+            return assign, k, CounterState(counters=counters, inner=nxt,
+                                           names=state.names)
+
+        return init, step
+
+    try:
+        speeds, active = _scenario(t=20, n=5)
+        tele = TelemetryConfig(sketch=SketchConfig(
+            hist_channels=("lag_total", "steps_seen")))
+        cfg = dataclasses.replace(CFG, telemetry=tele)
+        # through the fleet (T padded 20 -> 32, N padded 5 -> 8) ...
+        fleet = FleetRunner(FleetConfig(t_buckets=(32,), n_buckets=(8,)))
+        res = fleet.simulate((NAME,), speeds, cfg, active=active)
+        frame_names = res.telemetry[0].names
+        assert frame_names[-2:] == ("steps_seen", "scale_ups")
+        ((_, counted),) = res.sketch_summaries(0)
+        assert counted.names[-2:] == ("steps_seen", "scale_ups")
+        # ... the padded steps stay invisible: steps_seen counts exactly
+        # the T real steps, on every aggregator
+        t = speeds.shape[1]
+        i = counted.channel_index("steps_seen")
+        assert counted.count == t
+        assert float(counted.vmax[i]) == t
+        assert float(counted.vmin[i]) == 1.0
+        assert float(counted.mean[i]) == pytest.approx((t + 1) / 2)
+        assert counted.quantile(1.0, "steps_seen") == pytest.approx(
+            t, abs=counted.edges[1] - counted.edges[0])
+        # and the fleet result equals the direct engine bit-for-bit
+        direct = simulate_lag(speeds[0], policy=NAME, cfg=cfg,
+                              active=active[0])
+        got = jax.tree_util.tree_map(lambda a: a[0], res.sketch[0])
+        for fld in ("count", "mean", "m2", "vmin", "vmax", "hist"):
+            assert np.asarray(getattr(got, fld)).tobytes() == \
+                np.asarray(getattr(direct.sketch, fld)).tobytes(), fld
+        # mixing counter channel sets in one sweep fails by name, not
+        # with a cryptic treedef mismatch
+        mixed = dataclasses.replace(CFG, telemetry=TelemetryConfig())
+        with pytest.raises(ValueError, match="identical telemetry channels"):
+            sweep_lag((NAME, "KEDA_LAG"), speeds, cfg=mixed, active=active)
+    finally:
+        registry._REGISTRY.pop((NAME, "jax"), None)
+        if NAME in registry._ORDER:
+            registry._ORDER.remove(NAME)
+
+
+def test_to_dataframe_degrades_without_pandas(monkeypatch):
+    """pandas is optional: the dataframe exporters raise a named
+    ImportError pointing at the stdlib path, everything else works."""
+    import builtins
+
+    speeds, active = _scenario(t=10, n=4)
+    res = simulate_lag(speeds[0], policy="MBFP", cfg=_with_tele(CFG),
+                       active=active[0])
+    stream = EventStream.from_frame(res.telemetry)
+
+    real_import = builtins.__import__
+
+    def no_pandas(name, *a, **kw):
+        if name == "pandas" or name.startswith("pandas."):
+            raise ImportError(f"No module named {name!r}")
+        return real_import(name, *a, **kw)
+
+    monkeypatch.setattr(builtins, "__import__", no_pandas)
+    with pytest.raises(ImportError, match="to_dataframe needs pandas"):
+        stream.to_dataframe()
+    with pytest.raises(ImportError, match="optional dependency"):
+        stream.events_dataframe()
+    # the stdlib escape hatches named in the error still work
+    assert json.loads(stream.to_json())
