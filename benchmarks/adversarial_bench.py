@@ -1,0 +1,207 @@
+"""Adversarial robustness benchmark: the worst-case envelope per policy
+family, published as ``BENCH_adversarial.json``.
+
+For one representative policy per registry family (first registered jax
+policy -- the paper's ordering) the evolutionary scenario search
+(``repro.scenarios.search``) evolves the ``adversarial`` genome that
+maximizes SLO damage, with burn-rate incidents folded into the fitness
+(``incident_weight``), and a uniform random-search baseline run at the
+*same* fitness-oracle eval budget.  The JSON records, per family:
+
+* ``worst_violation_frac`` / ``worst_fitness`` / ``worst_incidents`` --
+  the worst-case envelope.  ``bench_diff`` gates these with *higher is
+  worse* semantics (a code change that lets the search do more damage to
+  the same policy is a robustness regression; zero baselines still
+  gate);
+* the witness genome + decoded knobs that achieve it (the falsifiable
+  part: replay it via ``repro.api.replay``), also written as a replayable
+  trace ``witness_<family>.npz`` at the repo root (CI artifact);
+* ``search_evals_per_s`` -- steady oracle throughput (gated, higher is
+  better: every generation after the first must hit the fleet runner's
+  warm compile cache);
+* the random baseline's best and ``beats_baseline``.
+
+``--smoke`` (CI) asserts, at tiny sizes: a fixed-seed search is
+bit-deterministic (identical witness genome twice), and evolution
+strictly beats random search at equal evals for >= 2 policy families.
+
+Run:  PYTHONPATH=src:. python benchmarks/run.py        (adversarial_* rows)
+or    PYTHONPATH=src:. python benchmarks/adversarial_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.api import BenchReport
+from repro.fleet import FleetRunner
+from repro.lagsim import LagSimConfig
+from repro.scenarios import (SearchConfig, attack, family_representatives,
+                             random_search, save_trace)
+from repro.telemetry import AlertConfig, TelemetryConfig, default_rules
+
+from benchmarks.sections import observability_block, section, telemetry_block
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_adversarial.json")
+
+#: the full-run search budget (per policy family)
+FULL = SearchConfig(pop_size=8, generations=6, iters=96, n=6,
+                    incident_weight=0.05)
+#: the CI smoke budget (same shape, fewer generations)
+SMOKE = SearchConfig(pop_size=8, generations=5, iters=96, n=6,
+                     incident_weight=0.05)
+
+
+def _sim(cfg: SearchConfig) -> LagSimConfig:
+    """The fitness oracle's sim config: alerting on whenever incidents
+    are a fitness component."""
+    if cfg.incident_weight == 0.0:
+        return LagSimConfig()
+    return LagSimConfig(telemetry=TelemetryConfig(
+        record_frames=False, alerts=AlertConfig(rules=default_rules())))
+
+
+def witness_path(family: str) -> str:
+    return os.path.join(REPO_ROOT, f"witness_{family}.npz")
+
+
+def run(config: SearchConfig = FULL, seed: int = 0,
+        families: Optional[Sequence[str]] = None,
+        write_witnesses: bool = True) -> Dict:
+    """Search every (or the named) registry families' representatives;
+    -> the BENCH_adversarial.json dict (also written to disk)."""
+    reps = family_representatives()
+    if families is not None:
+        reps = {f: reps[f] for f in families}
+    sim = _sim(config)
+    runner = FleetRunner()
+    envelope: Dict[str, Any] = {}
+    for fam, pol in reps.items():
+        t0 = time.perf_counter()
+        ev = attack(pol, config=config, sim=sim, seed=seed, runner=runner)
+        search_s = time.perf_counter() - t0
+        rs = random_search(pol, config=config, sim=sim, seed=seed,
+                           runner=runner, evals=ev.evals)
+        if write_witnesses:
+            save_trace(ev.witness_trace(config, seed=seed),
+                       witness_path(fam))
+        envelope[fam] = {
+            "policy": ev.policy,
+            "worst_violation_frac": ev.best_violation_frac,
+            "worst_fitness": ev.best_fitness,
+            "worst_incidents": ev.best_incidents,
+            "witness_genome": [float(g) for g in ev.best_genome],
+            "witness_knobs": {k: float(v)
+                              for k, v in ev.best_knobs.items()},
+            "evals": ev.evals,
+            "generations_run": ev.generations_run,
+            "search_evals_per_s": (ev.evals / search_s
+                                   if search_s > 0 else 0.0),
+            "baseline": {"best_fitness": rs.best_fitness,
+                         "best_violation_frac": rs.best_violation_frac,
+                         "evals": rs.evals},
+            "beats_baseline": bool(ev.best_fitness > rs.best_fitness),
+        }
+    report = BenchReport(
+        kind="adversarial",
+        config={
+            "family": "adversarial", "seed": seed,
+            "pop_size": config.pop_size,
+            "generations": config.generations,
+            "iters": config.iters, "n_partitions": config.n,
+            "scenarios_per_genome": config.scenarios_per_genome,
+            "incident_weight": config.incident_weight,
+            "representatives": dict(reps),
+        },
+        families=envelope,
+        extra={
+            "runner_stats": runner.stats(),
+            "telemetry": telemetry_block(),
+            "observability": observability_block(seed=seed),
+        },
+    )
+    return report.write(BENCH_PATH)
+
+
+# ---------------------------------------------------------------------------
+# correctness smoke (CI: deterministic, beats random, witnesses replay)
+# ---------------------------------------------------------------------------
+
+def smoke(seed: int = 0) -> None:
+    from repro.scenarios import load_trace
+
+    config = SMOKE
+    sim = _sim(config)
+    runner = FleetRunner()
+
+    # fixed seed => bit-identical search (the cheapest two families)
+    reps = family_representatives()
+    for fam in ("heuristic", "reactive"):
+        a = attack(reps[fam], config=config, sim=sim, seed=seed,
+                   runner=runner)
+        b = attack(reps[fam], config=config, sim=sim, seed=seed,
+                   runner=runner)
+        assert np.array_equal(a.best_genome, b.best_genome), (
+            f"{reps[fam]}: fixed-seed search is not deterministic: "
+            f"{a.best_genome} vs {b.best_genome}")
+        assert a.best_fitness == b.best_fitness, reps[fam]
+
+    out = run(config=config, seed=seed)
+    beats = [fam for fam, row in out["families"].items()
+             if row["beats_baseline"]]
+    assert len(beats) >= 2, (
+        f"evolution must strictly beat random search at equal evals for "
+        f">= 2 policy families; beat it only for {beats} "
+        f"(envelope: { {f: r['worst_fitness'] for f, r in out['families'].items()} }, "
+        f"baselines: { {f: r['baseline']['best_fitness'] for f, r in out['families'].items()} })")
+
+    # every witness trace must load, validate, and carry its genome
+    for fam, row in out["families"].items():
+        tr = load_trace(witness_path(fam))
+        assert tr.meta["genome"] == row["witness_genome"], fam
+        assert tr.rates.shape == (4, config.iters, config.n), fam
+    print(f"adversarial smoke OK: fixed-seed search deterministic, "
+          f"evolution > random at equal evals for {len(beats)}/"
+          f"{len(out['families'])} families ({', '.join(beats)}); wrote "
+          f"{BENCH_PATH} + {len(out['families'])} witness trace(s)")
+
+
+@section("adversarial", prefixes=("adversarial_",),
+         bench_json="BENCH_adversarial.json")
+def _rows():
+    out = run()                     # also writes BENCH_adversarial.json
+    for fam, row in sorted(out["families"].items()):
+        us_per_eval = (1e6 / row["search_evals_per_s"]
+                       if row["search_evals_per_s"] else 0.0)
+        yield (f"adversarial_{fam}_{row['policy']},"
+               f"{us_per_eval:.1f},{row['worst_violation_frac']:.6f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert fixed-seed determinism and evolution > "
+                         "random at equal evals, then write "
+                         "BENCH_adversarial.json + witness traces")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(seed=args.seed)
+        return
+    out = run(seed=args.seed)
+    print(f"wrote {BENCH_PATH}")
+    for fam, row in sorted(out["families"].items()):
+        base = row["baseline"]["best_fitness"]
+        print(f"  {fam:<10} {row['policy']:<12} worst violation "
+              f"{row['worst_violation_frac']:.3f} (fitness "
+              f"{row['worst_fitness']:.3f} vs random {base:.3f}, "
+              f"{row['evals']} evals)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,13 @@ leaves by path, and classifies each pair by its key name:
   relative change floored at one incident, so a run that starts paging
   (0 -> 1 SLO-burn incidents) fails the gate even though 0 has no
   well-defined relative change;
+* **envelope leaves** -- the adversarial worst-case envelope
+  (``worst_*`` leaf names in ``BENCH_adversarial.json``): *higher is
+  worse* -- a code change that lets the scenario search do more SLO
+  damage to the same policy is a robustness regression.  Zero baselines
+  gate too (floored at 0.25, a quarter of the violation-fraction
+  range), so a policy whose envelope was clean cannot silently start
+  losing;
 * everything else (counts, configs, SLO metrics, sketch means) is
   compared for information only and never gates -- those belong to
   correctness tests, not a perf gate.
@@ -26,9 +33,11 @@ noise on shared CI hosts; the gate watches steady state.
 Exit status: 0 = no regressions, 1 = at least one regression (or a
 malformed/missing input).  ``--smoke`` self-checks the gate against the
 checked-in artifacts: each file diffed against itself must produce zero
-regressions, an injected 50% throughput drop must be detected, and an
+regressions, an injected 50% throughput drop must be detected, an
 injected incident storm (every incident count/duration worsened) must
-be detected via the incident leaves.
+be detected via the incident leaves, and an injected envelope blow-up
+(every ``worst_*`` leaf worsened) must be detected via the envelope
+leaves.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_diff.py OLD.json NEW.json
 or    PYTHONPATH=src:. python benchmarks/bench_diff.py --smoke
@@ -48,7 +57,8 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DEFAULT_THRESHOLD = 0.30
 
 #: checked-in artifacts the ``--smoke`` self-check runs over
-SMOKE_ARTIFACTS = ("BENCH_lagsim.json", "BENCH_fleet.json")
+SMOKE_ARTIFACTS = ("BENCH_lagsim.json", "BENCH_fleet.json",
+                   "BENCH_adversarial.json")
 
 #: leaf-key suffixes / fragments -> metric direction (matched on the
 #: final path component only, so e.g. ``steps_per_scenario`` never
@@ -62,6 +72,15 @@ LOWER_FRAGMENTS = ("us_per",)
 #: fragments, so e.g. a probe nested under a ``telemetry`` block still
 #: gates -- more incidents / longer burn than the baseline = regression
 INCIDENT_FRAGMENTS = ("incident",)
+#: adversarial worst-case envelope leaves (``BENCH_adversarial.json``
+#: family rows): matched on the final path component, higher is worse.
+#: Checked before the incident fragments so ``worst_incidents`` uses the
+#: envelope formula (its baseline floor suits [0, 1]-scale leaves).
+ENVELOPE_PREFIXES = ("worst_",)
+#: zero-baseline floor for envelope leaves (violation fractions live in
+#: [0, 1]; a quarter of that range keeps small absolute drifts gateable
+#: without amplifying float noise around 0)
+ENVELOPE_FLOOR = 0.25
 #: never gate on these even when they look like perf leaves:
 #: first-call/compile cost is host noise (the gate watches steady
 #: state), ``consumer_seconds`` is a paper SLO metric (correctness tests
@@ -83,8 +102,13 @@ def _leaves(tree: Any, path: Tuple[str, ...] = ()
 
 
 def _direction(path: Tuple[str, ...]) -> str:
-    """-> 'higher' | 'lower' | 'incident' | 'info' for one leaf path."""
+    """-> 'higher' | 'lower' | 'incident' | 'envelope' | 'info' for one
+    leaf path."""
+    if path and path[0] == "config":
+        return "info"          # config blocks are metadata, never perf
     joined = "/".join(path).lower()
+    if path and path[-1].lower().startswith(ENVELOPE_PREFIXES):
+        return "envelope"
     if any(frag in joined for frag in INCIDENT_FRAGMENTS):
         return "incident"
     if any(frag in joined for frag in INFORMATIONAL):
@@ -114,13 +138,18 @@ def diff(old: Dict, new: Dict, threshold: float = DEFAULT_THRESHOLD
         a, b = old_leaves[path], new_leaves[path]
         direction = _direction(path)
         name = "/".join(path)
-        if direction == "info" or (a == 0.0 and direction != "incident"):
+        if direction == "info" or (
+                a == 0.0 and direction not in ("incident", "envelope")):
             out["info"].append((name, a, b, 0.0))
             continue
         if direction == "incident":
             # lower is better; the denominator floor of one incident
             # keeps a zero baseline gateable (0 -> 1 incident = +100%)
             worse = (b - a) / max(abs(a), 1.0)
+        elif direction == "envelope":
+            # worst-case adversarial damage: higher is worse, and a
+            # clean (zero) baseline must still gate
+            worse = (b - a) / max(abs(a), ENVELOPE_FLOOR)
         else:
             rel = (b - a) / abs(a)
             worse = -rel if direction == "higher" else rel
@@ -205,6 +234,27 @@ def _inject_incident_regression(report: Dict, extra: float = 3.0) -> Dict:
     return out
 
 
+def _inject_envelope_regression(report: Dict, delta: float = 0.4) -> Dict:
+    """A copy of ``report`` with every adversarial envelope leaf
+    worsened by ``+delta``: additive, so a policy with a clean (zero)
+    worst case regresses too -- the gate must catch both."""
+    out = copy.deepcopy(report)
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            p = path + (str(k),)
+            if isinstance(v, dict):
+                walk(v, p)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if _direction(p) == "envelope":
+                    node[k] = v + delta
+
+    walk(out, ())
+    return out
+
+
 def _expect_fail(path: str, hurt: Dict, threshold: float, what: str) -> int:
     """Diff ``path`` against the injected ``hurt`` report; 0 iff the gate
     correctly reported at least one regression."""
@@ -227,9 +277,10 @@ def _expect_fail(path: str, hurt: Dict, threshold: float, what: str) -> int:
 
 def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
     """Self-check against the checked-in artifacts: identity diffs must
-    pass; an injected 50% throughput regression and an injected incident
-    storm must both fail."""
+    pass; an injected 50% throughput regression, an injected incident
+    storm and an injected envelope blow-up must all fail."""
     incident_checked = 0
+    envelope_checked = 0
     for name in SMOKE_ARTIFACTS:
         path = os.path.join(REPO_ROOT, name)
         if not os.path.exists(path):
@@ -255,14 +306,26 @@ def smoke(threshold: float = DEFAULT_THRESHOLD) -> int:
             incident_checked += 1
             if _expect_fail(path, stormed, threshold, "incident storm"):
                 return 1
+        blown = _inject_envelope_regression(report)
+        if blown != report:
+            envelope_checked += 1
+            if _expect_fail(path, blown, threshold, "envelope blow-up"):
+                return 1
     if incident_checked == 0:
         print("bench_diff smoke: no artifact carries incident leaves; the "
               "incident gate would be vacuous (run the benchmarks to "
               "regenerate the observability blocks)", file=sys.stderr)
         return 1
+    if envelope_checked == 0:
+        print("bench_diff smoke: no artifact carries adversarial envelope "
+              "leaves; the robustness gate would be vacuous (run "
+              "benchmarks/adversarial_bench.py to regenerate "
+              "BENCH_adversarial.json)", file=sys.stderr)
+        return 1
     print(f"bench_diff smoke OK: identity diffs clean, injected 50% "
           f"throughput regressions detected, injected incident storms "
-          f"detected in {incident_checked} artifact(s) "
+          f"detected in {incident_checked} artifact(s), injected envelope "
+          f"blow-ups detected in {envelope_checked} artifact(s) "
           f"({', '.join(SMOKE_ARTIFACTS)})")
     return 0
 

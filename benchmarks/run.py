@@ -13,6 +13,7 @@ where meaningful, else 0; derived = the quantity the paper reports).
                                                                2024 follow-up)
   fleet_*             bucketed/sharded fleet throughput        (ROADMAP scaling)
   roofline_*          dry-run roofline aggregates              (EXPERIMENTS §Roofline)
+  adversarial_*       worst-case SLO envelope per policy       (robustness gate)
 
 Sections self-register: each benchmark module owns its rows via
 ``benchmarks.sections.section(name, prefixes=..., bench_json=...)`` and
@@ -38,6 +39,7 @@ from benchmarks import controlplane_bench  # noqa: F401  controlplane (BENCH_con
 from benchmarks import optimality_gap      # noqa: F401  opt (BENCH_opt.json)
 from benchmarks import fleet_bench         # noqa: F401  fleet (BENCH_fleet.json)
 from benchmarks import roofline            # noqa: F401  roofline
+from benchmarks import adversarial_bench   # noqa: F401  adversarial (BENCH_adversarial.json)
 
 
 def main() -> None:

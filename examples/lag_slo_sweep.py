@@ -18,8 +18,14 @@ Scenarios run through the *masked* generator API: ``churn`` and
 -- unreadable and empty) rather than idling near zero, exercising the
 variable-N mask contract end to end.
 
+``--trace PATH`` swaps the generated suite for one recorded trace
+(``repro.scenarios`` ``.json``/``.npz`` -- a seed-library shape or an
+adversarial witness), replayed through the same closed loop at the
+trace's own capacity.
+
   PYTHONPATH=src python examples/lag_slo_sweep.py           # small sweep
   PYTHONPATH=src python examples/lag_slo_sweep.py --smoke   # CI-sized
+  PYTHONPATH=src python examples/lag_slo_sweep.py --trace witness_heuristic.npz
 """
 from __future__ import annotations
 
@@ -48,13 +54,29 @@ def main() -> None:
                     help="run the fused Pallas lag-update kernel inside the "
                          "scan (interpret mode on CPU) instead of the jnp "
                          "reference path")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="replay a recorded trace (.json/.npz from "
+                         "repro.scenarios) instead of the generated suite")
     args = ap.parse_args()
-    p = SMOKE if args.smoke else FULL
+    p = dict(SMOKE if args.smoke else FULL)
 
-    cfg = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2,
+    capacity = 1.0
+    if args.trace:
+        from repro.scenarios import load_trace
+
+        tr = load_trace(args.trace)
+        capacity = float(tr.capacity)
+        p["families"] = (tr.name,)
+        p["batch"], p["iters"], p["n"] = tr.batch, tr.iters, tr.n
+        suite = {tr.name: (tr.rates, tr.active)}
+        print(f"replaying trace {tr.name!r} ({tr.source}, "
+              f"capacity {capacity:g})")
+    cfg = LagSimConfig(capacity=capacity, dt=1.0, migration_steps=2,
                        use_kernel=args.use_kernel)
-    suite = masked_scenario_suite(jax.random.key(0), p["batch"], p["iters"],
-                                  p["n"], families=p["families"])
+    if not args.trace:
+        suite = masked_scenario_suite(jax.random.key(0), p["batch"],
+                                      p["iters"], p["n"],
+                                      families=p["families"])
     print(f"closed-loop sweep: {len(p['policies'])} policies x "
           f"{len(p['families'])} families x {p['batch']} streams of "
           f"{p['iters']} steps, {p['n']} partitions (masked) ...")

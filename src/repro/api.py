@@ -13,7 +13,14 @@ versioned result dataclasses (``schema_version`` = ``API_VERSION``):
 * ``optimize``  -- lambda-sweep annealed Pareto frontier of one instance
                    -> ``OptimizeOutcome``;
 * ``evaluate``  -- the paper's Figs. 6-9 tables (CBS / avg R-score /
-                   Pareto membership) on Eq. 11 streams -> ``EvaluateOutcome``.
+                   Pareto membership) on Eq. 11 streams -> ``EvaluateOutcome``;
+* ``attack``    -- adversarial scenario search: evolve the workload
+                   genome that maximizes one policy's SLO violation,
+                   with a random-search baseline at equal evals
+                   -> ``AttackOutcome``;
+* ``replay``    -- run a versioned on-disk trace (``repro.scenarios``
+                   format, or a ``Trace``) through the fleet path
+                   -> ``ReplayOutcome``.
 
 ``sweep`` and ``simulate`` execute through the fleet layer
 (``repro.fleet``): a shared ``default_fleet()`` runner buckets scenarios
@@ -59,6 +66,8 @@ __all__ = [
     "AlertConfig",
     "AlertRule",
     "API_VERSION",
+    "attack",
+    "AttackOutcome",
     "BACKENDS",
     "BenchReport",
     "ControlPlaneConfig",
@@ -73,6 +82,7 @@ __all__ = [
     "get_spec",
     "Incident",
     "list_policies",
+    "load_trace",
     "make_policy",
     "optimize",
     "OptimizeOutcome",
@@ -84,6 +94,12 @@ __all__ = [
     "Policy",
     "PolicySpec",
     "prometheus_exposition",
+    "replay",
+    "ReplayOutcome",
+    "save_trace",
+    "SearchConfig",
+    "SearchResult",
+    "seed_trace",
     "selfcheck",
     "simulate",
     "SimulateOutcome",
@@ -94,6 +110,7 @@ __all__ = [
     "SweepOutcome",
     "TelemetryConfig",
     "TelemetryFrame",
+    "Trace",
     "Tracer",
     "validate_exposition",
 ]
@@ -110,6 +127,10 @@ _TELEMETRY_EXPORTS = ("TelemetryConfig", "TelemetryFrame", "EventStream",
                       "SketchConfig", "SketchSummary", "AlertConfig",
                       "AlertRule", "Incident", "prometheus_exposition",
                       "validate_exposition", "otlp_metrics_json")
+#: scenario-engine re-exports (trace format + adversarial search) --
+#: lazy like the rest so ``import repro.api`` stays jax-free
+_SCENARIO_EXPORTS = ("Trace", "SearchConfig", "SearchResult", "load_trace",
+                     "save_trace", "seed_trace")
 
 
 def __getattr__(name: str):
@@ -125,6 +146,10 @@ def __getattr__(name: str):
         from repro import telemetry as _telemetry
 
         return getattr(_telemetry, name)
+    if name in _SCENARIO_EXPORTS:
+        from repro import scenarios as _scenarios
+
+        return getattr(_scenarios, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -218,6 +243,48 @@ class EvaluateOutcome:
     cbs: Dict[int, Dict[str, float]]        # Eq. 12 per delta
     avg_rscore: Dict[int, Dict[str, float]]  # Eq. 13 per delta
     pareto: Dict[int, List[str]]            # front membership per delta
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class AttackOutcome:
+    """Adversarial search result: the worst workload found for one
+    policy, plus the random-search baseline at equal oracle evals
+    (``baseline_fitness`` / ``beats_baseline`` are ``None`` when the
+    baseline was skipped)."""
+
+    policy: str
+    family: str
+    best_fitness: float
+    best_violation_frac: float
+    best_incidents: float
+    witness_genome: List[float]
+    witness_knobs: Dict[str, float]
+    history: List[float]              # best-so-far fitness per generation
+    evals: int
+    generations_run: int
+    seed: int
+    baseline_fitness: Optional[float] = None
+    beats_baseline: Optional[bool] = None
+    #: the full ``repro.scenarios.SearchResult`` pair (search, baseline)
+    search: Any = None
+    baseline: Any = None
+    schema_version: int = API_VERSION
+
+
+@dataclasses.dataclass
+class ReplayOutcome:
+    """One on-disk trace replayed through the fleet path."""
+
+    trace_name: str
+    source: str
+    shape: Tuple[int, int, int]       # (B, T, N) as simulated
+    resampled: bool
+    policies: Tuple[str, ...]
+    metrics: Dict[str, np.ndarray]    # metric -> f64[P, B]
+    #: full per-policy trajectories (the ``simulate`` result the replay
+    #: reduces to metrics)
+    result: Optional[SimulateOutcome] = None
     schema_version: int = API_VERSION
 
 
@@ -450,6 +517,80 @@ def evaluate(*, algorithms: Optional[Sequence[str]] = None,
         pareto[d] = sorted(pareto_front(pts))
     return EvaluateOutcome(algorithms=algorithms, deltas=deltas, cbs=cbs,
                            avg_rscore=avg_r, pareto=pareto)
+
+
+@traced("api.attack")
+def attack(policy: str, *, family: str = "adversarial", config=None,
+           sim=None, seed: int = 0, baseline: bool = True,
+           fleet=None) -> AttackOutcome:
+    """Evolve the scenario genome that maximizes ``policy``'s SLO
+    violation (``repro.scenarios.search``), then -- with ``baseline=True``
+    -- run uniform random search at the *same* fitness-oracle eval budget
+    and report whether the evolution strictly beat it.
+
+    ``config`` is a ``SearchConfig`` (population, generations, trace
+    shape, incident weight); ``sim`` a ``LagSimConfig`` for the fitness
+    oracle.  Fixed ``seed`` -> bit-identical search.  The witness genome
+    replays via ``SearchResult.witness_trace`` + :func:`replay`.
+    """
+    from repro.lagsim import LagSimConfig
+    from repro.scenarios import search as _search
+
+    cfg = config if config is not None else _search.SearchConfig()
+    sim_cfg = sim if sim is not None else LagSimConfig()
+    runner = fleet if fleet is not None else default_fleet()
+    res = _search.attack(policy, family=family, config=cfg, sim=sim_cfg,
+                         seed=seed, runner=runner)
+    base = None
+    if baseline:
+        base = _search.random_search(policy, family=family, config=cfg,
+                                     sim=sim_cfg, seed=seed, runner=runner,
+                                     evals=res.evals)
+    return AttackOutcome(
+        policy=res.policy, family=res.family,
+        best_fitness=res.best_fitness,
+        best_violation_frac=res.best_violation_frac,
+        best_incidents=res.best_incidents,
+        witness_genome=[float(g) for g in res.best_genome],
+        witness_knobs=dict(res.best_knobs),
+        history=list(res.history), evals=res.evals,
+        generations_run=res.generations_run, seed=int(seed),
+        baseline_fitness=None if base is None else base.best_fitness,
+        beats_baseline=(None if base is None
+                        else res.best_fitness > base.best_fitness),
+        search=res, baseline=base)
+
+
+@traced("api.replay")
+def replay(trace, *, policies: Optional[Sequence[str]] = None,
+           config=None, iters: Optional[int] = None,
+           method: str = "hold", fleet=None,
+           **cfg_overrides) -> ReplayOutcome:
+    """Replay an on-disk trace (a path to a ``.json``/``.npz`` written by
+    ``repro.scenarios.save_trace``, or a ``Trace``) through the fleet
+    path -- load, validate, optionally resample to ``iters`` steps, and
+    run :func:`simulate` on the trace's rates + mask.
+
+    The trace's recorded ``capacity`` drives the sim unless the caller
+    overrides it (``config=`` or ``capacity=``).  Replay is
+    padding-exact: the metrics equal a direct run of the same arrays.
+    """
+    from repro.scenarios import load_trace as _load
+    from repro.scenarios import resample_trace as _resample
+
+    tr = _load(trace) if isinstance(trace, str) else trace
+    resampled = False
+    if iters is not None and int(iters) != tr.iters:
+        tr = _resample(tr, int(iters), method=method)
+        resampled = True
+    if config is None and "capacity" not in cfg_overrides:
+        cfg_overrides["capacity"] = float(tr.capacity)
+    out = simulate(tr.rates, policies=policies, config=config,
+                   active=tr.active, fleet=fleet, **cfg_overrides)
+    return ReplayOutcome(
+        trace_name=tr.name, source=tr.source,
+        shape=(tr.batch, tr.iters, tr.n), resampled=resampled,
+        policies=out.policies, metrics=out.metrics, result=out)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,20 @@ Families (see docs/paper_map.md for the full catalogue):
                      before birth and after death a partition does not
                      exist at all (speed 0 and, through the masked API,
                      ``active == False``).
+* ``adversarial``  -- the genome-parameterized composite family the
+                     adversarial scenario search (``repro.scenarios``)
+                     evolves: heavy-tailed partition skew under a timed
+                     burst plateau (the sustained-ingest shape of the
+                     Kafka benchmark paper, arXiv 2003.06452), plus
+                     churn flips and lifecycle windows on a configurable
+                     partition fraction.
+
+Every family is *registered*: a :class:`FamilySpec` names its generator
+functions together with the knobs a scenario search may turn --
+each a :class:`KnobSpec` with bounds and a default -- so a genome is
+just a vector over a family's registered knobs (``repro.scenarios.genome``
+builds exactly that).  ``SCENARIO_FAMILIES`` / ``MASKED_SCENARIO_FAMILIES``
+remain the plain name->generator views of the registry.
 
 Masked scenarios (variable-N fleets): ``generate_masked_scenario`` /
 ``masked_scenario_suite`` return ``(speeds f32[B, T, N], active
@@ -42,11 +56,38 @@ batch on every call -- and every generator clips speeds to ``>= 0``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+def _concrete_float(x) -> Optional[float]:
+    """``x`` as a python float when it is a host-side constant, ``None``
+    when it is a traced value (genome search passes traced knobs; host
+    validation must not force them)."""
+    if isinstance(x, (bool, int, float, np.floating, np.integer)):
+        return float(x)
+    return None
+
+
+def _check_lifecycle_window(birth, death, *, birth_name: str,
+                            death_name: str) -> None:
+    """Satellite fix: an empty lifecycle window (death precedes birth)
+    used to be silently accepted -- the partition just never existed,
+    which reads as a mysteriously idle scenario.  Reject it by name when
+    both knobs are host-side constants (traced genome decodes repair the
+    ordering instead, see ``repro.scenarios.search``)."""
+    b, d = _concrete_float(birth), _concrete_float(death)
+    if b is not None and d is not None and d < b:
+        raise ValueError(
+            f"lifecycle window is empty: death precedes birth "
+            f"({death_name}={d!r} < {birth_name}={b!r}); a partition's "
+            f"death step must not precede its birth step")
 
 
 def _walk(key: jax.Array, batch: int, iters: int, n: int, step_scale,
@@ -213,6 +254,16 @@ def topic_lifecycle_masked(key: jax.Array, batch: int, iters: int, n: int, *,
     partition produces at a random hot level with walk noise; outside its
     window it is absent (speed 0, ``active False``).
     """
+    mlf = _concrete_float(min_life_frac)
+    if mlf is not None and mlf < 0.0:
+        # a negative minimum lifetime lets ``death = birth + life`` land
+        # before the birth step -- the empty-window bug _check_lifecycle_
+        # window names; reject it at the same choke point
+        raise ValueError(
+            f"lifecycle window is empty: death precedes birth "
+            f"(min_life_frac={mlf!r} < 0 allows a negative lifetime, so a "
+            f"partition's death step may precede its birth step); "
+            f"min_life_frac must be >= 0")
     k_alive0, k_birth, k_life, k_level, k_noise = jax.random.split(key, 5)
     alive0 = jax.random.bernoulli(k_alive0, p_alive0, (batch, n))
     birth = jax.random.uniform(k_birth, (batch, n), maxval=float(iters))
@@ -244,19 +295,134 @@ def topic_lifecycle(key: jax.Array, batch: int, iters: int, n: int, *,
     return speeds
 
 
+def adversarial_masked(key: jax.Array, batch: int, iters: int, n: int, *,
+                       capacity: float = 1.0, base_rate: float = 0.2,
+                       tail_sigma: float = 1.0,
+                       burst_start_frac: float = 0.4,
+                       burst_len_frac: float = 0.25, burst_amp: float = 1.5,
+                       churn_p: float = 0.0, lifecycle_frac: float = 0.0,
+                       birth_frac: float = 0.0, death_frac: float = 1.0,
+                       noise: float = 0.05) -> Tuple[jax.Array, jax.Array]:
+    """The genome-parameterized composite family the adversarial search
+    evolves (``repro.scenarios``): every knob an attack can turn, in one
+    generator.
+
+    * heavy-tailed per-partition skew: log-normal weights with index
+      ``tail_sigma``, mean-normalized so ``base_rate`` stays the fleet
+      average (the Kafka benchmark paper's partition imbalance);
+    * a timed *burst plateau*: rates step up by ``burst_amp * capacity``
+      over ``[burst_start_frac, burst_start_frac + burst_len_frac) *
+      iters`` -- the sustained-ingest plateau of arXiv 2003.06452, with
+      the search choosing when it lands and how hard it hits;
+    * churn: partitions flip on/off at rate ``churn_p`` (true masks);
+    * lifecycle windows: a ``lifecycle_frac`` fraction of partitions
+      exists only during ``[birth_frac, death_frac) * iters``.  An empty
+      window (death before birth) raises a named ``ValueError`` for
+      host-side knobs; traced knobs are clamped to ``death >= birth``.
+
+    Per-partition rates clamp to ``capacity``: the paper's feasibility
+    assumption is that one consumer can drain any single partition, so
+    an adversary must do damage through burst *timing*, skew, churn and
+    lifecycle pressure -- an unconsumable partition would make every
+    policy score ``violation_frac == 1`` and the search landscape flat.
+    """
+    _check_lifecycle_window(birth_frac, death_frac,
+                            birth_name="birth_frac", death_name="death_frac")
+    k_tail, k_churn, k_state, k_sel, k_noise = jax.random.split(key, 5)
+    w = jnp.exp(jax.random.normal(k_tail, (batch, 1, n)) * tail_sigma)
+    w = w / jnp.mean(w, axis=2, keepdims=True)
+    t = jnp.arange(iters, dtype=jnp.float32)[None, :, None]
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731 (traced-safe)
+    start = f32(burst_start_frac) * iters
+    stop = start + f32(burst_len_frac) * iters
+    plateau = ((t >= start) & (t < stop)).astype(jnp.float32)
+    level = (f32(base_rate) + f32(burst_amp) * plateau) * capacity * w
+    jitter = 1.0 + jax.random.uniform(k_noise, (batch, iters, n),
+                                      minval=-1.0, maxval=1.0) * noise
+    # churn on/off timeline (same parity machinery as ``churn``)
+    state0 = jax.random.bernoulli(k_state, 0.9, (batch, n))
+    flips = jax.random.bernoulli(k_churn, churn_p, (iters, batch, n))
+    parity = jnp.cumsum(flips.astype(jnp.int32), axis=0) % 2
+    on = (state0[None] ^ (parity == 1)).transpose(1, 0, 2)
+    # lifecycle window on a lifecycle_frac subset; traced knobs cannot
+    # raise, so the clamp enforces death >= birth under the search
+    subject = jax.random.uniform(k_sel, (batch, 1, n)) < lifecycle_frac
+    birth = f32(birth_frac) * iters
+    death = jnp.maximum(f32(death_frac), f32(birth_frac)) * iters
+    in_window = (t >= birth) & (t < death)
+    alive = jnp.where(subject, in_window, True)
+    active = on & alive
+    speeds = jnp.clip(level * jitter, 0.0, capacity)
+    speeds = jnp.where(active, speeds, 0.0)
+    return speeds, active
+
+
+def adversarial(key: jax.Array, batch: int, iters: int, n: int, *,
+                capacity: float = 1.0, **knobs) -> jax.Array:
+    """Legacy unmasked view of ``adversarial_masked`` (absence degraded
+    to speed 0, like ``topic_lifecycle``)."""
+    speeds, _ = adversarial_masked(key, batch, iters, n, capacity=capacity,
+                                   **knobs)
+    return speeds
+
+
 ScenarioFn = Callable[..., jax.Array]
 #: masked generators return (speeds f32[B, T, N], active bool[B, T, N])
 MaskedScenarioFn = Callable[..., Tuple[jax.Array, jax.Array]]
 
-SCENARIO_FAMILIES: Dict[str, ScenarioFn] = {
-    "random_walk": random_walk,
-    "diurnal": diurnal,
-    "ramp": ramp,
-    "bursty": bursty,
-    "churn": churn,
-    "heavy_tail": heavy_tail,
-    "topic_lifecycle": topic_lifecycle,
-}
+
+@dataclasses.dataclass(frozen=True)
+class KnobSpec:
+    """One genome-searchable knob of a scenario family: closed bounds
+    ``[lo, hi]`` an adversarial search may explore, plus the generator's
+    default.  Bounds are the *search space*, not hard limits -- direct
+    ``generate_*`` calls may pass any value the generator accepts."""
+
+    name: str
+    lo: float
+    hi: float
+    default: float
+
+    def __post_init__(self) -> None:
+        if not self.lo <= self.default <= self.hi:
+            raise ValueError(
+                f"knob {self.name!r}: default {self.default!r} outside "
+                f"bounds [{self.lo!r}, {self.hi!r}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """One registered scenario family: its unmasked and masked
+    generators, the knobs a genome may turn (:class:`KnobSpec` order =
+    genome vector order), and ``ordered`` pairs ``(lo_knob, hi_knob)``
+    whose values must satisfy ``lo <= hi`` (a search *repairs* them; a
+    host-side call with the order violated raises, see
+    ``_check_lifecycle_window``)."""
+
+    name: str
+    fn: ScenarioFn
+    masked_fn: MaskedScenarioFn
+    knobs: Tuple[KnobSpec, ...] = ()
+    ordered: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self) -> None:
+        names = {k.name for k in self.knobs}
+        for lo, hi in self.ordered:
+            if lo not in names or hi not in names:
+                raise ValueError(
+                    f"family {self.name!r}: ordered pair ({lo!r}, {hi!r}) "
+                    f"names unregistered knobs; have {sorted(names)}")
+
+    @property
+    def knob_names(self) -> Tuple[str, ...]:
+        return tuple(k.name for k in self.knobs)
+
+
+#: the family registry, in registration order (genome machinery and the
+#: plain name->generator views below all derive from it)
+FAMILY_SPECS: Dict[str, FamilySpec] = {}
+SCENARIO_FAMILIES: Dict[str, ScenarioFn] = {}
+MASKED_SCENARIO_FAMILIES: Dict[str, MaskedScenarioFn] = {}
 
 
 def _all_active(fn: ScenarioFn) -> MaskedScenarioFn:
@@ -267,17 +433,69 @@ def _all_active(fn: ScenarioFn) -> MaskedScenarioFn:
     return gen
 
 
-#: every family under the masked contract; ``churn`` / ``topic_lifecycle``
-#: emit true masks, the always-on families an all-``True`` one
-MASKED_SCENARIO_FAMILIES: Dict[str, MaskedScenarioFn] = {
-    "random_walk": _all_active(random_walk),
-    "diurnal": _all_active(diurnal),
-    "ramp": _all_active(ramp),
-    "bursty": _all_active(bursty),
-    "churn": churn_masked,
-    "heavy_tail": _all_active(heavy_tail),
-    "topic_lifecycle": topic_lifecycle_masked,
-}
+def register_family(name: str, fn: ScenarioFn, *,
+                    masked_fn: Optional[MaskedScenarioFn] = None,
+                    knobs: Sequence[KnobSpec] = (),
+                    ordered: Sequence[Tuple[str, str]] = ()) -> FamilySpec:
+    """Register a scenario family (the extension point scenario sources
+    and the adversarial search share).  ``masked_fn=None`` lifts ``fn``
+    into the masked contract with an all-``True`` mask."""
+    if name in FAMILY_SPECS:
+        raise ValueError(f"scenario family {name!r} already registered")
+    spec = FamilySpec(name=name, fn=fn,
+                      masked_fn=(masked_fn if masked_fn is not None
+                                 else _all_active(fn)),
+                      knobs=tuple(knobs), ordered=tuple(ordered))
+    FAMILY_SPECS[name] = spec
+    SCENARIO_FAMILIES[name] = spec.fn
+    MASKED_SCENARIO_FAMILIES[name] = spec.masked_fn
+    return spec
+
+
+def family_spec(name: str) -> FamilySpec:
+    """The registered :class:`FamilySpec` of ``name`` (named error)."""
+    if name not in FAMILY_SPECS:
+        raise ValueError(f"unknown scenario family {name!r}; "
+                         f"have {sorted(FAMILY_SPECS)}")
+    return FAMILY_SPECS[name]
+
+
+K = KnobSpec
+register_family("random_walk", random_walk,
+                knobs=(K("delta", 1.0, 40.0, 10.0),))
+register_family("diurnal", diurnal, knobs=(
+    K("period", 16.0, 192.0, 96.0), K("amplitude", 0.0, 1.0, 0.4),
+    K("noise", 0.0, 0.1, 0.02)))
+register_family("ramp", ramp, knobs=(
+    K("max_slope", 0.0, 3.0, 1.5), K("noise", 0.0, 0.1, 0.02)))
+register_family("bursty", bursty, knobs=(
+    K("base", 0.0, 0.5, 0.15), K("p_spike", 0.0, 0.2, 0.02),
+    K("spike", 0.0, 4.0, 1.0), K("decay", 0.5, 0.99, 0.8)))
+register_family("churn", churn, masked_fn=churn_masked, knobs=(
+    K("p_flip", 0.0, 0.2, 0.02), K("hot", 0.0, 1.5, 0.5),
+    K("noise", 0.0, 0.2, 0.05)))
+register_family("heavy_tail", heavy_tail, knobs=(
+    K("sigma", 0.0, 2.5, 1.2), K("scale", 0.01, 0.5, 0.1),
+    K("noise", 0.0, 0.3, 0.1)))
+register_family("topic_lifecycle", topic_lifecycle,
+                masked_fn=topic_lifecycle_masked, knobs=(
+                    K("p_alive0", 0.0, 1.0, 0.5),
+                    K("min_life_frac", 0.05, 1.0, 0.15),
+                    K("hot", 0.0, 1.5, 0.5), K("noise", 0.0, 0.3, 0.1)))
+register_family("adversarial", adversarial, masked_fn=adversarial_masked,
+                knobs=(
+                    K("base_rate", 0.05, 1.0, 0.2),
+                    K("tail_sigma", 0.0, 2.5, 1.0),
+                    K("burst_start_frac", 0.0, 0.9, 0.4),
+                    K("burst_len_frac", 0.05, 0.6, 0.25),
+                    K("burst_amp", 0.0, 4.0, 1.5),
+                    K("churn_p", 0.0, 0.15, 0.0),
+                    K("lifecycle_frac", 0.0, 1.0, 0.0),
+                    K("birth_frac", 0.0, 1.0, 0.0),
+                    K("death_frac", 0.0, 1.0, 1.0),
+                    K("noise", 0.0, 0.2, 0.05)),
+                ordered=(("birth_frac", "death_frac"),))
+del K
 
 
 @functools.partial(jax.jit, static_argnames=("family", "batch", "iters", "n"))

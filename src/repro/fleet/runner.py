@@ -48,7 +48,8 @@ from repro.core.jaxpack import _sweep_streams_impl
 from repro.lagsim.engine import LagSimConfig, _sweep_impl
 from repro.lagsim.metrics import slo_summary
 from repro.telemetry.alerts import (AlertConfig, AlertState, Incident,
-                                    decode_incidents, incident_counts)
+                                    decode_incidents, incident_counts,
+                                    incident_matrix)
 from repro.telemetry.record import TelemetryFrame
 from repro.telemetry.sketch import (SketchConfig, SketchState, SketchSummary,
                                     merge_summaries, summaries_from_state)
@@ -169,6 +170,23 @@ class FleetLagResult:
         return slo_summary(st["lag_total"], st["consumers"],
                            st["migrations"],
                            slo_lag=cfg.slo_lag_or_default, dt=cfg.dt)
+
+
+@dataclasses.dataclass
+class FleetFitness:
+    """One fitness-oracle evaluation for the adversarial scenario search
+    (arrays ``[P, B]``: policy x scenario, in input order).
+
+    ``fitness = violation_frac + incident_weight * incidents / T`` --
+    the SLO-violation fraction plus (optionally) the per-step rate of
+    burn/invariant incidents, so a genome is rewarded both for lag the
+    SLO sees and for the pages it causes."""
+
+    policies: Tuple[str, ...]
+    violation_frac: np.ndarray      # f32[P, B]
+    incidents: np.ndarray           # f32[P, B] total incidents per stream
+    fitness: np.ndarray             # f32[P, B]
+    incident_weight: float = 0.0
 
 
 @dataclasses.dataclass
@@ -655,6 +673,44 @@ class FleetRunner:
         result.sketch_configs = sk_cfg_out if any_sk else None
         result.incidents = inc_out if any_inc else None
         return result
+
+    def fitness(self, policies: Sequence[str], scenarios,
+                cfg: LagSimConfig = LagSimConfig(), *, active=None,
+                incident_weight: float = 0.0) -> FleetFitness:
+        """Fitness-batch entrypoint of the adversarial scenario search
+        (``repro.scenarios.search``): one scenario batch -> per-(policy,
+        scenario) SLO-violation fitness, arrays ``[P, B]``.
+
+        Routes through :meth:`simulate`, so a search that keeps
+        ``(B, T, N, cfg)`` constant across generations compiles its
+        oracle once and dispatches a warm executable thereafter (the
+        bounded LRU cache is the generation loop's flywheel).
+        ``incident_weight > 0`` folds per-step incident counts into the
+        fitness and requires ``cfg.telemetry.alerts`` to be on.
+        """
+        if incident_weight and not (cfg.telemetry_on
+                                    and cfg.telemetry.alerts is not None):
+            raise ValueError(
+                "incident_weight > 0 needs alerting in the loop: pass a "
+                "LagSimConfig with telemetry=TelemetryConfig(alerts="
+                "AlertConfig(rules=default_rules()))")
+        with _span("fleet.fitness", policies=len(policies)):
+            res = self._simulate(tuple(p.upper() for p in policies),
+                                 scenarios, cfg, active)
+            stacked = res.stacked()
+            summ = res.summarize(cfg, stacked=stacked)
+            vf = np.asarray(summ["violation_frac"], np.float32)    # [P, B]
+            steps = stacked["lag_total"].shape[-1]
+            if res.incidents is not None:
+                inc = np.stack([incident_matrix(st)
+                                for st in res.incidents], axis=1)  # [P, B]
+            else:
+                inc = np.zeros_like(vf)
+            fit = vf + np.float32(incident_weight) * inc / max(steps, 1)
+            return FleetFitness(policies=res.policies, violation_frac=vf,
+                                incidents=inc,
+                                fitness=fit.astype(np.float32),
+                                incident_weight=float(incident_weight))
 
     @staticmethod
     def _progress_snapshot(result: FleetLagResult, done: int, total: int,

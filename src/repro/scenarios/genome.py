@@ -1,0 +1,105 @@
+"""Scenario genomes: fixed vectors over a family's registered knobs.
+
+A genome is ``f32[K]`` where gene ``i`` is the value of the family's
+``i``-th registered :class:`~repro.core.scenarios.KnobSpec` (so the
+registry *is* the genome layout -- ``FamilySpec.knob_names`` names the
+axes).  Everything here is traced-safe: ``decode_genome`` produces the
+knob dict a generator takes with the genes still as jax values, and
+``repair_genome`` is pure ``jnp`` (clip to bounds, then enforce each
+``FamilySpec.ordered`` pair by lifting the upper knob to the lower one
+-- the in-graph twin of the host-side ``ValueError`` an empty lifecycle
+window raises).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenarios import FamilySpec, family_spec
+
+
+def _spec(family: Union[str, FamilySpec]) -> FamilySpec:
+    return family if isinstance(family, FamilySpec) else family_spec(family)
+
+
+def genome_bounds(family: Union[str, FamilySpec]
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """-> ``(lo f32[K], hi f32[K])`` over the family's registered knobs."""
+    spec = _spec(family)
+    lo = np.asarray([k.lo for k in spec.knobs], np.float32)
+    hi = np.asarray([k.hi for k in spec.knobs], np.float32)
+    return lo, hi
+
+
+def default_genome(family: Union[str, FamilySpec]) -> np.ndarray:
+    """The genome encoding every knob's registered default (``f32[K]``)."""
+    spec = _spec(family)
+    return np.asarray([k.default for k in spec.knobs], np.float32)
+
+
+def decode_genome(family: Union[str, FamilySpec], genome
+                  ) -> Dict[str, jax.Array]:
+    """Genome vector -> ``{knob_name: gene}`` kwargs for the family's
+    generators.  Traced-safe: genes pass through as jax values."""
+    spec = _spec(family)
+    genome = jnp.asarray(genome, jnp.float32)
+    if genome.shape != (len(spec.knobs),):
+        raise ValueError(
+            f"family {spec.name!r} takes genomes of shape "
+            f"({len(spec.knobs)},) over knobs {spec.knob_names}; got "
+            f"shape {genome.shape}")
+    return {k.name: genome[i] for i, k in enumerate(spec.knobs)}
+
+
+def genome_knobs(family: Union[str, FamilySpec], genome
+                 ) -> Dict[str, float]:
+    """Host-side twin of :func:`decode_genome`: plain floats, for witness
+    JSON and replaying a stored genome through ``generate_*``."""
+    spec = _spec(family)
+    genome = np.asarray(genome, np.float32)
+    if genome.shape != (len(spec.knobs),):
+        raise ValueError(
+            f"family {spec.name!r} takes genomes of shape "
+            f"({len(spec.knobs)},); got shape {genome.shape}")
+    return {k.name: float(genome[i]) for i, k in enumerate(spec.knobs)}
+
+
+def repair_genome(family: Union[str, FamilySpec], genome) -> jax.Array:
+    """Project a (possibly batched ``[..., K]``) genome back into the
+    valid region: clip every gene to its knob bounds, then repair each
+    ``ordered`` pair so the upper knob is ``>= `` the lower one (e.g.
+    ``death_frac >= birth_frac`` -- mutation may break the order; the
+    search repairs instead of raising, so every stored witness replays
+    through the host-side validation cleanly)."""
+    spec = _spec(family)
+    lo, hi = genome_bounds(spec)
+    g = jnp.clip(jnp.asarray(genome, jnp.float32), lo, hi)
+    idx = {name: i for i, name in enumerate(spec.knob_names)}
+    for lo_name, hi_name in spec.ordered:
+        i, j = idx[lo_name], idx[hi_name]
+        g = g.at[..., j].set(jnp.maximum(g[..., j], g[..., i]))
+    return g
+
+
+def random_population(family: Union[str, FamilySpec], key: jax.Array,
+                      pop: int) -> jax.Array:
+    """``pop`` genomes uniform over the knob bounds, repaired
+    (``f32[pop, K]``); the search's init and the random baseline's draw."""
+    spec = _spec(family)
+    lo, hi = genome_bounds(spec)
+    u = jax.random.uniform(key, (int(pop), len(spec.knobs)))
+    return repair_genome(spec, lo + u * (hi - lo))
+
+
+__all__ = [
+    "decode_genome",
+    "default_genome",
+    "genome_bounds",
+    "genome_knobs",
+    "random_population",
+    "repair_genome",
+]

@@ -1,0 +1,289 @@
+"""Adversarial scenario search: evolve the workload that breaks a policy.
+
+The paper's claim -- R-score policies "guarantee adequate consumption
+rates" at lower cost -- is tested here by *optimizing against it*: a
+genome (``scenarios.genome``) parameterizes a registered scenario family
+(``burst timing/amplitude, churn rate, heavy-tail index, lifecycle
+windows`` for the ``adversarial`` composite), and an evolutionary loop
+(elites + tournament selection + uniform crossover + gaussian mutation,
+all pure ``jnp``) maximizes the policy's SLO damage.  The fitness oracle
+is the batched fleet sweep itself -- :meth:`FleetRunner.fitness` --
+returning ``violation_frac`` plus (optionally) PR 8's burn-rate incident
+counts per genome, so one oracle call evaluates a whole population in a
+single compiled executable, and every generation after the first hits
+the runner's warm compile cache (constant ``(B, T, N, cfg)`` shapes).
+
+Determinism: one fixed scenario key is shared by *every* evaluation of a
+search, so fitness is a pure function of the genome, a fixed ``seed``
+replays the identical search, and the random-search baseline
+(:func:`random_search`) is comparable eval-for-eval.  Early stopping is
+per-generation: ``patience`` generations without ``min_delta``
+improvement end the search, and the baseline is then run at the *actual*
+eval budget the evolution consumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenarios import FamilySpec, family_spec
+from repro.fleet.runner import FleetRunner
+from repro.lagsim.engine import LagSimConfig
+from repro.scenarios.genome import (decode_genome, genome_bounds,
+                                    genome_knobs, random_population,
+                                    repair_genome)
+from repro.scenarios.traces import Trace, trace_from_scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Static knobs of one adversarial search (hashable).
+
+    ``pop_size * generations`` bounds the fitness-oracle evals; each
+    eval simulates ``scenarios_per_genome`` traces of shape
+    ``(iters, n)``.  ``incident_weight > 0`` folds per-step incident
+    counts into the fitness (requires an alerting ``LagSimConfig``)."""
+
+    pop_size: int = 16
+    generations: int = 8
+    elite_frac: float = 0.25
+    crossover_p: float = 0.5
+    mutation_scale: float = 0.12
+    patience: int = 3
+    min_delta: float = 1e-4
+    scenarios_per_genome: int = 1
+    iters: int = 128
+    n: int = 8
+    capacity: float = 1.0
+    incident_weight: float = 0.0
+
+    def __post_init__(self) -> None:
+        if int(self.pop_size) < 2:
+            raise ValueError(
+                f"pop_size must be >= 2, got {self.pop_size}")
+        if int(self.generations) < 1 or int(self.patience) < 1:
+            raise ValueError("generations and patience must be >= 1")
+        if not 0.0 < float(self.elite_frac) < 1.0:
+            raise ValueError(
+                f"elite_frac must be in (0, 1), got {self.elite_frac!r}")
+        if int(self.scenarios_per_genome) < 1:
+            raise ValueError("scenarios_per_genome must be >= 1")
+
+    @property
+    def n_elites(self) -> int:
+        return max(1, int(round(self.elite_frac * self.pop_size)))
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """One search's outcome: the worst workload found and how it got
+    there.  ``history`` is best-so-far fitness per generation;
+    ``evals`` the fitness-oracle evaluations actually spent (early
+    stopping may end below ``pop_size * generations``)."""
+
+    policy: str
+    family: str
+    method: str                     # "evolution" | "random"
+    best_fitness: float
+    best_violation_frac: float
+    best_incidents: float
+    best_genome: np.ndarray         # f32[K]
+    best_knobs: Dict[str, float]
+    history: List[float]
+    evals: int
+    generations_run: int
+    seed: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-ready envelope row (BENCH_adversarial / golden fixture)."""
+        return {
+            "policy": self.policy, "family": self.family,
+            "method": self.method,
+            "best_fitness": round(float(self.best_fitness), 6),
+            "best_violation_frac": round(float(self.best_violation_frac), 6),
+            "best_incidents": round(float(self.best_incidents), 6),
+            "best_genome": [round(float(g), 6) for g in self.best_genome],
+            "best_knobs": {k: round(float(v), 6)
+                           for k, v in self.best_knobs.items()},
+            "history": [round(float(h), 6) for h in self.history],
+            "evals": int(self.evals),
+            "generations_run": int(self.generations_run),
+            "seed": int(self.seed),
+        }
+
+    def witness_trace(self, config: SearchConfig, seed: int = 0,
+                      batch: int = 4) -> Trace:
+        """Materialize the witness genome as a replayable
+        :class:`Trace` (provenance: policy + genome in ``meta``)."""
+        trace = trace_from_scenario(
+            self.family, jax.random.PRNGKey(seed), batch, config.iters,
+            config.n, capacity=config.capacity,
+            name=f"witness_{self.policy.lower()}", **self.best_knobs)
+        trace.source = f"adversarial:{self.policy}"
+        trace.meta["genome"] = [float(g) for g in self.best_genome]
+        trace.meta["best_violation_frac"] = float(self.best_violation_frac)
+        return trace
+
+
+def family_representatives(backend: str = "jax") -> Dict[str, str]:
+    """First registered policy per registry family (registration order
+    = paper order), the envelope's per-family champions."""
+    from repro.registry import get_spec, list_policies
+
+    out: Dict[str, str] = {}
+    for name in list_policies(backend=backend):
+        fam = get_spec(name, backend=backend).family
+        out.setdefault(fam, name)
+    return out
+
+
+def _scenario_oracle(spec: FamilySpec, cfg: SearchConfig):
+    """jitted ``(genomes f32[P, K], key) -> (rates, active)`` with the
+    population flattened into one fleet batch ``[P * S, iters, n]`` --
+    the shape is constant across generations, so the runner's compile
+    cache turns every generation after the first into a dispatch."""
+    s = int(cfg.scenarios_per_genome)
+
+    def one(genome, key):
+        knobs = decode_genome(spec, repair_genome(spec, genome))
+        return spec.masked_fn(key, s, cfg.iters, cfg.n,
+                              capacity=cfg.capacity, **knobs)
+
+    @jax.jit
+    def batch(genomes, key):
+        # one shared key: fitness differences are knob differences, not
+        # noise realizations -- the determinism the comparisons rely on
+        sp, ac = jax.vmap(lambda g: one(g, key))(genomes)
+        p = genomes.shape[0]
+        return (sp.reshape(p * s, cfg.iters, cfg.n),
+                ac.reshape(p * s, cfg.iters, cfg.n))
+
+    return batch
+
+
+def _make_evolve(spec: FamilySpec, cfg: SearchConfig):
+    """jitted one-generation transition ``(pop, fitness, key) -> pop``."""
+    lo, hi = genome_bounds(spec)
+    span = jnp.asarray(hi - lo)
+    k_dim = len(spec.knobs)
+    n_el = cfg.n_elites
+    n_ch = int(cfg.pop_size) - n_el
+
+    @jax.jit
+    def evolve(pop, fit, key):
+        order = jnp.argsort(-fit)
+        elites = pop[order[:n_el]]
+        k_t, k_x, k_m = jax.random.split(key, 3)
+        # tournament-2: two candidate rows per parent, winner by fitness
+        cand = jax.random.randint(k_t, (n_ch, 2, 2), 0, pop.shape[0])
+        better = (fit[cand[..., 0]] >= fit[cand[..., 1]])[..., None]
+        parents = jnp.where(better, pop[cand[..., 0]], pop[cand[..., 1]])
+        keep = jax.random.bernoulli(k_x, cfg.crossover_p, (n_ch, k_dim))
+        child = jnp.where(keep, parents[:, 0], parents[:, 1])
+        noise = jax.random.normal(k_m, (n_ch, k_dim)) \
+            * cfg.mutation_scale * span
+        child = repair_genome(spec, child + noise)
+        return jnp.concatenate([elites, child], axis=0)
+
+    return evolve
+
+
+def _evaluate(runner: FleetRunner, policy: str, sim: LagSimConfig,
+              cfg: SearchConfig, oracle, pop, scen_key
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """-> (fitness f32[P], violation_frac f32[P], incidents f32[P]),
+    each genome averaged over its ``scenarios_per_genome`` traces."""
+    rates, active = oracle(pop, scen_key)
+    fb = runner.fitness([policy], rates, sim, active=active,
+                        incident_weight=cfg.incident_weight)
+    p, s = pop.shape[0], int(cfg.scenarios_per_genome)
+    mean = lambda a: np.asarray(a[0]).reshape(p, s).mean(axis=1)
+    return mean(fb.fitness), mean(fb.violation_frac), mean(fb.incidents)
+
+
+def _run(policy: str, family: str, method: str, config: SearchConfig,
+         sim: LagSimConfig, seed: int, runner: Optional[FleetRunner],
+         budget_evals: Optional[int]) -> SearchResult:
+    spec = family_spec(family)
+    if not spec.knobs:
+        raise ValueError(
+            f"family {family!r} registers no knobs; nothing to search")
+    runner = runner if runner is not None else FleetRunner()
+    oracle = _scenario_oracle(spec, config)
+    key = jax.random.PRNGKey(int(seed))
+    k_pop, k_scen, k_evo = jax.random.split(key, 3)
+    budget = (int(budget_evals) if budget_evals is not None
+              else config.pop_size * config.generations)
+    evolve = _make_evolve(spec, config) if method == "evolution" else None
+    pop = random_population(spec, k_pop, config.pop_size)
+    best_fit = -np.inf
+    best_vf = best_inc = 0.0
+    best_genome = np.asarray(pop[0])
+    history: List[float] = []
+    evals = 0
+    stall = 0
+    gen = 0
+    while evals < budget:
+        fit, vf, inc = _evaluate(runner, policy, sim, config, oracle,
+                                 pop, k_scen)
+        evals += config.pop_size
+        i = int(np.argmax(fit))
+        if float(fit[i]) > best_fit + config.min_delta:
+            stall = 0
+        else:
+            stall += 1
+        if float(fit[i]) > best_fit:
+            best_fit = float(fit[i])
+            best_vf, best_inc = float(vf[i]), float(inc[i])
+            best_genome = np.asarray(pop[i], np.float32).copy()
+        history.append(best_fit)
+        gen += 1
+        if method == "evolution" and stall >= config.patience:
+            break
+        if evals < budget:
+            k_g = jax.random.fold_in(k_evo, gen)
+            if method == "evolution":
+                pop = evolve(pop, jnp.asarray(fit), k_g)
+            else:
+                pop = random_population(spec, k_g, config.pop_size)
+    return SearchResult(
+        policy=policy.upper(), family=spec.name, method=method,
+        best_fitness=best_fit, best_violation_frac=best_vf,
+        best_incidents=best_inc, best_genome=best_genome,
+        best_knobs=genome_knobs(spec, best_genome), history=history,
+        evals=evals, generations_run=gen, seed=int(seed))
+
+
+def attack(policy: str, *, family: str = "adversarial",
+           config: SearchConfig = SearchConfig(),
+           sim: LagSimConfig = LagSimConfig(), seed: int = 0,
+           runner: Optional[FleetRunner] = None) -> SearchResult:
+    """Evolve the scenario genome that maximizes ``policy``'s SLO damage
+    (fixed ``seed`` -> bit-identical search)."""
+    return _run(policy, family, "evolution", config, sim, seed, runner,
+                None)
+
+
+def random_search(policy: str, *, family: str = "adversarial",
+                  config: SearchConfig = SearchConfig(),
+                  sim: LagSimConfig = LagSimConfig(), seed: int = 0,
+                  runner: Optional[FleetRunner] = None,
+                  evals: Optional[int] = None) -> SearchResult:
+    """Uniform-random baseline at an explicit eval budget (pass the
+    evolution's ``result.evals`` for an eval-for-eval comparison)."""
+    return _run(policy, family, "random", config, sim, seed, runner,
+                evals)
+
+
+__all__ = [
+    "SearchConfig",
+    "SearchResult",
+    "attack",
+    "family_representatives",
+    "random_search",
+]

@@ -409,6 +409,18 @@ def incident_counts(state: AlertState) -> Dict[str, int]:
     return {name: int(flat[i]) for i, name in enumerate(state.rule_names)}
 
 
+def incident_matrix(state: AlertState) -> np.ndarray:
+    """Per-stream total incident counts with batch axes *preserved*:
+    ``state.count`` summed over its trailing rule axis only
+    (``f32[...]``, e.g. ``[P]`` for one fleet scenario).  This is the
+    adversarial search's fitness component -- unlike
+    :func:`incident_counts` it keeps every scenario/policy stream
+    separate, so a fitness oracle can credit incidents to the genome
+    that caused them."""
+    counts = np.asarray(state.count)
+    return counts.sum(axis=-1).astype(np.float32)
+
+
 def incident_summary(state: AlertState, cfg: AlertConfig,
                      dt: float = 1.0) -> Dict[str, Dict[str, float]]:
     """Per-rule roll-up for BENCH blocks / exporters: incident count,
@@ -440,5 +452,6 @@ __all__ = [
     "decode_incidents",
     "default_rules",
     "incident_counts",
+    "incident_matrix",
     "incident_summary",
 ]

@@ -221,3 +221,64 @@ def test_sweep_result_for_algorithm_lookup():
     np.testing.assert_array_equal(np.asarray(bins), np.asarray(res.bins[1]))
     np.testing.assert_array_equal(np.asarray(migs),
                                   np.asarray(res.migrations[1]))
+
+
+# ---------------------------------------------------------------------------
+# family registry + knob specs (repro.scenarios genome source of truth)
+# ---------------------------------------------------------------------------
+def test_family_registry_covers_every_generator():
+    from repro.core.scenarios import FAMILY_SPECS, family_spec
+
+    assert set(FAMILY_SPECS) == set(SCENARIO_FAMILIES)
+    assert set(FAMILY_SPECS) == set(MASKED_SCENARIO_FAMILIES)
+    for name, spec in FAMILY_SPECS.items():
+        assert spec is family_spec(name)
+        assert spec.name == name
+        for knob in spec.knobs:
+            assert knob.lo <= knob.default <= knob.hi, (name, knob)
+        for a, b in spec.ordered:
+            assert a in spec.knob_names and b in spec.knob_names, name
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        family_spec("nope")
+
+
+def test_adversarial_knobs_drive_generator():
+    """Every registered adversarial knob is accepted by the generator
+    (the search decodes genomes into exactly these kwargs)."""
+    from repro.core.scenarios import family_spec
+
+    spec = family_spec("adversarial")
+    defaults = {k.name: k.default for k in spec.knobs}
+    sp, ac = generate_masked_scenario("adversarial", jax.random.key(0),
+                                      2, 16, 5, **defaults)
+    assert sp.shape == ac.shape == (2, 16, 5)
+    assert not np.asarray(sp)[~np.asarray(ac)].any()
+    # capacity clamp: the feasibility assumption the search relies on
+    assert float(jnp.max(sp)) <= 1.0 + 1e-6
+
+
+def test_lifecycle_death_before_birth_raises():
+    """Regression: an empty lifecycle window (death step precedes birth
+    step) used to be silently accepted, producing partitions that never
+    exist; it must be a named error for concrete knobs."""
+    with pytest.raises(ValueError, match="death precedes birth"):
+        generate_masked_scenario("adversarial", jax.random.key(0), 2, 16, 5,
+                                 birth_frac=0.8, death_frac=0.2)
+    # topic_lifecycle draws its windows; its degenerate-window knob is a
+    # negative minimum lifetime, which likewise must be a named error
+    with pytest.raises(ValueError, match="min_life_frac"):
+        generate_masked_scenario("topic_lifecycle", jax.random.key(0),
+                                 2, 16, 5, min_life_frac=-0.5)
+
+
+def test_lifecycle_death_before_birth_traced_is_repaired_not_raised():
+    """Under tracing (the search's vmapped oracle) the same constraint
+    cannot raise; the in-graph repair clamps death >= birth instead."""
+    def gen(b, d):
+        sp, ac = generate_masked_scenario(
+            "adversarial", jax.random.key(1), 1, 12, 4,
+            birth_frac=b, death_frac=jnp.maximum(d, b), lifecycle_frac=1.0)
+        return sp, ac
+
+    sp, ac = jax.jit(gen)(jnp.float32(0.8), jnp.float32(0.2))
+    assert not np.asarray(sp)[~np.asarray(ac)].any()

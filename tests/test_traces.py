@@ -1,0 +1,198 @@
+"""Trace engine tests (``repro.scenarios.traces`` / ``.seeds``).
+
+Load-bearing properties (ISSUE acceptance criteria):
+
+* save -> load round-trips bit for bit in both formats (``.json`` stores
+  float32 values exactly via the float32->double->float32 identity,
+  ``.npz`` stores the raw arrays);
+* a loaded trace resampled to its own length is the *same* arrays, and
+  replayed through ``FleetRunner``'s padded ragged path it reproduces
+  the direct engine run bit for bit -- recording is not a different
+  simulator;
+* validation rejects malformed traces (wrong version, rank, shape
+  mismatch, non-finite / negative rates, rates under an inactive mask);
+* the seed library (arXiv 2003.06452 shapes) is deterministic across
+  calls and sessions (name-keyed, not ``hash``-keyed).
+
+The property-based variant runs only when ``hypothesis`` is installed
+(it is optional in this environment); a fixed-seed sweep covers the same
+property otherwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.fleet import FleetConfig, FleetRunner
+from repro.lagsim import LagSimConfig, sweep_lag
+from repro.scenarios import (SEED_SHAPES, TRACE_VERSION, Trace, list_seeds,
+                             load_trace, resample_trace, save_trace,
+                             seed_trace, trace_from_scenario, validate_trace)
+
+CFG = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+
+
+def _trace(seed=0, batch=2, iters=16, n=5, family="adversarial", **knobs):
+    return trace_from_scenario(family, jax.random.PRNGKey(seed), batch,
+                               iters, n, capacity=1.0, name=f"t{seed}",
+                               **knobs)
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_save_load_bitexact(tmp_path, ext):
+    tr = _trace(seed=3, family="bursty")
+    path = str(tmp_path / f"t.{ext}")
+    save_trace(tr, path)
+    back = load_trace(path)
+    assert back.version == TRACE_VERSION
+    assert back.rates.dtype == np.float32 and back.active.dtype == np.bool_
+    np.testing.assert_array_equal(back.rates, np.asarray(tr.rates))
+    np.testing.assert_array_equal(back.active, np.asarray(tr.active))
+    assert back.name == tr.name and back.capacity == tr.capacity
+    assert back.meta["family"] == "bursty"
+
+
+def test_json_and_npz_agree(tmp_path):
+    tr = _trace(seed=4, family="churn")
+    pj, pn = str(tmp_path / "t.json"), str(tmp_path / "t.npz")
+    save_trace(tr, pj)
+    save_trace(tr, pn)
+    a, b = load_trace(pj), load_trace(pn)
+    np.testing.assert_array_equal(a.rates, b.rates)
+    np.testing.assert_array_equal(a.active, b.active)
+
+
+def test_resample_identity_is_same_arrays():
+    tr = _trace(seed=5)
+    again = resample_trace(tr, tr.iters)
+    assert again is tr
+
+
+@pytest.mark.parametrize("method", ["hold", "linear"])
+def test_resample_respects_mask_contract(method):
+    tr = _trace(seed=6, iters=12, family="adversarial",
+                lifecycle_frac=0.8, churn_p=0.05, death_frac=0.7)
+    for iters in (6, 24, 37):
+        rs = resample_trace(tr, iters, method=method)
+        validate_trace(rs)          # includes silence-where-inactive
+        assert rs.iters == iters and rs.batch == tr.batch and rs.n == tr.n
+        assert rs.meta["resampled"]["from_iters"] == tr.iters
+
+
+def test_resample_hold_repeats_steps():
+    tr = _trace(seed=7, iters=8)
+    rs = resample_trace(tr, 16, method="hold")
+    np.testing.assert_array_equal(np.asarray(rs.rates)[:, 0::2],
+                                  np.asarray(tr.rates))
+    np.testing.assert_array_equal(np.asarray(rs.rates)[:, 1::2],
+                                  np.asarray(tr.rates))
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_validate_rejects_malformed():
+    tr = _trace(seed=8)
+    rates, active = np.asarray(tr.rates), np.asarray(tr.active)
+    with pytest.raises(ValueError, match="version"):
+        validate_trace(Trace(rates=rates, active=active, capacity=1.0,
+                             name="v", source="test", meta={}, version=99))
+    with pytest.raises(ValueError, match=r"f32\[B, T, N\]"):
+        validate_trace(Trace(rates=rates[0], active=active[0], capacity=1.0,
+                             name="r", source="test", meta={}))
+    with pytest.raises(ValueError, match="shape"):
+        validate_trace(Trace(rates=rates, active=active[:, :-1],
+                             capacity=1.0, name="s", source="test", meta={}))
+    bad = rates.copy()
+    bad[0, 0, 0] = -0.5
+    with pytest.raises(ValueError, match="negative"):
+        validate_trace(Trace(rates=bad, active=np.ones_like(active),
+                             capacity=1.0, name="n", source="test", meta={}))
+    loud = rates.copy()
+    loud[~active] = 0.0
+    loud[0, 0, 0] = 0.7
+    silent = active.copy()
+    silent[0, 0, 0] = False
+    with pytest.raises(ValueError, match="mask contract"):
+        validate_trace(Trace(rates=loud, active=silent, capacity=1.0,
+                             name="m", source="test", meta={}))
+
+
+def test_load_rejects_truncated_json(tmp_path):
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as f:
+        f.write('{"kind": "repro.trace", "version": 1}')
+    with pytest.raises((ValueError, KeyError)):
+        load_trace(path)
+
+
+# ---------------------------------------------------------------------------
+# seed library (arXiv 2003.06452 shapes)
+# ---------------------------------------------------------------------------
+def test_seed_library_deterministic():
+    assert sorted(list_seeds()) == sorted(SEED_SHAPES)
+    for name in list_seeds():
+        a = seed_trace(name, batch=2, iters=32, n=6)
+        b = seed_trace(name, batch=2, iters=32, n=6)
+        np.testing.assert_array_equal(np.asarray(a.rates),
+                                      np.asarray(b.rates))
+        assert a.meta["paper"] == "arXiv:2003.06452"
+        assert a.source == f"seed:{name}"
+        validate_trace(a)
+
+
+def test_seed_shapes_differ():
+    rates = [np.asarray(seed_trace(n, batch=1, iters=64, n=8).rates)
+             for n in list_seeds()]
+    for i in range(len(rates)):
+        for j in range(i + 1, len(rates)):
+            assert not np.array_equal(rates[i], rates[j])
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: replay == direct run, bit for bit,
+# through the padded fleet path
+# ---------------------------------------------------------------------------
+def _roundtrip_equals_direct(tmp_path, seed, ext, family, iters, n):
+    tr = _trace(seed=seed, batch=1, iters=iters, n=n, family=family)
+    path = str(tmp_path / f"rt{seed}.{ext}")
+    save_trace(tr, path)
+    back = resample_trace(load_trace(path), iters)   # identity resample
+    runner = FleetRunner(FleetConfig(t_buckets=(32,), n_buckets=(8,)))
+    res = runner.simulate(("BFD", "KEDA_LAG"),
+                          [(back.rates[0], back.active[0])], CFG)
+    direct = sweep_lag(("BFD", "KEDA_LAG"), tr.rates, CFG,
+                       active=tr.active)
+    assert res.lag_total[0].tobytes() == \
+        np.asarray(direct.lag_total)[:, 0, :].tobytes()
+    np.testing.assert_array_equal(res.consumers[0],
+                                  np.asarray(direct.consumers)[:, 0, :])
+
+
+@pytest.mark.parametrize("seed,ext,family,iters,n", [
+    (11, "json", "adversarial", 20, 5),
+    (12, "npz", "bursty", 32, 8),
+    (13, "npz", "topic_lifecycle", 17, 6),
+])
+def test_roundtrip_replay_bitexact(tmp_path, seed, ext, family, iters, n):
+    _roundtrip_equals_direct(tmp_path, seed, ext, family, iters, n)
+
+
+def test_roundtrip_replay_bitexact_property(tmp_path):
+    """Property-based variant when hypothesis is available: arbitrary
+    shapes and formats, same bit-for-bit guarantee."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**16), ext=st.sampled_from(["json",
+                                                                "npz"]),
+               family=st.sampled_from(["adversarial", "churn", "bursty"]),
+               iters=st.integers(4, 32), n=st.integers(2, 8))
+    def prop(seed, ext, family, iters, n):
+        _roundtrip_equals_direct(tmp_path, seed, ext, family, iters, n)
+
+    prop()
