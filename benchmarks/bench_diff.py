@@ -6,7 +6,9 @@ shared ``BenchReport`` envelope.  The diff walks both trees, pairs
 leaves by path, and classifies each pair by its key name:
 
 * **higher-is-better** -- throughput/speedup leaves (``*_per_s``,
-  ``*speedup*``): a regression is NEW < OLD by more than ``threshold``;
+  ``*speedup*``, and ``fused_*`` fused-path leaves that are not
+  latency-suffixed): a regression is NEW < OLD by more than
+  ``threshold``;
 * **lower-is-better** -- latency/time leaves (``*_us``, ``*_seconds``,
   ``*us_per*``): a regression is NEW > OLD by more than ``threshold``;
 * **incident leaves** -- anything under the ``observability`` probe's
@@ -67,6 +69,11 @@ HIGHER_SUFFIXES = ("_per_s",)
 HIGHER_FRAGMENTS = ("speedup",)
 LOWER_SUFFIXES = ("_us", "_seconds")
 LOWER_FRAGMENTS = ("us_per",)
+#: fused-path throughput leaves (``BENCH_lagsim.json`` ``timing/fused``
+#: block): ``fused_``-prefixed leaf names gate higher-is-better --
+#: checked AFTER the lower-suffix rules, so ``fused_*_us`` latency
+#: leaves keep gating lower-is-better
+FUSED_PREFIXES = ("fused_",)
 #: alerting leaves (the ``observability`` block's per-rule roll-ups):
 #: matched on the full path and checked *before* the informational
 #: fragments, so e.g. a probe nested under a ``telemetry`` block still
@@ -120,6 +127,8 @@ def _direction(path: Tuple[str, ...]) -> str:
     if key.endswith(LOWER_SUFFIXES) or any(
             frag in key for frag in LOWER_FRAGMENTS):
         return "lower"
+    if key.startswith(FUSED_PREFIXES):
+        return "higher"
     return "info"
 
 

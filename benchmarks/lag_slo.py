@@ -15,6 +15,13 @@ simulated (stream, step) for the batched twin vs the Python object loop
 (``serving/simulation.py``) on a same-sized workload.  The acceptance bar
 is a >= 50x advantage; on CPU the measured gap is orders of magnitude.
 
+The ``timing.fused`` block records the fused multi-step path
+(``LagSimConfig.fused_steps``, the ROADMAP megakernel item): steady-state
+wall time per (stream, step) of a heuristic-family sweep at paper shapes
+(N=10, long T), per-step scan vs fused, plus the measured speedup.
+``bench_diff`` gates the ``fused_*`` throughput/speedup leaves
+higher-is-better, so the fused path cannot silently slow back down.
+
 The ``telemetry`` block of the JSON carries the flight-recorder view of
 the same run: host-side span summaries (``api.*`` / ``fleet.*``, compile
 split from dispatch) plus in-loop event counts from a telemetry-on
@@ -58,6 +65,13 @@ N_PARTITIONS = 10
 CAPACITY = 1.0
 SEED = 0
 
+#: fused-path probe: the paper-shaped steady-state workload the ROADMAP
+#: megakernel item is measured on (heuristic family only -- the policies
+#: ``fused_steps`` accelerates; long T so dispatch amortizes)
+FUSED_ITERS = 480
+FUSED_STEPS = 8
+FUSED_POLICIES = ("NF", "NFD", "FF", "FFD", "BF", "BFD", "WF", "WFD")
+
 
 def _python_loop_us_per_step(n: int, steps: int = 120) -> float:
     """Wall time per tick of the Python closed loop on one stream."""
@@ -70,6 +84,46 @@ def _python_loop_us_per_step(n: int, steps: int = 120) -> float:
     t0 = time.perf_counter()
     sim.run(seconds=steps, dt=1.0)
     return (time.perf_counter() - t0) / steps * 1e6
+
+
+def _fused_timing(n: int, seed: int, batch: int = BATCH,
+                  iters: int = FUSED_ITERS, reps: int = 3) -> Dict[str, float]:
+    """Steady state of the heuristic-family sweep, per-step scan vs the
+    fused multi-step path (``LagSimConfig.fused_steps``), on one
+    paper-shaped workload (both compiled first; mean of ``reps`` warm
+    calls).  Throughput/speedup leaves are ``fused_``-prefixed so
+    ``bench_diff`` gates them higher-is-better; the ``*_us_per_*``
+    latency leaves gate lower-is-better as usual."""
+    import dataclasses
+
+    from repro.core.scenarios import generate_scenario
+    from repro.lagsim import sweep_lag
+
+    traces = generate_scenario("bursty", jax.random.key(seed), batch,
+                               iters, n)
+    base = LagSimConfig(capacity=CAPACITY, dt=1.0, migration_steps=2)
+    steady: Dict[str, float] = {}
+    for name, cfg in (("scan", base),
+                      ("fused", dataclasses.replace(
+                          base, fused_steps=FUSED_STEPS))):
+        def once(cfg=cfg):
+            jax.block_until_ready(
+                sweep_lag(FUSED_POLICIES, traces, cfg).lag_total)
+        once()                               # trace + compile + run
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            once()
+        steady[name] = (time.perf_counter() - t0) / reps
+    denom = len(FUSED_POLICIES) * batch * iters   # policy-stream-steps
+    return {
+        "k_steps": FUSED_STEPS,
+        "n_policies": len(FUSED_POLICIES),
+        "batch": batch, "iters": iters,
+        "scan_us_per_stream_step": steady["scan"] * 1e6 / denom,
+        "fused_us_per_stream_step": steady["fused"] * 1e6 / denom,
+        "fused_steps_per_s": denom / steady["fused"],
+        "fused_speedup_vs_scan": steady["scan"] / steady["fused"],
+    }
 
 
 def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
@@ -105,6 +159,7 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
     jax_us = float(np.mean(list(seconds.values()))) * 1e6 / (
         len(policies) * batch * iters)
     py_us = _python_loop_us_per_step(n)
+    fused = _fused_timing(n=n, seed=seed)
     # flight-recorder probe: one telemetry-on lifecycle run for event
     # counts (the timed sweep above stays recorder-free)
     counts = _event_counts(policies[:2], batch, iters, n, seed)
@@ -124,6 +179,7 @@ def run(batch: int = BATCH, iters: int = ITERS, n: int = N_PARTITIONS,
                 "speedup_vs_python": (py_us / jax_us if jax_us > 0
                                       else float("inf")),
                 "sweep_seconds_per_family": seconds,
+                "fused": fused,
             },
             "telemetry": telemetry_block(event_counts=counts),
             "observability": observability_block(seed=seed),
@@ -162,6 +218,12 @@ def _rows():
     yield (f"lagsim_speedup_vs_python,"
            f"{lag['timing']['lagsim_us_per_stream_step']:.1f},"
            f"{lag['timing']['speedup_vs_python']:.1f}")
+    fused = lag["timing"]["fused"]
+    # fused_us column = the same steady step on the fused path
+    yield (f"lagsim_fused_speedup_vs_scan,"
+           f"{fused['scan_us_per_stream_step']:.3f},"
+           f"{fused['fused_speedup_vs_scan']:.2f},,"
+           f"{fused['fused_us_per_stream_step']:.3f}")
 
 
 def smoke(seed: int = SEED) -> None:
@@ -232,6 +294,11 @@ def main() -> None:
     print(f"lagsim: {t['lagsim_us_per_stream_step']:.2f} us/(stream*step)  "
           f"python loop: {t['python_us_per_step']:.1f} us/step  "
           f"speedup: {t['speedup_vs_python']:.0f}x")
+    f = t["fused"]
+    print(f"fused (K={f['k_steps']}, heuristics, T={f['iters']}): "
+          f"{f['scan_us_per_stream_step']:.3f} -> "
+          f"{f['fused_us_per_stream_step']:.3f} us/(stream*step)  "
+          f"speedup: {f['fused_speedup_vs_scan']:.2f}x")
 
 
 if __name__ == "__main__":

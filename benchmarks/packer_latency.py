@@ -25,10 +25,17 @@ rows, a no-op ``lax.scan`` of the same (B, T) geometry for sweep rows).
 That column is the pinned before-number for the ROADMAP megakernel item:
 it is the floor a fused kernel cannot beat without touching dispatch.
 
+The closed-loop twin row (``lagsim_*_us_per_iter``) adds the after-number
+in the ``fused_us`` column: the same steady sweep iteration on the fused
+multi-step path (``LagSimConfig.fused_steps``), which advances K steps
+per dispatch and so amortizes exactly the overhead the ``dispatch_us``
+column isolates.
+
 Run:  PYTHONPATH=src:. python benchmarks/run.py      (packer_latency_* rows)
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, Optional, Tuple
 
@@ -43,8 +50,8 @@ from repro.registry import packer_for
 
 from benchmarks.sections import section
 
-#: (first_us, steady_us, dispatch_us | None) per row
-Row = Tuple[float, float, Optional[float]]
+#: (first_us, steady_us, dispatch_us | None[, fused_us]) per row
+Row = Tuple[float, ...]
 
 
 def _time(fn, reps=5) -> Tuple[float, float]:
@@ -139,14 +146,35 @@ def run(sizes=(50, 200, 500)) -> Dict[str, Row]:
             reps=3)
         out[f"pallas_select_{strat}_b{b}xn{ninst}_us"] = (
             first, steady, max(0.0, steady - noop_sel))
+
+    # closed-loop twin: per-step scan vs the fused multi-step path
+    # (fused_us column) on a fused-friendly shape (N <= 14)
+    from repro.lagsim import LagSimConfig, sweep_lag
+
+    b2, t2, n2 = 2, 240, 10
+    tw = generate_scenario("bursty", jax.random.key(1), b2, t2, n2)
+    cfg = LagSimConfig(capacity=1.0, dt=1.0, migration_steps=2)
+    first, us = _time(lambda: jax.block_until_ready(
+        sweep_lag(("BFD",), tw, cfg).lag_total), reps=3)
+    _, us_fused = _time(lambda: jax.block_until_ready(
+        sweep_lag(("BFD",), tw,
+                  dataclasses.replace(cfg, fused_steps=8)).lag_total),
+        reps=3)
+    out[f"lagsim_BFD_b{b2}xt{t2}_us_per_iter"] = (
+        first / (b2 * t2), us / (b2 * t2), None, us_fused / (b2 * t2))
     return out
 
 
 @section("packer_latency", prefixes=("packer_latency_",))
 def _rows():
     # us_per_call = steady state; derived = first call (compile+run);
-    # dispatch_us = steady minus the no-op baseline (empty for py refs)
-    for name, (first_us, steady_us, dispatch_us) in run().items():
+    # dispatch_us = steady minus the no-op baseline (empty for py refs);
+    # fused_us = the same steady work on the fused multi-step path
+    for name, row in run().items():
+        first_us, steady_us, dispatch_us = row[:3]
         tail = "" if dispatch_us is None else f"{dispatch_us:.1f}"
-        yield (f"packer_latency_{name},{steady_us:.1f},{first_us:.1f},"
-               f"{tail}")
+        line = (f"packer_latency_{name},{steady_us:.1f},{first_us:.1f},"
+                f"{tail}")
+        if len(row) > 3:
+            line += f",{row[3]:.2f}"
+        yield line

@@ -4,6 +4,11 @@ Reads dryrun_results.jsonl and renders, per (arch x shape x mesh):
 the three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS,
 and HBM fit.  Pure post-processing -- no device work.
 
+Also emits the analytic fused-loop roofline (``roofline_fused_*`` rows):
+HBM bytes moved vs arithmetic per K-block of ``kernels/loop_fused.py``
+at the paper shape (N = 10), with the lag/assignment/downtime carry
+resident in VMEM -- see :func:`fused_loop_model`.
+
 Run:  PYTHONPATH=src:. python benchmarks/run.py      (roofline_* rows)
 """
 from __future__ import annotations
@@ -105,6 +110,35 @@ def run(path: str = DEFAULT_PATH) -> Dict[str, float]:
     return out
 
 
+def fused_loop_model(k: int = 8, n: int = 10) -> Dict[str, float]:
+    """Analytic roofline of one ``kernels/loop_fused.py`` K-block: HBM
+    bytes moved vs arithmetic per (stream, K-block) at the paper shape.
+
+    Per block the kernel streams the ``[K, N]`` rate slab in, writes five
+    ``[K]`` per-step outputs plus the ``[K, N]`` assignment slab, and
+    keeps the whole carry (lag f32[N], prev/down i32[N]) in VMEM scratch
+    across blocks -- zero HBM traffic for state, which is what the fused
+    path buys over the per-step scan.  Arithmetic per step: the pairwise
+    decreasing rank (~3 N^2 lane ops), the M-slot packing loop (~8 N M),
+    the bitmask sticky naming (~12 N int ops) and the one-hot drain
+    (~4 N M + 2 M), with M = 2 N + 1 name slots.
+    """
+    m = 2 * n + 1
+    bytes_per_block = 4.0 * (k * n          # rate slab in
+                             + 5 * k        # five per-step outputs
+                             + k * n)       # assignment slab out
+    ops_per_step = 3 * n * n + 12 * n * m + 12 * n + 2 * m
+    flops_per_block = float(k * ops_per_step)
+    return {
+        "k_steps": float(k),
+        "n_partitions": float(n),
+        "hbm_bytes_per_block": bytes_per_block,
+        "flops_per_block": flops_per_block,
+        "flops_per_byte": flops_per_block / bytes_per_block,
+        "vmem_carry_bytes": 3.0 * 4 * n,
+    }
+
+
 from benchmarks.sections import section  # noqa: E402
 
 
@@ -112,6 +146,8 @@ from benchmarks.sections import section  # noqa: E402
 def _rows():
     for name, val in run().items():
         yield f"roofline_{name},0,{val:.4f}"
+    for name, val in fused_loop_model().items():
+        yield f"roofline_fused_{name},0,{val:.4f}"
 
 
 if __name__ == "__main__":

@@ -23,9 +23,11 @@ import os
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
-#: ``dispatch_us`` (dispatch-only steady time, see ``packer_latency``) is
-#: optional -- three-column rows are padded with an empty fourth field
-HEADER = "name,us_per_call,derived,dispatch_us"
+#: ``dispatch_us`` (dispatch-only steady time, see ``packer_latency``)
+#: and ``fused_us`` (steady time of the same work on the fused
+#: multi-step path, see the lag-twin rows) are optional -- shorter rows
+#: are padded with empty trailing fields
+HEADER = "name,us_per_call,derived,dispatch_us,fused_us"
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 

@@ -79,6 +79,8 @@ __all__ = [
     "FAMILIES",
     "FleetConfig",
     "FleetRunner",
+    "FUSED_MAX_PARTITIONS",
+    "FusedPathError",
     "get_spec",
     "Incident",
     "list_policies",
@@ -118,7 +120,8 @@ __all__ = [
 #: fleet re-exports resolve lazily (keeps ``import repro.api`` jax-free)
 _FLEET_EXPORTS = ("FleetRunner", "FleetConfig")
 #: lagsim re-exports resolve lazily for the same reason
-_LAGSIM_EXPORTS = ("ControlPlaneConfig",)
+_LAGSIM_EXPORTS = ("ControlPlaneConfig", "FUSED_MAX_PARTITIONS",
+                   "FusedPathError")
 #: in-loop recorder / sketch / alert / exporter re-exports resolve
 #: lazily too (the exporters are jax-free but live behind
 #: ``repro.telemetry``'s lazy map); the span half of telemetry is
@@ -415,7 +418,16 @@ def simulate(traces, *, policies: Optional[Sequence[str]] = None,
     whole-run aggregates (``.sketches``), and
     ``alerts=AlertConfig(rules=...)`` evaluates SLO burn-rate /
     lag-growth / storm / thrash rules in-loop (``.incidents``).  Export
-    any of them with ``prometheus_exposition`` / ``otlp_metrics_json``."""
+    any of them with ``prometheus_exposition`` / ``otlp_metrics_json``.
+
+    ``fused_steps=K`` (a config override) routes heuristic-family
+    policies through the fused K-step engine (``repro.lagsim.fused``):
+    bit-identical trajectories, sketch summaries and incidents, at a
+    fraction of the unfused scan's dispatch cost.  Optimizer policies
+    and control-plane-wrapped configs raise ``FusedPathError``;
+    reactive baselines, ``n > FUSED_MAX_PARTITIONS`` and per-step frame
+    recording (an O(T) surface the fused engine does not emit) fall
+    back to the unfused scan per policy."""
     import dataclasses as _dc
 
     from repro.lagsim import ControlPlaneConfig as _CPC

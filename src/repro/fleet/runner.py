@@ -570,6 +570,12 @@ class FleetRunner:
         ``cfg.control_plane`` (scaler friction emulation) rides inside
         the hashable config, so it participates in bucket/compile-cache
         keys automatically and bucketing stays behavior-preserving.
+        ``cfg.fused_steps`` / ``cfg.fused_kernel`` (the multi-step fused
+        path, ``repro.lagsim.fused``) ride the same resolved config, so
+        fused and unfused runs never share an executable and a padded
+        fused run equals the direct one bit-for-bit; an N-padded bucket
+        above ``FUSED_MAX_PARTITIONS`` falls back to the per-step scan
+        inside the same program, which is equally exact.
         With ``cfg.telemetry`` on, the result carries one recorder frame
         per scenario (``FleetLagResult.telemetry``), sliced to true
         length like every other trajectory.  Streaming sketches/alerts

@@ -73,6 +73,18 @@ def lag_update_reference(lag, produced, assign, readable, cap, *, m: int,
     return out
 
 
+def _drain_math(avail, assign, live, cap, *, n: int, m: int):
+    """The fused segment-sum + proportional drain on one stream's (N,)
+    values -- shared by the batched and the rank-1 kernel entries."""
+    live = live & (assign >= 0)
+    names = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    onehot = (assign[:, None] == names) & live[:, None]    # (N, M)
+    per_bin = jnp.sum(jnp.where(onehot, avail[:, None], 0.0), axis=0)  # (M,)
+    ratio = jnp.minimum(1.0, cap / jnp.maximum(per_bin, _TINY))
+    frac = jnp.sum(jnp.where(onehot, ratio[None, :], 0.0), axis=1)     # (N,)
+    return jnp.maximum(avail * (1.0 - frac), 0.0)
+
+
 def _lag_update_kernel(lag_ref, prod_ref, assign_ref, readable_ref, cap_ref,
                        *rest, n: int, m: int, masked: bool):
     """One stream: fused produce + one-hot segment drain over (N, M)."""
@@ -85,17 +97,29 @@ def _lag_update_kernel(lag_ref, prod_ref, assign_ref, readable_ref, cap_ref,
         (out_ref,) = rest
         avail = lag_ref[0] + prod_ref[0]                       # (N,)
         live = readable_ref[0] > 0
-    assign = assign_ref[0]
-    live = live & (assign >= 0)
-    names = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
-    onehot = (assign[:, None] == names) & live[:, None]    # (N, M)
-    per_bin = jnp.sum(jnp.where(onehot, avail[:, None], 0.0), axis=0)  # (M,)
-    ratio = jnp.minimum(1.0, cap_ref[0] / jnp.maximum(per_bin, _TINY))
-    frac = jnp.sum(jnp.where(onehot, ratio[None, :], 0.0), axis=1)     # (N,)
-    out = jnp.maximum(avail * (1.0 - frac), 0.0)
+    out = _drain_math(avail, assign_ref[0], live, cap_ref[0], n=n, m=m)
     if masked:
         out = jnp.where(act, out, 0.0)
     out_ref[0] = out
+
+
+def _lag_update_kernel_1d(lag_ref, prod_ref, assign_ref, readable_ref,
+                          cap_ref, *rest, n: int, m: int, masked: bool):
+    """Rank-1 twin of ``_lag_update_kernel``: refs are the (N,)/(M,)
+    arrays themselves, no leading stream axis to index away."""
+    if masked:
+        active_ref, out_ref = rest
+        act = active_ref[...] > 0
+        avail = lag_ref[...] + jnp.where(act, prod_ref[...], 0.0)
+        live = (readable_ref[...] > 0) & act
+    else:
+        (out_ref,) = rest
+        avail = lag_ref[...] + prod_ref[...]
+        live = readable_ref[...] > 0
+    out = _drain_math(avail, assign_ref[...], live, cap_ref[...], n=n, m=m)
+    if masked:
+        out = jnp.where(act, out, 0.0)
+    out_ref[...] = out
 
 
 def lag_update_batch(lag, produced, assign, readable, cap, *, active=None,
@@ -139,5 +163,39 @@ def lag_update_batch(lag, produced, assign, readable, cap, *, active=None,
         # fleet.compile / fleet.dispatch spans, not a per-step host span
         return call(*args)
     with _span("kernel.lag_update", batch=b, n=n, m=m,
+               interpret=bool(interpret)):
+        return call(*args)
+
+
+def lag_update_single(lag, produced, assign, readable, cap, *, active=None,
+                      interpret: bool | None = None):
+    """Rank-1 fused lag update: one stream, no batch axis.
+
+    lag, produced: f32[N]; assign: i32[N]; readable: i32[N]; cap: f32[M];
+    active: optional i32/bool[N].  Returns f32[N].  Same semantics as one
+    row of ``lag_update_batch`` (both are pinned to
+    ``lag_update_reference``), but callers with rank-1 state -- the lag
+    engine's per-step ``drain`` inside ``lax.scan`` -- skip the
+    ``lag[None]`` expand + ``[0]`` squeeze round-trip per step.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    masked = active is not None
+    n = lag.shape[0]
+    m = cap.shape[0]
+    kernel = functools.partial(_lag_update_kernel_1d, n=n, m=m, masked=masked)
+    args = [lag.astype(jnp.float32), produced.astype(jnp.float32),
+            assign.astype(jnp.int32), readable.astype(jnp.int32),
+            cap.astype(jnp.float32)]
+    if masked:
+        args.append(active.astype(jnp.int32))
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )
+    if isinstance(lag, jax.core.Tracer):
+        return call(*args)
+    with _span("kernel.lag_update", batch=1, n=n, m=m,
                interpret=bool(interpret)):
         return call(*args)

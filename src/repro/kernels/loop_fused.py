@@ -1,0 +1,315 @@
+"""Multi-step closed-loop lag megakernel: K simulated steps per launch.
+
+``kernels/lag_update.py`` fuses ONE step's produce + drain; the scan
+around it still pays a dispatch per simulated step.  This kernel hoists
+the whole loop: ``grid = (B, ceil(T / K))`` with the time dimension
+marked ``"arbitrary"`` (sequential), and each program instance advances
+``K = fused_steps`` steps of one stream while the entire carry -- the
+per-partition backlog, the previous assignment, and the migration
+downtime counters -- stays resident in VMEM scratch across grid steps.
+The ``[1, K, N]`` rate (and active-mask) slabs are streamed per grid
+step through Pallas' pipelined block fetches, so the next block's DMA
+overlaps the current block's compute (double buffering); K tunes slab
+size against pipeline depth.
+
+Each in-kernel step replays the heuristic policy families exactly:
+
+  1. traversal order: identity, or ``pack_jax``'s stable non-increasing
+     sort for Decreasing variants (pairwise rank, no sort primitive);
+  2. slot selection per item with the same select logic as
+     ``binpack_select`` (next/first/best/worst as a masked double-min);
+  3. the Sec. IV-C sticky renaming of creation slots to bin names,
+     with the name universe packed into int32 bitmasks;
+  4. migration-downtime masking (a moved partition is unreadable for
+     ``migration_steps`` steps);
+  5. the produce + proportional-drain update of ``lag_update``.
+
+The bit-exact oracle is the XLA fused engine ``repro.lagsim.fused``
+(itself pinned bit-for-bit to the unfused per-step scan), asserted in
+tests/test_fused_loop.py and the CI fused smoke.  Like the other three
+kernels, hosts without a TPU run Pallas interpreter mode automatically.
+
+The int32 name bitmask bounds the kernel to ``n <= 14`` partitions
+(``2n + 1 < 31`` bits) -- the engine falls back to the unfused scan
+above that (``repro.lagsim.fused.FUSED_MAX_PARTITIONS``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.telemetry.spans import span as _span
+
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import default_interpret as _default_interpret
+
+NEG = -1
+_TINY = 1e-30   # python literal so it is not captured as a traced const
+_STRATEGIES = ("next", "first", "best", "worst")
+
+
+def _one_step(speeds, act, lag, prev, down, *, strategy: str,
+              decreasing: bool, capacity: float, dt: float, mig: int,
+              n: int):
+    """One simulated step on one stream's ``(N,)`` state (pure jnp on
+    kernel-loaded values; see the module docstring for the phases)."""
+    m = n + 1
+    inf = jnp.float32(jnp.inf)
+    one = jnp.int32(1)
+    iota_n = lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+    iota_m = lax.broadcasted_iota(jnp.int32, (1, m), 1)[0]
+    cap = jnp.float32(capacity)
+    cap_step = jnp.float32(capacity * dt)
+
+    produced = speeds * jnp.float32(dt)
+    if act is not None:
+        produced = jnp.where(act, produced, 0.0)
+
+    # phase 1: traversal order (stable non-increasing sort as a pairwise
+    # rank: strictly-greater plus equal-with-lower-index counts)
+    if decreasing:
+        col = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        row = lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        gt = speeds[:, None] < speeds[None, :]
+        eq_lo = (speeds[:, None] == speeds[None, :]) & (col < row)
+        rank = jnp.sum((gt | eq_lo).astype(jnp.int32), axis=1)      # (n,)
+        oh = rank[:, None] == col
+        order = jnp.sum(jnp.where(oh, row, 0), axis=0)
+        sp_ord = jnp.sum(jnp.where(oh, speeds[:, None], 0.0), axis=0)
+        act_ord = (None if act is None else
+                   jnp.sum(jnp.where(oh, act[:, None].astype(jnp.int32), 0),
+                           axis=0) > 0)
+    else:
+        order = iota_n
+        sp_ord = speeds
+        act_ord = act
+
+    # phase 2: slot selection (binpack_select logic, double-min tie-break)
+    loads = jnp.full((m,), inf, jnp.float32)
+    creator = jnp.full((m,), NEG, jnp.int32)
+    slot_of = jnp.full((n,), NEG, jnp.int32)
+    k = jnp.int32(0)
+    lastload = jnp.float32(0.0)
+    for i in range(n):
+        w = sp_ord[i]
+        j = order[i]
+        d = loads + w
+        fits = d <= cap
+        if strategy == "next":
+            found = (k > 0) & (lastload + w <= cap)
+            slot = jnp.where(found, k - 1, k)
+        else:
+            if strategy == "first":
+                score = jnp.where(fits, iota_m.astype(jnp.float32), inf)
+            elif strategy == "best":
+                score = jnp.where(fits, -loads, inf)
+            else:
+                score = jnp.where(fits, loads, inf)
+            mn = jnp.min(score)
+            s_sel = jnp.min(jnp.where(score == mn, iota_m, jnp.int32(127)))
+            found = mn < inf
+            slot = jnp.where(found, s_sel, k)
+        coh = iota_m == slot
+        if act_ord is None:
+            a = None
+            upd = coh
+        else:
+            a = act_ord[i]
+            upd = coh & a
+        loads = jnp.where(upd, jnp.where(found, d, w), loads)
+        creator = jnp.where(upd & ~found, j, creator)
+        new_last = jnp.where(found & (slot == k - 1), lastload + w,
+                             jnp.where(~found, w, lastload))
+        if a is None:
+            lastload = new_last
+            k = k + (~found).astype(jnp.int32)
+            slot_of = jnp.where(iota_n == j, slot, slot_of)
+        else:
+            lastload = jnp.where(a, new_last, lastload)
+            k = k + (a & ~found).astype(jnp.int32)
+            slot_of = jnp.where((iota_n == j) & a, slot, slot_of)
+
+    # phase 3: sticky naming over creation slots (int32 name bitmasks)
+    ohc = creator[:n, None] == iota_n[None, :]
+    pv = jnp.sum(jnp.where(ohc, prev[None, :], 0), axis=1)
+    p_all = jnp.where(creator[:n] >= 0, pv, NEG)
+    claimed = jnp.int32(0)
+    seen = jnp.int32(0)
+    q = jnp.int32(0)
+    new_assign = jnp.full((n,), NEG, jnp.int32)
+    for s in range(n):
+        v = p_all[s]
+        vbit = one << jnp.maximum(v, 0)
+        live = jnp.int32(s) < k
+        cand = (v >= 0) & ((seen & vbit) == 0)
+        seen = jnp.where(v >= 0, seen | vbit, seen)
+        win = cand & (v >= q) & live
+        fall = live & ~win
+        nm = jnp.where(win, v, q)
+        new_assign = jnp.where((slot_of == s) & live, nm, new_assign)
+        claimed = jnp.where(win, claimed | vbit, claimed)
+        adv = fall | (win & (v == q))
+        mask = claimed | ((one << (q + 1)) - 1)
+        low = (~mask) & (mask + 1)
+        q = jnp.where(adv, lax.population_count(low - 1), q)
+
+    # phases 4-5: downtime masking + produce/drain (lag_update, in slot
+    # space: slot <-> name is a bijection per step so per-bin sums match)
+    moved = (prev >= 0) & (new_assign >= 0) & (new_assign != prev)
+    new_down = jnp.where(moved, jnp.int32(mig), jnp.maximum(down - 1, 0))
+    readable = (new_down == 0) & (new_assign >= 0)
+    avail = lag + produced
+    live_p = readable & (slot_of >= 0)
+    onehot = (slot_of[:, None] == iota_m[None, :]) & live_p[:, None]
+    per_bin = jnp.sum(jnp.where(onehot, avail[:, None], 0.0), axis=0)
+    ratio = jnp.minimum(1.0, cap_step / jnp.maximum(per_bin, _TINY))
+    frac = jnp.sum(jnp.where(onehot, ratio[None, :], 0.0), axis=1)
+    new_lag = jnp.maximum(avail * (1.0 - frac), 0.0)
+    if act is not None:
+        new_lag = jnp.where(act, new_lag, 0.0)
+        unread = (new_down > 0) & act
+    else:
+        unread = new_down > 0
+    return new_lag, new_assign, new_down, k, moved, unread
+
+
+def _loop_fused_kernel(*refs, k_blk: int, n: int, masked: bool,
+                       strategy: str, decreasing: bool, capacity: float,
+                       dt: float, mig: int):
+    """Advance ``k_blk`` steps of one stream; carry lives in VMEM scratch
+    across the sequential (``"arbitrary"``) time-block grid dimension."""
+    if masked:
+        (rates_ref, active_ref, lag0_ref, tot_ref, mx_ref, cons_ref,
+         migs_ref, unread_ref, asg_ref, lag_s, prev_s, down_s) = refs
+    else:
+        (rates_ref, lag0_ref, tot_ref, mx_ref, cons_ref, migs_ref,
+         unread_ref, asg_ref, lag_s, prev_s, down_s) = refs
+        active_ref = None
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        lag_s[...] = lag0_ref[0]
+        prev_s[...] = jnp.full((n,), NEG, jnp.int32)
+        down_s[...] = jnp.zeros((n,), jnp.int32)
+
+    lag = lag_s[...]
+    prev = prev_s[...]
+    down = down_s[...]
+    for kk in range(k_blk):
+        speeds = rates_ref[0, kk]
+        act = None if active_ref is None else active_ref[0, kk] > 0
+        lag, prev, down, k, moved, unread = _one_step(
+            speeds, act, lag, prev, down, strategy=strategy,
+            decreasing=decreasing, capacity=capacity, dt=dt, mig=mig, n=n)
+        tot_ref[0, kk] = jnp.sum(lag)
+        mx_ref[0, kk] = jnp.max(lag)
+        cons_ref[0, kk] = k
+        migs_ref[0, kk] = jnp.sum(moved.astype(jnp.int32))
+        unread_ref[0, kk] = jnp.sum(unread.astype(jnp.int32))
+        asg_ref[0, kk] = prev
+    lag_s[...] = lag
+    prev_s[...] = prev
+    down_s[...] = down
+
+
+def loop_fused_batch(rates, *, strategy: str, decreasing: bool,
+                     capacity: float = 1.0, dt: float = 1.0,
+                     migration_steps: int = 2, fused_steps: int = 8,
+                     active=None, initial_lag=None,
+                     interpret: bool | None = None):
+    """Run a heuristic policy's whole closed loop in one kernel launch.
+
+    rates: f32[B, T, N] per-partition production rates; active: optional
+    bool/i32[B, T, N] partition-existence mask; initial_lag: optional
+    f32[B, N] backlog seed (zeros by default).  ``strategy`` in
+    ``("next", "first", "best", "worst")`` with ``decreasing`` selects
+    the heuristic family member (NF..WFD).  Returns
+    ``(lag_total f32[B, T], lag_max f32[B, T], consumers i32[B, T],
+    migrations i32[B, T], unreadable i32[B, T], assigns i32[B, T, N])``.
+
+    ``fused_steps`` (K) is the block size: steps advanced per grid step
+    while the carry stays in VMEM.  T is padded up to a multiple of K
+    internally (padded steps never feed back into real ones: time is
+    causal) and outputs are sliced back to T.
+    """
+    if strategy not in _STRATEGIES:
+        raise ValueError(
+            f"strategy must be one of {_STRATEGIES}, got {strategy!r}")
+    b, t, n = rates.shape
+    if n > 14:
+        raise ValueError(
+            f"loop_fused_batch packs bin names into int32 bitmasks and "
+            f"supports n <= 14 partitions; got n = {n} (the lag engine "
+            f"falls back to the unfused scan above the limit)")
+    k_blk = int(fused_steps)
+    if k_blk <= 0:
+        raise ValueError(f"fused_steps must be >= 1, got {fused_steps}")
+    if interpret is None:
+        interpret = _default_interpret()
+    masked = active is not None
+    t_blocks = -(-t // k_blk)
+    t_pad = t_blocks * k_blk
+    rates = jnp.asarray(rates, jnp.float32)
+    if t_pad != t:
+        rates = jnp.pad(rates, ((0, 0), (0, t_pad - t), (0, 0)))
+    if initial_lag is None:
+        initial_lag = jnp.zeros((b, n), jnp.float32)
+    else:
+        initial_lag = jnp.asarray(initial_lag, jnp.float32)
+
+    kernel = functools.partial(
+        _loop_fused_kernel, k_blk=k_blk, n=n, masked=masked,
+        strategy=strategy, decreasing=bool(decreasing),
+        capacity=float(capacity), dt=float(dt), mig=int(migration_steps))
+    slab = pl.BlockSpec((1, k_blk, n), lambda i, j: (i, j, 0))
+    in_specs = [slab]
+    args = [rates]
+    if masked:
+        act = jnp.asarray(active).astype(jnp.int32)
+        if t_pad != t:
+            act = jnp.pad(act, ((0, 0), (0, t_pad - t), (0, 0)))
+        in_specs.append(slab)
+        args.append(act)
+    in_specs.append(pl.BlockSpec((1, n), lambda i, j: (i, 0)))
+    args.append(initial_lag)
+    step_spec = pl.BlockSpec((1, k_blk), lambda i, j: (i, j))
+    call = pl.pallas_call(
+        kernel,
+        grid=(b, t_blocks),
+        in_specs=in_specs,
+        out_specs=[step_spec, step_spec, step_spec, step_spec, step_spec,
+                   slab],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, t_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, t_pad), jnp.int32),
+            jax.ShapeDtypeStruct((b, t_pad), jnp.int32),
+            jax.ShapeDtypeStruct((b, t_pad), jnp.int32),
+            jax.ShapeDtypeStruct((b, t_pad, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n,), jnp.float32),   # lag carry
+            pltpu.VMEM((n,), jnp.int32),     # previous assignment
+            pltpu.VMEM((n,), jnp.int32),     # migration downtime
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )
+
+    def run(*a):
+        outs = call(*a)
+        if t_pad != t:
+            outs = [o[:, :t] for o in outs]
+        return tuple(outs)
+
+    if isinstance(rates, jax.core.Tracer):
+        return run(*args)
+    with _span("kernel.loop_fused", batch=b, t=t, n=n, k=k_blk,
+               interpret=bool(interpret)):
+        return run(*args)

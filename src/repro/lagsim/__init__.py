@@ -15,6 +15,7 @@ from .engine import (
     simulate_lag,
     sweep_lag,
 )
+from .fused import FUSED_MAX_PARTITIONS, FusedPathError, fused_mode
 from .metrics import SLO_METRIC_NAMES, longest_excursion, slo_summary, summarize_sweep
 from .policies import (
     OPTIMIZER_POLICY_NAMES,
@@ -34,6 +35,8 @@ def __getattr__(name: str):
 __all__ = [
     "ControlPlaneConfig",
     "ControlPlaneState",
+    "FUSED_MAX_PARTITIONS",
+    "FusedPathError",
     "LagSimConfig",
     "LagSweepResult",
     "LagTrace",
@@ -41,6 +44,7 @@ __all__ = [
     "PACKING_POLICY_NAMES",
     "REACTIVE_BASELINE_NAMES",
     "SLO_METRIC_NAMES",
+    "fused_mode",
     "longest_excursion",
     "simulate_lag",
     "slo_summary",

@@ -37,9 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels.lag_update import lag_update_batch, lag_update_reference
+from repro.kernels.lag_update import (lag_update_reference,
+                                      lag_update_single)
 from repro.lagsim.controlplane import (ControlPlaneConfig, ControlPlaneState,
                                        wrap_policy)
+from repro.lagsim.fused import fused_mode, simulate_fused, sweep_fused
 from repro.registry import make_policy
 from repro.telemetry.alerts import AlertState, alert_init, alert_step
 from repro.telemetry.record import (CounterState, TelemetryConfig,
@@ -70,6 +72,8 @@ class LagSimConfig:
     scale_down_patience: int = 3             # stabilization window (steps)
     slo_lag: Optional[float] = None          # metrics threshold (bytes)
     use_kernel: bool = False                 # Pallas fused update in the scan
+    fused_steps: int = 0              # K > 0: fused multi-step path (fused.py)
+    fused_kernel: bool = False        # fused path launches kernels/loop_fused
     control_plane: Optional[ControlPlaneConfig] = None  # scaler friction
     telemetry: Optional[TelemetryConfig] = None  # in-loop flight recorder
 
@@ -100,6 +104,14 @@ class LagSimConfig:
                 f"telemetry must be a TelemetryConfig (or None), got "
                 f"{type(self.telemetry).__name__}; build one via "
                 f"repro.api.TelemetryConfig(...)")
+        if int(self.fused_steps) < 0:
+            raise ValueError(
+                f"fused_steps must be >= 0 (0 disables the fused path), "
+                f"got {self.fused_steps}")
+        if self.fused_kernel and not self.fused_steps:
+            raise ValueError(
+                "fused_kernel=True requires fused_steps > 0: the megakernel "
+                "block size is fused_steps (steps advanced per launch)")
         tele = self.telemetry
         if (tele is not None and tele.sketch is not None
                 and tele.sketch.hist_max is None):
@@ -209,6 +221,11 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
     to the direct run's.
     """
     n = trace.shape[1]
+    if cfg.fused_steps and fused_mode(policy, cfg, n) == "fused":
+        # heuristic family under fused_steps: the multi-step fused path
+        # (repro.lagsim.fused) replaces the per-step scan, bit-exactly
+        return simulate_fused(trace, initial_lag, policy, cfg, active=active,
+                              record_assign=record_assign, valid=valid)
     m = 2 * n + 2                       # packer bin-name universe
     cfg = cfg.resolve(n)
     cap_step = jnp.float32(cfg.capacity * cfg.dt)
@@ -243,12 +260,11 @@ def _simulate(trace: jax.Array, initial_lag: jax.Array, policy: str,
 
     def drain(lag, produced, assign, readable, act_t):
         if cfg.use_kernel:
-            out = lag_update_batch(
-                lag[None], produced[None], assign[None],
-                readable.astype(jnp.int32)[None],
-                jnp.full((1, m), cap_step, jnp.float32),
-                active=None if act_t is None else act_t[None])
-            return out[0]
+            # rank-1 kernel entry: no lag[None] expand + [0] squeeze pair
+            # in the jaxpr of every scanned step
+            return lag_update_single(
+                lag, produced, assign, readable.astype(jnp.int32),
+                jnp.full((m,), cap_step, jnp.float32), active=act_t)
         return lag_update_reference(lag, produced, assign, readable,
                                     cap_step, m=m, active=act_t)
 
@@ -426,6 +442,16 @@ def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,
     bounded per-bucket cache.  ``valid`` (bool[B, T], fleet-internal)
     gates sketch/alert updates on padded bucket steps."""
     zero0 = jnp.zeros(traces.shape[2], jnp.float32)
+    fused_fields = {}
+    if cfg.fused_steps:
+        # route the heuristic family through the fused multi-step path as
+        # ONE family-batched run; everything else keeps the per-step scan
+        # (fused_mode raises a named error for fused-incompatible configs)
+        modes = {p: fused_mode(p, cfg, traces.shape[2]) for p in policies}
+        group = tuple(p for p in policies if modes[p] == "fused")
+        if group:
+            fused_fields = sweep_fused(group, traces, cfg, active=active,
+                                       valid=valid)
 
     def run_policy(p):
         if active is None and valid is None:
@@ -442,7 +468,8 @@ def _sweep_impl(policies: Tuple[str, ...], traces: jax.Array,
             lambda tr, ac, va: _simulate(tr, zero0, p, cfg, ac, valid=va))(
                 traces, active, valid)
 
-    per_policy = [run_policy(p) for p in policies]
+    per_policy = [LagTrace(**fused_fields[p]) if p in fused_fields
+                  else run_policy(p) for p in policies]
     for attr, what in (("telemetry", "telemetry channels"),
                        ("sketch", "sketch channels")):
         objs = [getattr(tr, attr) for tr in per_policy]
